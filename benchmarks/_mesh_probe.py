@@ -1,0 +1,60 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Subprocess helper: compile merge schedules / train steps on the
+production meshes and print collective byte accounting as JSON.
+(Separate process because jax locks the device count at first init —
+benchmarks.run itself stays on the single real CPU device.)
+"""
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core import merge as merge_lib              # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo       # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+
+def merge_bytes(schedule: str, payload_mb: float, n_pod: int = 2):
+    """DCN/ICI bytes of one merge of a dense tower of the given size."""
+    mesh = make_production_mesh(multi_pod=True)
+    n = int(payload_mb * 1e6 / 4)
+    x = jax.ShapeDtypeStruct((n_pod, n), jnp.float32)
+    sh = NamedSharding(mesh, P("pod", None))
+
+    if schedule == "flat":
+        fn = lambda v: merge_lib.flat_mean({"w": v})
+    elif schedule == "two_phase":
+        fn = lambda v: merge_lib.two_phase_mean({"w": v}, mesh)
+    elif schedule == "bf16":
+        fn = lambda v: merge_lib.two_phase_mean({"w": v}, mesh, payload_dtype=jnp.bfloat16)
+    elif schedule == "int8_ef":
+        fn = lambda v: merge_lib.int8_ef_mean(
+            {"w": v}, {"w": jnp.zeros((n_pod, n), jnp.float32)}, mesh)[0]
+    else:
+        raise ValueError(schedule)
+    compiled = jax.jit(fn, in_shardings=(sh,)).lower(x).compile()
+    res = analyze_hlo(compiled.as_text(), devices_per_pod=256)
+    c = res["collectives"]
+    return {"schedule": schedule, "payload_mb": payload_mb,
+            "dcn_bytes_per_device": c.dcn_bytes,
+            "ici_bytes_per_device": c.ici_bytes,
+            "total_bytes_per_device": c.total_bytes}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--probe", required=True, choices=["merge"])
+    ap.add_argument("--schedule", default="flat")
+    ap.add_argument("--payload-mb", type=float, default=64.0)
+    args = ap.parse_args()
+    if args.probe == "merge":
+        print(json.dumps(merge_bytes(args.schedule, args.payload_mb)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 6 (+7): two-phase communication vs the naive route.
+
+The paper's two-phase GPU communication keeps bulk traffic on NVLink; our
+TPU adaptation keeps it on in-pod ICI.  This benchmark compiles one k-step
+merge of a 64 MB dense tower on the 512-chip multi-pod mesh under each
+schedule and reports the slow-fabric (DCN) bytes per device — the quantity
+the paper's Fig. 6/7 measure in time.  Runs in a subprocess (512 fake
+devices).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+
+def run(payload_mb: float = 64.0):
+    results = []
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    base = None
+    for schedule in ["flat", "two_phase", "bf16", "int8_ef"]:
+        t0 = time.perf_counter()
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks._mesh_probe", "--probe", "merge",
+             "--schedule", schedule, "--payload-mb", str(payload_mb)],
+            capture_output=True, text=True, env=env, timeout=900,
+        )
+        if out.returncode != 0:
+            results.append((f"fig6_merge_{schedule}", 0.0, f"ERROR:{out.stderr[-200:]}"))
+            continue
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        us = (time.perf_counter() - t0) * 1e6
+        dcn = rec["dcn_bytes_per_device"]
+        if schedule == "flat":
+            base = dcn
+        ratio = f",dcn_vs_flat={dcn / base:.4f}" if base else ""
+        results.append((
+            f"fig6_merge_{schedule}", us,
+            f"dcn_MB_per_dev={dcn / 1e6:.3f},ici_MB_per_dev="
+            f"{rec['ici_bytes_per_device'] / 1e6:.3f}{ratio}",
+        ))
+    return results

@@ -1,0 +1,123 @@
+"""Roofline derivation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from ``experiments/dryrun``:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        (197e12 bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw             (819e9 B/s)
+    collective term = ICI bytes / ICI_bw + DCN bytes / DCN_bw   (50e9 / 2.5e9)
+
+FLOPs and bytes come from ``compiled.cost_analysis()`` of the partitioned
+(per-device) module; collective bytes from the HLO wire model in
+launch/hlo_analysis.py.  Train cells combine their two executables as
+``local*(k-1)/k + merge/k`` (the k-step amortization).
+
+Caveats (documented in EXPERIMENTS.md): the CPU backend promotes bf16 dots
+to f32, so 'bytes accessed' is an upper bound (~2x) for bf16-dominated
+models; DCN bandwidth is an assumption (the spec sheet gives ICI only).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 2.5e9   # assumed per-chip inter-pod bandwidth
+
+
+def model_flops_note(rec: Dict) -> float:
+    steps = rec.get("steps", {})
+    for s in steps.values():
+        return s.get("model_flops", 0.0)
+    return 0.0
+
+
+def cell_terms(rec: Dict) -> Optional[Dict]:
+    steps = rec.get("steps", {})
+    if not steps:
+        return None
+    n_dev = rec.get("n_devices", 256)
+    agg = {"compute_s": 0.0, "memory_s": 0.0, "ici_s": 0.0, "dcn_s": 0.0,
+           "flops_dev": 0.0, "bytes_dev": 0.0, "coll_ici": 0.0, "coll_dcn": 0.0,
+           "model_flops": 0.0}
+    for s in steps.values():
+        w = s.get("weight", 1.0)
+        # loop-aware analyzer numbers (fall back to XLA cost_analysis)
+        hlo = s.get("hlo", {})
+        flops = hlo.get("flops") or s.get("cost", {}).get("flops", 0.0) or 0.0
+        bytes_acc = (hlo.get("bytes_accessed")
+                     or s.get("cost", {}).get("bytes accessed", 0.0) or 0.0)
+        ici = s.get("collectives", {}).get("ici_bytes_per_device", 0)
+        dcn = s.get("collectives", {}).get("dcn_bytes_per_device", 0)
+        agg["flops_dev"] += w * flops
+        agg["bytes_dev"] += w * bytes_acc
+        agg["coll_ici"] += w * ici
+        agg["coll_dcn"] += w * dcn
+        agg["model_flops"] += w * s.get("model_flops", 0.0)
+    agg["compute_s"] = agg["flops_dev"] / PEAK_FLOPS
+    agg["memory_s"] = agg["bytes_dev"] / HBM_BW
+    agg["ici_s"] = agg["coll_ici"] / ICI_BW
+    agg["dcn_s"] = agg["coll_dcn"] / DCN_BW
+    agg["collective_s"] = agg["ici_s"] + agg["dcn_s"]
+    terms = {"compute": agg["compute_s"], "memory": agg["memory_s"],
+             "collective": agg["collective_s"]}
+    agg["dominant"] = max(terms, key=terms.get)
+    bound = max(terms.values())
+    agg["bound_s"] = bound
+    # useful fraction: model FLOPs per device vs what the bottleneck allows
+    agg["useful_flops_dev"] = agg["model_flops"] / n_dev
+    agg["flops_ratio"] = (
+        agg["useful_flops_dev"] / agg["flops_dev"] if agg["flops_dev"] else 0.0
+    )
+    agg["roofline_fraction"] = (
+        (agg["useful_flops_dev"] / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    )
+    return agg
+
+
+def load_records(base: str = "experiments/dryrun") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(base, "*", "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_path"] = path
+        out.append(rec)
+    return out
+
+
+def table(base: str = "experiments/dryrun", mesh: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for rec in load_records(base):
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        t = cell_terms(rec)
+        row = {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+               "kind": rec.get("kind"), "skip": rec.get("skip")}
+        if t:
+            row.update(t)
+        rows.append(row)
+    return rows
+
+
+def print_table(base: str = "experiments/dryrun", mesh: str = "single"):
+    hdr = ("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+           "model/HLO_flops,roofline_fraction")
+    print(hdr)
+    for r in sorted(table(base, mesh), key=lambda r: (r["arch"], r["shape"])):
+        if r.get("skip"):
+            print(f"{r['arch']},{r['shape']},{r['mesh']},SKIP({r['skip'][:40]})")
+            continue
+        if "compute_s" not in r:
+            continue
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['compute_s']:.3e},{r['memory_s']:.3e},{r['collective_s']:.3e},"
+              f"{r['dominant']},{r['flops_ratio']:.3f},{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    import sys
+    print_table(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

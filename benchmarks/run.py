@@ -1,0 +1,72 @@
+"""Benchmark harness: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table
+(§Roofline) is appended when dry-run artifacts exist in experiments/dryrun.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter training runs (CI-speed)")
+    args = ap.parse_args()
+
+    from benchmarks import (  # noqa: E402
+        fig5_pipeline,
+        fig6_twophase,
+        fig9_kstep_auc,
+        fig10_comm_ratio,
+        table1_hashing,
+    )
+
+    steps = 60 if args.quick else 120
+    benches = {
+        "table1": lambda: table1_hashing.run(steps=steps),
+        "fig5": lambda: fig5_pipeline.run(),
+        "fig6": lambda: fig6_twophase.run(),
+        "fig9": lambda: fig9_kstep_auc.run(steps=steps),
+        "fig10": lambda: fig10_comm_ratio.run(),
+    }
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in fn():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+
+    # §Roofline table from dry-run artifacts (if present)
+    try:
+        import os
+        from benchmarks import roofline
+        if os.path.isdir("experiments/dryrun"):
+            for mesh in ("single", "multi"):
+                print(f"# roofline ({mesh}-pod)")
+                roofline.print_table(mesh=mesh)
+    except Exception:
+        traceback.print_exc()
+        failed.append("roofline")
+
+    if failed:
+        print(f"# FAILED: {failed}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

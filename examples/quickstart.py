@@ -1,0 +1,67 @@
+"""Quickstart: train the paper's CTR model with k-step Adam in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Simulates 4 workers ("pods") with k=10 merging on one CPU device — the
+podded representation runs the exact Algorithm-2 semantics anywhere — and
+reports online (predict-then-train) AUC, which should clear 0.75 on the
+teacher-labelled synthetic click stream.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kstep import KStepConfig
+from repro.core.sparse_optim import SparseAdagradConfig
+from repro.data import synthetic as S
+from repro.models import recsys as R
+from repro.runtime.metrics import StreamingAUC
+from repro.runtime.trainer import HybridTrainer, TrainerConfig
+
+
+def main(steps: int = 150, n_pod: int = 4, k: int = 10):
+    cfg = R.CTRConfig(rows=20_000, n_fields=8, nnz_per_instance=20, mlp=(64, 1))
+    rng = jax.random.key(0)
+    dense = R.ctr_init_dense(rng, cfg)
+    tables = {"sparse": jax.random.normal(rng, (cfg.rows, cfg.embed_dim)) * 0.05}
+
+    def embed(workings, invs, bp):
+        B, nnz = bp["ids"].shape
+        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
+               + bp["field_ids"]).reshape(-1)
+        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
+            * bp["mask"].reshape(-1)[:, None]
+        bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
+        return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
+
+    def loss(dp, emb, bp, predict=False):
+        logits = R.ctr_forward_from_emb(dp, emb, bp, cfg)
+        if predict:
+            return jax.nn.sigmoid(logits)
+        return R.pointwise_loss(logits, bp["label"])
+
+    tr = HybridTrainer(
+        dense, tables, embed, loss, {"sparse": "ids"}, capacity=16384,
+        cfg=TrainerConfig(
+            n_pod=n_pod,
+            kstep=KStepConfig(lr=1e-3, k=k, b1=0.0, merge="flat"),
+            sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        ),
+    )
+    gen = S.ctr_batches(seed=1, batch=512, rows=cfg.rows,
+                        n_fields=cfg.n_fields, nnz=cfg.nnz_per_instance)
+    meter = StreamingAUC(window=20)
+    for i in range(steps):
+        b = next(gen)
+        meter.update(b["label"], tr.predict(b))  # predict-then-train
+        l = tr.train_step(b)
+        if (i + 1) % 25 == 0:
+            print(f"step {i+1:4d}  loss {l:.4f}  online AUC {meter.value():.4f}")
+    print(f"\nfinal online AUC ({n_pod} workers, k={k}): {meter.value():.4f}")
+    return meter.value()
+
+
+if __name__ == "__main__":
+    a = main()
+    assert a > 0.72, f"expected AUC > 0.72, got {a}"

@@ -1,0 +1,108 @@
+"""End-to-end driver: train a ~100M-parameter CTR model for a few hundred
+steps with the full production stack — k-step Adam with two-phase merging,
+working-set sparse AdaGrad, prefetched input pipeline, checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_ctr_kstep.py --steps 300
+
+~100M params: 1.5M-row x 64-d table (96M) + field-attention tower (~4M).
+Reports the paper's Fig. 9/10 quantities at laptop scale: online AUC and
+the cross-pod communication amortization.
+"""
+
+import argparse
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kstep import KStepConfig
+from repro.core.sparse_optim import SparseAdagradConfig
+from repro.data import synthetic as S
+from repro.data.pipeline import PrefetchPipeline
+from repro.models import recsys as R
+from repro.runtime.metrics import StreamingAUC
+from repro.runtime.trainer import HybridTrainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=1024)
+    ap.add_argument("--rows", type=int, default=1_500_000)
+    ap.add_argument("--n-pod", type=int, default=4)
+    ap.add_argument("--k", type=int, default=20)
+    ap.add_argument("--merge", default="two_phase",
+                    choices=["flat", "two_phase", "bf16", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = R.CTRConfig(rows=args.rows, embed_dim=64, n_fields=24,
+                      nnz_per_instance=48, mlp=(512, 256, 1))
+    n_dense = sum(np.prod(s) for s in [(64, 64)] * 3) + (24 * 64) * 512 + 512 * 256 + 256
+    print(f"model: ~{(cfg.rows * cfg.embed_dim + n_dense) / 1e6:.0f}M params "
+          f"({cfg.rows * cfg.embed_dim / 1e6:.0f}M sparse)")
+
+    rng = jax.random.key(0)
+    dense = R.ctr_init_dense(rng, cfg)
+    tables = {"sparse": (jax.random.normal(rng, (cfg.rows, cfg.embed_dim))
+                         * 0.05).astype(jnp.float32)}
+
+    def embed(workings, invs, bp):
+        B, nnz = bp["ids"].shape
+        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
+               + bp["field_ids"]).reshape(-1)
+        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
+            * bp["mask"].reshape(-1)[:, None]
+        bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
+        return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
+
+    def loss(dp, emb, bp, predict=False):
+        logits = R.ctr_forward_from_emb(dp, emb, bp, cfg)
+        if predict:
+            return jax.nn.sigmoid(logits)
+        return R.pointwise_loss(logits, bp["label"])
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(), "ctr_kstep_ckpt")
+    tr = HybridTrainer(
+        dense, tables, embed, loss, {"sparse": "ids"},
+        capacity=1 << 16,
+        cfg=TrainerConfig(
+            n_pod=args.n_pod,
+            kstep=KStepConfig(lr=1e-3, k=args.k, b1=0.0, merge=args.merge),
+            sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+            ckpt_dir=ckpt_dir, ckpt_every=100, ckpt_async=True,
+        ),
+    )
+    if args.resume and tr.resume():
+        print(f"resumed from step {tr.step_num}")
+
+    src = S.ctr_batches(seed=1, batch=args.batch, rows=cfg.rows,
+                        n_fields=cfg.n_fields, nnz=cfg.nnz_per_instance)
+    pipe = PrefetchPipeline(src, depth=2)
+    meter = StreamingAUC(window=30)
+    t0 = time.perf_counter()
+    for i, b in enumerate(pipe):
+        if tr.step_num + 1 >= args.steps and i >= args.steps:
+            break
+        meter.update(b["label"], tr.predict(b))
+        l = tr.train_step(b)
+        if tr.step_num % 50 == 0:
+            dt = time.perf_counter() - t0
+            print(f"step {tr.step_num:5d}  loss {l:.4f}  AUC {meter.value():.4f}  "
+                  f"{tr.step_num / max(dt, 1e-9):.1f} steps/s  "
+                  f"(merges every {args.k} steps over {args.n_pod} pods)")
+        if tr.step_num >= args.steps:
+            break
+    pipe.close()
+    if tr.ckpt:
+        tr.ckpt.wait()
+    print(f"\ndone: step {tr.step_num}, online AUC {meter.value():.4f}, "
+          f"input stall {pipe.wait_seconds:.1f}s vs staging {pipe.read_seconds:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

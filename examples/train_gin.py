@@ -1,0 +1,75 @@
+"""GIN training example — both GNN regimes:
+
+  full-graph:  node classification on a synthetic community graph
+  minibatch:   fanout neighbor sampling (the minibatch_lg regime)
+
+    PYTHONPATH=src python examples/train_gin.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.kstep import KStepConfig
+from repro.data import synthetic as S
+from repro.data.graph_sampler import NeighborSampler
+from repro.models import gin as G
+from repro.runtime.trainer import DenseTrainer, TrainerConfig
+
+
+def accuracy(params, g, cfg):
+    logits = G.forward(params, jnp.asarray(g.x), jnp.asarray(g.edge_src),
+                       jnp.asarray(g.edge_dst), cfg)
+    return float(np.mean(np.argmax(np.asarray(logits), -1) == g.labels))
+
+
+def full_graph(steps: int = 60):
+    g = S.community_graph(seed=0, n_nodes=2000, avg_degree=8, d_feat=32, n_classes=5)
+    cfg = dataclasses.replace(configs.get("gin-tu").smoke_cfg, d_in=32, n_classes=5)
+    params = G.init_params(jax.random.key(0), cfg)
+    tr = DenseTrainer(lambda p, b: G.loss_fn(p, b, cfg), params,
+                      TrainerConfig(n_pod=2, kstep=KStepConfig(lr=3e-3, k=5, b1=0.9)))
+    # full-graph: every pod trains on the same (whole) graph
+    batch = {"x": np.stack([g.x] * 2), "edge_src": np.stack([g.edge_src] * 2),
+             "edge_dst": np.stack([g.edge_dst] * 2), "labels": np.stack([g.labels] * 2)}
+    acc0 = accuracy(jax.tree.map(lambda x: x[0], tr.params), g, cfg)
+    for i in range(steps):
+        loss = tr.train_step(batch, podded=True)
+    acc1 = accuracy(jax.tree.map(lambda x: x[0], tr.params), g, cfg)
+    print(f"full-graph:  acc {acc0:.3f} -> {acc1:.3f} (loss {loss:.3f})")
+    return acc1
+
+
+def minibatch(steps: int = 80):
+    g = S.community_graph(seed=1, n_nodes=5000, avg_degree=10, d_feat=32, n_classes=5)
+    cfg = dataclasses.replace(configs.get("gin-tu").smoke_cfg, d_in=32, n_classes=5)
+    params = G.init_params(jax.random.key(0), cfg)
+    sampler = NeighborSampler(5000, g.edge_src.astype(np.int64),
+                              g.edge_dst.astype(np.int64))
+    rng = np.random.default_rng(0)
+    tr = DenseTrainer(lambda p, b: G.loss_fn(p, b, cfg), params,
+                      TrainerConfig(n_pod=1, kstep=KStepConfig(lr=3e-3, k=1, b1=0.9)))
+    for i in range(steps):
+        seeds = rng.choice(5000, 128, replace=False)
+        blk = sampler.sample_block(rng, seeds, fanouts=(8, 5))
+        batch = {
+            "x": g.x[blk["nodes"]],
+            "edge_src": blk["edge_src"], "edge_dst": blk["edge_dst"],
+            "edge_mask": blk["edge_mask"],
+            "labels": g.labels[blk["nodes"]],
+            "node_mask": blk["seed_mask"],
+        }
+        loss = tr.train_step(batch)
+    acc = accuracy(jax.tree.map(lambda x: x[0], tr.params), g, cfg)
+    print(f"minibatch:   final acc {acc:.3f} (loss {loss:.3f})")
+    return acc
+
+
+if __name__ == "__main__":
+    a1 = full_graph()
+    a2 = minibatch()
+    assert a1 > 0.5 and a2 > 0.4, (a1, a2)
+    print("GIN examples OK")

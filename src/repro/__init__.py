@@ -1,0 +1,10 @@
+"""repro — Communication-efficient terabyte-scale training framework (JAX/TPU).
+
+Reproduction + extension of Zhao et al. (2022), "Communication-Efficient
+TeraByte-Scale Model Training Framework for Online Advertising": k-step Adam
+model merging across slow-fabric (pod/DCN) boundaries, a hierarchical sharded
+embedding engine with working-set pulls, and topology-aware collective
+schedules — expressed natively in JAX (pjit/GSPMD + Pallas TPU kernels).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,74 @@
+"""Architecture registry: the 10 assigned archs + the paper's own model.
+
+Each config module defines ``ARCH`` (an ArchSpec).  ``get(name)`` /
+``list_archs()`` are the public lookup API used by --arch flags everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, List, Optional
+
+_MODULES = {
+    "baidu-ctr": "repro.configs.baidu_ctr",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "granite-8b": "repro.configs.granite_8b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "llama4-scout-17b-16e": "repro.configs.llama4_scout",
+    "gin-tu": "repro.configs.gin_tu",
+    "dien": "repro.configs.dien",
+    "din": "repro.configs.din",
+    "two-tower-retrieval": "repro.configs.two_tower",
+    "dlrm-mlperf": "repro.configs.dlrm_mlperf",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (arch x input-shape) cell."""
+    name: str
+    kind: str                 # train | prefill | decode | serve | retrieval
+    dims: Dict[str, int]
+    skip: Optional[str] = None  # reason string if inapplicable (noted in DESIGN.md)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str               # lm | gnn | recsys
+    model_cfg: Any            # full-size model config (dry-run only)
+    smoke_cfg: Any            # reduced config (CPU tests / examples)
+    shapes: Dict[str, ShapeSpec]
+    source: str = ""          # provenance tag from the assignment
+
+
+def get(name: str) -> ArchSpec:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).ARCH
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def lm_shapes() -> Dict[str, ShapeSpec]:
+    return {
+        "train_4k": ShapeSpec("train_4k", "train", {"seq": 4096, "batch": 256}),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill", {"seq": 32768, "batch": 32}),
+        "decode_32k": ShapeSpec("decode_32k", "decode", {"seq": 32768, "batch": 128}),
+        "long_500k": ShapeSpec("long_500k", "decode", {"seq": 524288, "batch": 1}),
+    }
+
+
+def recsys_shapes() -> Dict[str, ShapeSpec]:
+    return {
+        "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+        "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+        "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+        "retrieval_cand": ShapeSpec(
+            "retrieval_cand", "retrieval", {"batch": 1, "n_candidates": 1_000_000}
+        ),
+    }

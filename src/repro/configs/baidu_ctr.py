@@ -1,0 +1,35 @@
+"""baidu-ctr — the paper's own model (§2.1 Fig. 2): ~1e11-dim multi-hot
+sparse input (~100 nnz/instance) -> 64-d embedding bags per field -> field
+self-attention -> MLP.  The production table is 10 TB; here the full config
+is terabyte-scale — 2e9 rows x 64 f32 = 512 GB table + 512 GB AdaGrad
+accumulator ~= 1 TB of sparse state sharded over all 512 chips (2e9 keeps
+row ids within int32, the JAX gather index type), exercised via the
+dry-run; the smoke config is CPU-size.
+
+Shapes follow the paper's §5 setup: mini-batches of ~1000 instances
+(training), plus the online-inference path (predict-then-train).
+"""
+
+from repro.configs import ArchSpec, ShapeSpec
+from repro.models.recsys import CTRConfig
+
+MODEL = CTRConfig(
+    name="baidu-ctr", rows=2_000_000_000, embed_dim=64, n_fields=40,
+    nnz_per_instance=100, mlp=(512, 256, 1),
+)
+
+SMOKE = CTRConfig(
+    name="baidu-ctr-smoke", rows=20_000, embed_dim=16, n_fields=8,
+    nnz_per_instance=20, mlp=(32, 1), attn_heads=2,
+)
+
+SHAPES = {
+    "train_mb1k": ShapeSpec("train_mb1k", "train", {"batch": 1024}),
+    "train_mb8k": ShapeSpec("train_mb8k", "train", {"batch": 8192}),
+    "serve_online": ShapeSpec("serve_online", "serve", {"batch": 1024}),
+}
+
+ARCH = ArchSpec(
+    name="baidu-ctr", family="recsys", model_cfg=MODEL, smoke_cfg=SMOKE,
+    shapes=SHAPES, source="the paper (Zhao et al. 2022)",
+)

@@ -1,0 +1,33 @@
+"""qwen3-14b [dense LM] — 40L d5120 40H (GQA kv=8) dff17408 vocab151936,
+qk-norm, GQA.  [hf:Qwen/Qwen3-8B; hf]"""
+
+import dataclasses
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, lm_shapes
+from repro.models.transformer import TransformerConfig
+
+MODEL = TransformerConfig(
+    name="qwen3-14b",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=17408, vocab=151936, head_dim=128,
+    qk_norm=True, rope_theta=1e6, dtype=jnp.bfloat16,
+)
+
+SMOKE = TransformerConfig(
+    name="qwen3-14b-smoke",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=256, vocab=512, head_dim=16,
+    qk_norm=True, rope_theta=1e6, dtype=jnp.float32, moe_group_size=128,
+)
+
+shapes = lm_shapes()
+shapes["long_500k"] = dataclasses.replace(
+    shapes["long_500k"],
+    skip="pure full-attention arch: 500k decode requires sub-quadratic attention (DESIGN.md §5)",
+)
+
+ARCH = ArchSpec(
+    name="qwen3-14b", family="lm", model_cfg=MODEL, smoke_cfg=SMOKE,
+    shapes=shapes, source="hf:Qwen/Qwen3-8B; hf",
+)

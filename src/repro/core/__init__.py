@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — k-step Adam merging + sparse embedding engine."""
+
+from repro.core.kstep import (  # noqa: F401
+    KStepAdam,
+    KStepAdamState,
+    KStepConfig,
+)
+from repro.core import merge  # noqa: F401
+from repro.core.sparse_optim import SparseAdagrad, SparseAdagradState  # noqa: F401
+from repro.core.embedding_engine import (  # noqa: F401
+    EmbeddingEngine,
+    embedding_bag,
+    pull_working_set,
+)

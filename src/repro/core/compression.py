@@ -1,0 +1,29 @@
+"""Payload compression primitives for cross-pod merges (beyond paper).
+
+Symmetric per-tensor int8 quantization with an explicit scale, plus the
+error-feedback residual helper.  ``repro.core.merge.int8_ef_mean`` composes
+these with the two-phase schedule; they are exposed separately for reuse
+(e.g. compressed checkpoint deltas) and for property tests.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, levels: int = 127) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (q int8, scale f32) with x ~= q * scale, |q| <= levels."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32))) / levels + 1e-30
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -levels, levels).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantization_residual(x: jnp.ndarray, q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Error-feedback residual: the part of x the int8 payload failed to carry."""
+    return x.astype(jnp.float32) - dequantize_int8(q, scale)

@@ -1,0 +1,89 @@
+"""Sparse AdaGrad on embedding working sets (paper §5 hybrid optimizer split).
+
+The paper trains the 10-TB sparse embedding layers with AdaGrad synchronized
+*every* step: the sparse gradient touches only the working set (the
+deduplicated rows referenced by the current batch), so every-step sync is
+cheap, and AdaGrad avoids storing Adam's first moment for 1e11 rows.
+
+Here tables are row-sharded jnp arrays; the update is a scatter over the
+unique row ids of the batch.  Under GSPMD the scatter is partitioned over the
+row-sharded table, so only rows crossing shard boundaries generate traffic —
+the TPU rendering of the parameter-server "push" path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseAdagradConfig:
+    lr: float = 0.05
+    eps: float = 1e-10
+    initial_accumulator: float = 0.1   # paddlepaddle/TF AdaGrad convention
+
+
+class SparseAdagradState(NamedTuple):
+    accum: Pytree  # per-table accumulator, same shape as the table, f32
+
+
+class SparseAdagrad:
+    """Working-set AdaGrad over a pytree of embedding tables."""
+
+    def __init__(self, cfg: SparseAdagradConfig = SparseAdagradConfig()):
+        self.cfg = cfg
+
+    def init(self, tables: Pytree) -> SparseAdagradState:
+        return SparseAdagradState(
+            accum=jax.tree.map(
+                lambda t: jnp.full(t.shape, self.cfg.initial_accumulator, jnp.float32),
+                tables,
+            )
+        )
+
+    def apply_rows(
+        self,
+        table: jnp.ndarray,          # (rows, dim)
+        accum: jnp.ndarray,          # (rows, dim) f32
+        unique_ids: jnp.ndarray,     # (capacity,) int32 — deduplicated, padded
+        row_grads: jnp.ndarray,      # (capacity, dim) — grads w.r.t. pulled rows
+    ):
+        """Scatter one working set back into its table (the PS "push")."""
+        g = row_grads.astype(jnp.float32)
+        g2 = jnp.square(g)
+        # Gather-side accumulator value *after* this step for the denominator.
+        # Padding slots repeat a real id with zero grads; the scatter-add of
+        # zeros and the zero g2 keep them inert.
+        a_new_rows = accum[unique_ids] + g2
+        delta = -self.cfg.lr * g / (jnp.sqrt(a_new_rows) + self.cfg.eps)
+        new_table = table.at[unique_ids].add(delta.astype(table.dtype))
+        new_accum = accum.at[unique_ids].add(g2)
+        return new_table, new_accum
+
+    def step(self, tables: Pytree, state: SparseAdagradState, updates: Pytree):
+        """updates: pytree matching ``tables`` of (unique_ids, row_grads)."""
+        flat_t, treedef = jax.tree.flatten(tables)
+        flat_a = jax.tree.leaves(state.accum)
+        flat_u = jax.tree.flatten(updates, is_leaf=lambda u: isinstance(u, tuple))[0]
+        new_t, new_a = [], []
+        for t, a, (ids, rg) in zip(flat_t, flat_a, flat_u):
+            nt, na = self.apply_rows(t, a, ids, rg)
+            new_t.append(nt)
+            new_a.append(na)
+        return (
+            jax.tree.unflatten(treedef, new_t),
+            SparseAdagradState(accum=jax.tree.unflatten(treedef, new_a)),
+        )
+
+    def dense_reference(self, table, accum, grads):
+        """Dense AdaGrad oracle (same math on a full-size gradient) — tests."""
+        g = grads.astype(jnp.float32)
+        a = accum + jnp.square(g)
+        new_table = table - (self.cfg.lr * g / (jnp.sqrt(a) + self.cfg.eps)).astype(table.dtype)
+        return new_table, a

@@ -1,0 +1,2 @@
+from repro.data.pipeline import PrefetchPipeline  # noqa: F401
+from repro.data.graph_sampler import NeighborSampler  # noqa: F401

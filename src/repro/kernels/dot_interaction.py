@@ -1,0 +1,54 @@
+"""Fused DLRM dot-interaction kernel: (B, F, D) -> (B, F*(F-1)/2).
+
+Fuses the batched self-Gram ``z = feats @ feats^T`` with the lower-triangle
+extraction so the full (B, F, F) Gram never round-trips through HBM — on a
+65k batch with F=27 that saves 65536*27*27*4B ~ 191 MB of HBM traffic per
+step each way.  Grid over batch blocks; each block keeps (Bb, F, D) and
+(Bb, F, F) in VMEM (F is small for every recsys arch here).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _dot_kernel(feats_ref, idx_ref, out_ref):
+    feats = feats_ref[...]                         # (Bb, F, D)
+    z = jax.lax.dot_general(
+        feats, feats,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                              # (Bb, F, F)
+    Bb, F, _ = z.shape
+    flat = z.reshape(Bb, F * F)
+    out_ref[...] = jnp.take(flat, idx_ref[...], axis=1).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_block", "interpret"))
+def dot_interaction_pallas(
+    feats: jnp.ndarray,       # (B, F, D)
+    batch_block: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, F, D = feats.shape
+    batch_block = min(batch_block, B)
+    assert B % batch_block == 0, (B, batch_block)
+    li, lj = np.tril_indices(F, k=-1)
+    n_out = len(li)
+    idx = jnp.asarray(li * F + lj, jnp.int32)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=(B // batch_block,),
+        in_specs=[
+            pl.BlockSpec((batch_block, F, D), lambda i: (i, 0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((batch_block, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_out), feats.dtype),
+        interpret=interpret,
+    )(feats, idx)

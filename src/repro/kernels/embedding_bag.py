@@ -1,0 +1,78 @@
+"""Fused embedding-bag kernel: out[b] = sum_{j: seg[j]==b} w[j] * working[inv[j]].
+
+TPU adaptation of the FBGEMM-style table-batched embedding bag: the gather
+runs over the *pulled working set* (which fits VMEM — that is the point of
+the paper's working-set pull), and the segment reduction is expressed as a
+one-hot matmul so it runs on the MXU instead of as a scatter (TPU has no
+fast scatter; a (bags x nnz) @ (nnz x dim) matmul is the idiomatic
+segment-sum).
+
+Grid: (n_bag_blocks, n_nnz_blocks); the output block index depends only on
+the bag block, so nnz blocks accumulate into the same VMEM tile across the
+sequential TPU grid (standard Pallas accumulation pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(inv_ref, seg_ref, w_ref, working_ref, out_ref, *, bag_block: int):
+    i = pl.program_id(0)  # bag block
+    j = pl.program_id(1)  # nnz block
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    inv = inv_ref[...]                      # (nnz_blk,)
+    seg = seg_ref[...]                      # (nnz_blk,)
+    w = w_ref[...]                          # (nnz_blk,)
+    working = working_ref[...]              # (C, D) — whole working set in VMEM
+    emb = jnp.take(working, inv, axis=0)    # (nnz_blk, D) VMEM gather
+    emb = emb * w[:, None].astype(emb.dtype)
+    # one-hot segment-sum on the MXU: (bag_blk, nnz_blk) @ (nnz_blk, D)
+    local = seg - i * bag_block
+    onehot = (
+        local[None, :] == jax.lax.broadcasted_iota(jnp.int32, (bag_block, 1), 0)
+    ).astype(emb.dtype)
+    out_ref[...] += jax.lax.dot(
+        onehot, emb, preferred_element_type=out_ref.dtype
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_bags", "bag_block", "nnz_block", "interpret")
+)
+def embedding_bag_pallas(
+    working: jnp.ndarray,   # (C, D) pulled rows
+    inv: jnp.ndarray,       # (nnz,) row index into working
+    seg: jnp.ndarray,       # (nnz,) bag index (any order)
+    weights: jnp.ndarray,   # (nnz,)
+    num_bags: int,
+    bag_block: int = 256,
+    nnz_block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    C, D = working.shape
+    nnz = inv.shape[0]
+    assert num_bags % bag_block == 0, (num_bags, bag_block)
+    assert nnz % nnz_block == 0, (nnz, nnz_block)
+    grid = (num_bags // bag_block, nnz // nnz_block)
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, bag_block=bag_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nnz_block,), lambda i, j: (j,)),
+            pl.BlockSpec((nnz_block,), lambda i, j: (j,)),
+            pl.BlockSpec((nnz_block,), lambda i, j: (j,)),
+            pl.BlockSpec((C, D), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bag_block, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_bags, D), working.dtype),
+        interpret=interpret,
+    )(inv, seg, weights, working)

@@ -1,0 +1,98 @@
+"""Pallas TPU flash attention (forward) — the §Perf-identified next lever
+for the LM training cells: the pure-JAX attention materializes the f32
+score tile chain through HBM (~40% of the qwen3 fsdp_seq memory term);
+this kernel keeps the (block_q x block_kv) tile resident in VMEM with the
+online-softmax recurrence, so HBM traffic drops to Q/K/V/O once each.
+
+Grid: (batch*kv_head*group, n_q_blocks, n_kv_blocks) — the kv-block axis is
+innermost (sequential on TPU), accumulating into the same VMEM output tile
+with running max/denominator carried in scratch.  Causal masking uses the
+absolute block offsets.  GQA is handled by the caller reshaping q to
+(B*Kv*G, S, hd) against k/v (B*Kv, S, hd) broadcast over G.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale, block_q, block_kv, causal):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+    s = q @ k.T                                       # (bq, bkv)
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kv_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_pos <= q_pos, s, -1e30)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,    # (BH, Sq, hd)  BH = batch*heads (GQA pre-flattened)
+    k: jnp.ndarray,    # (BH, Skv, hd)
+    v: jnp.ndarray,    # (BH, Skv, hd)
+    causal: bool = True,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    assert Sq % block_q == 0 and Skv % block_kv == 0, (Sq, Skv, block_q, block_kv)
+    grid = (BH, Sq // block_q, Skv // block_kv)
+    scale = 1.0 / (hd ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_kv=block_kv, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        # running max / denominator / accumulator live in VMEM scratch across
+        # the sequential kv-block grid axis
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas path compiles natively; everywhere else (this CPU
+container) the wrappers run the kernels in interpret mode when
+``REPRO_KERNEL_INTERPRET=1`` (tests) or fall back to the jnp oracle —
+so the framework is runnable on any backend while keeping the TPU kernel
+as the deployment path.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.dot_interaction import dot_interaction_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.fused_adam import fused_adam_pallas
+from repro.kernels.sparse_adagrad import sparse_adagrad_pallas
+
+
+def _mode() -> str:
+    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "ref"
+
+
+def embedding_bag(working, inv, seg, weights, num_bags, **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.embedding_bag_ref(working, inv, seg, weights, num_bags)
+    return embedding_bag_pallas(
+        working, inv, seg, weights, num_bags,
+        interpret=(mode == "interpret"), **kw,
+    )
+
+
+def dot_interaction(feats, **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.dot_interaction_ref(feats)
+    return dot_interaction_pallas(feats, interpret=(mode == "interpret"), **kw)
+
+
+def fused_adam(p, g, m, v, v_hat, lr=1e-3, b1=0.0, b2=0.999, **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.fused_adam_ref(p, g, m, v, v_hat, lr, b1, b2)
+    return fused_adam_pallas(
+        p, g, m, v, v_hat, lr=lr, b1=b1, b2=b2,
+        interpret=(mode == "interpret"), **kw,
+    )
+
+
+def sparse_adagrad(rows, accum, grads, lr=0.05, eps=1e-10, **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.sparse_adagrad_ref(rows, accum, grads, lr, eps)
+    return sparse_adagrad_pallas(
+        rows, accum, grads, lr=lr, eps=eps,
+        interpret=(mode == "interpret"), **kw,
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag_ref(working, inv, seg, weights, num_bags):
+    emb = jnp.take(working, inv, axis=0) * weights[:, None].astype(working.dtype)
+    return jax.ops.segment_sum(emb, seg, num_segments=num_bags)
+
+
+def dot_interaction_ref(feats):
+    B, F, D = feats.shape
+    z = jnp.einsum("bfd,bgd->bfg", feats.astype(jnp.float32), feats.astype(jnp.float32))
+    li, lj = np.tril_indices(F, k=-1)
+    return z[:, li, lj].astype(feats.dtype)
+
+
+def fused_adam_ref(p, g, m, v, v_hat, lr=1e-3, b1=0.0, b2=0.999):
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m + (1 - b1) * g32
+    v_new = b2 * v + (1 - b2) * g32 * g32
+    p_new = (p.astype(jnp.float32) - lr * m_new / jnp.sqrt(v_hat)).astype(p.dtype)
+    return p_new, m_new, v_new
+
+
+def sparse_adagrad_ref(rows, accum, grads, lr=0.05, eps=1e-10):
+    g = grads.astype(jnp.float32)
+    a = accum + g * g
+    w = (rows.astype(jnp.float32) - lr * g / (jnp.sqrt(a) + eps)).astype(rows.dtype)
+    return w, a

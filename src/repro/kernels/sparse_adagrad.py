@@ -1,0 +1,52 @@
+"""Fused working-set sparse-AdaGrad kernel (the PS "push" math, paper §5).
+
+Operates on the pulled row block: given (rows, accum, grads) of the working
+set, produces updated rows and accumulators in one fused pass —
+``a' = a + g^2;  w' = w - lr * g / (sqrt(a') + eps)``.  The scatter back
+into the sharded table stays outside (XLA's partitioned scatter); the
+kernel removes the 4-pass element-wise chain XLA would otherwise emit over
+the (capacity, dim) block.  Grid over row blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adagrad_kernel(w_ref, a_ref, g_ref, nw_ref, na_ref, *, lr, eps):
+    g = g_ref[...].astype(jnp.float32)
+    a = a_ref[...] + g * g
+    w = w_ref[...].astype(jnp.float32) - lr * g / (jnp.sqrt(a) + eps)
+    nw_ref[...] = w.astype(nw_ref.dtype)
+    na_ref[...] = a
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "eps", "row_block", "interpret")
+)
+def sparse_adagrad_pallas(
+    rows: jnp.ndarray,    # (C, D) pulled table rows
+    accum: jnp.ndarray,   # (C, D) f32
+    grads: jnp.ndarray,   # (C, D)
+    lr: float = 0.05, eps: float = 1e-10,
+    row_block: int = 512, interpret: bool = False,
+):
+    C, D = rows.shape
+    row_block = min(row_block, C)
+    assert C % row_block == 0, (C, row_block)
+    spec = pl.BlockSpec((row_block, D), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_adagrad_kernel, lr=lr, eps=eps),
+        grid=(C // row_block,),
+        in_specs=[spec] * 3,
+        out_specs=[spec] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, D), rows.dtype),
+            jax.ShapeDtypeStruct((C, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rows, accum, grads)

@@ -1,0 +1,1083 @@
+"""Cell builders: for every (arch x input-shape) pair, construct the jitted
+step functions with abstract inputs (ShapeDtypeStruct — never allocated) and
+their shardings on a given mesh.  Used by the dry-run, the roofline
+derivation, and the launcher.
+
+Train cells produce TWO steps — ``train_local`` (the hot k-1 steps, no
+cross-pod traffic) and ``train_merge`` (the k-th step carrying the paper's
+model-merge collectives) — so per-step cost is reported as
+local + merge/k, with the merge bytes visible in isolation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, ShapeSpec, get as get_arch
+from repro.core.embedding_engine import pull_working_set
+from repro.core.kstep import KStepAdam, KStepConfig
+from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
+from repro.data.graph_sampler import NeighborSampler
+from repro.models import gin as gin_lib
+from repro.models import recsys as rec
+from repro.models import transformer as tfm
+from repro.models.common import sharding_ctx
+from repro.sharding.specs import (
+    auto_param_specs,
+    batch_specs,
+    lm_param_specs,
+    table_specs_sharding,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepDef:
+    name: str
+    fn: Callable
+    args: Tuple                    # abstract argument trees (SDS leaves)
+    in_specs: Tuple                # PartitionSpec trees matching args
+    donate: Tuple[int, ...] = ()
+    model_flops: float = 0.0       # useful-FLOPs estimate for this step
+    weight: float = 1.0            # contribution to per-step cost (1/k for merge)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    steps: Dict[str, StepDef]
+    skip: Optional[str] = None
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def _pod_abstract(tree, n_pod: int):
+    return jax.tree.map(lambda x: SDS((n_pod,) + tuple(x.shape), x.dtype), tree)
+
+
+def _spec_pref(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def mesh_pods(mesh) -> int:
+    return mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+
+
+def shard1d(n: int, mesh, prefs=(("pod", "data", "model"), ("pod", "data"),
+                                 ("data", "model"), ("data",), ("model",))):
+    """Largest preferred axis combo that divides n (None if none do)."""
+    for axes in prefs:
+        kept = tuple(a for a in axes if a in mesh.axis_names)
+        if not kept:
+            continue
+        size = int(np.prod([mesh.shape[a] for a in kept]))
+        if n % size == 0 and n >= size:
+            return kept
+    return None
+
+
+def data_ways(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+# ===================================================================== LM
+def _lm_train_steps(arch: ArchSpec, shape: ShapeSpec, mesh, kcfg: KStepConfig,
+                    style: str = "tp_fsdp"):
+    cfg = arch.model_cfg
+    if style == "fsdp_seq":
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+    n_pod = mesh_pods(mesh)
+    B, S = shape.dims["batch"], shape.dims["seq"]
+    params_a = jax.eval_shape(lambda: tfm.init_params(jax.random.key(0), cfg))
+    inner_specs = lm_param_specs(params_a, mesh, podded=False, style=style)
+    opt = KStepAdam(kcfg, n_pod, mesh=mesh, param_specs=inner_specs)
+    params_pod = _pod_abstract(params_a, n_pod)
+    state_a = jax.eval_shape(opt.init, params_pod)
+    batch_a = {
+        "tokens": SDS((n_pod, B // n_pod, S), jnp.int32),
+        "labels": SDS((n_pod, B // n_pod, S), jnp.int32),
+    }
+
+    p_specs = lm_param_specs(params_a, mesh, podded=True, style=style)
+    state_specs = type(state_a)(
+        step=P(), m=p_specs, v_local=p_specs, v_hat=p_specs,
+        ef=p_specs if state_a.ef is not None else None,
+    )
+    pod_e = "pod" if "pod" in mesh.axis_names else None
+    seq_e = "model" if style == "fsdp_seq" else None
+    batch_sp = {
+        "tokens": P(pod_e, "data", seq_e),
+        "labels": P(pod_e, "data", seq_e),
+    }
+
+    def make(merge: bool):
+        def step(params, batch, opt_state):
+            with sharding_ctx(mesh):
+                def total_loss(p):
+                    losses = jax.vmap(lambda pi, bi: tfm.loss_fn(pi, bi, cfg))(p, batch)
+                    return jnp.sum(losses)
+                grads = jax.grad(total_loss)(params)
+                # pin gradients to the parameter layout so cross-replica
+                # reductions lower to reduce-scatter, not all-reduce+slice
+                gflat, gdef = jax.tree_util.tree_flatten(grads)
+                sflat = jax.tree_util.tree_flatten(
+                    p_specs, is_leaf=lambda s: isinstance(s, P))[0]
+                grads = jax.tree_util.tree_unflatten(gdef, [
+                    jax.lax.with_sharding_constraint(g, NamedSharding(mesh, s))
+                    for g, s in zip(gflat, sflat)
+                ])
+                new_p, new_s = opt.step(params, grads, opt_state, merge=merge)
+            return new_p, new_s
+        return step
+
+    if style == "fsdp_seq" and "pod" in mesh.axis_names:
+        # The pod axis must carry ONLY merge traffic, but GSPMD's batched-dot
+        # partitioning replicates the vmapped pod dim of FSDP weights across
+        # DCN (measured: ~340 GB/step of spurious pod-crossing gathers).
+        # Structural fix: make 'pod' a MANUAL shard_map axis — each pod is a
+        # genuinely separate worker (the paper's architecture) and the merge
+        # is an explicit lax.pmean('pod').
+        opt_m = KStepAdam(kcfg, 1, mesh=mesh, manual_pod=True)
+
+        def leafspec_nopod(s):
+            return P(*s)  # inner spec, leading local pod dim handled by shard_map
+
+        inner_nopod = jax.tree_util.tree_flatten(
+            inner_specs, is_leaf=lambda s: isinstance(s, P))[0]
+
+        def make_sm(merge: bool):
+            def body(params, batch, opt_state):
+                with sharding_ctx(mesh, exclude=("pod",)):
+                    def total_loss(p):
+                        losses = jax.vmap(
+                            lambda pi, bi: tfm.loss_fn(pi, bi, cfg))(p, batch)
+                        return jnp.sum(losses)
+                    grads = jax.grad(total_loss)(params)
+                    gflat, gdef = jax.tree_util.tree_flatten(grads)
+                    grads = jax.tree_util.tree_unflatten(gdef, [
+                        jax.lax.with_sharding_constraint(
+                            g, NamedSharding(mesh, P(None, *s)))
+                        for g, s in zip(gflat, inner_nopod)
+                    ])
+                    new_p, new_s = opt_m.step(params, grads, opt_state, merge=merge)
+                return new_p, new_s
+
+            p_sm = jax.tree.map(lambda _: P("pod"), params_pod)
+            st_sm = type(state_a)(
+                step=P(), m=p_sm, v_local=p_sm, v_hat=p_sm,
+                ef=p_sm if state_a.ef is not None else None,
+            )
+            b_sm = {"tokens": P("pod"), "labels": P("pod")}
+            return jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(p_sm, b_sm, st_sm),
+                out_specs=(p_sm, st_sm),
+                axis_names=frozenset({"pod"}),   # pod manual; data/model auto
+                check_vma=False,
+            )
+
+        flops = 6.0 * cfg.active_params() * B * S
+        return {
+            "train_local": StepDef(
+                "train_local", make_sm(False), (params_pod, batch_a, state_a),
+                (p_specs, batch_sp, state_specs), donate=(0, 2),
+                model_flops=flops, weight=(kcfg.k - 1) / kcfg.k,
+            ),
+            "train_merge": StepDef(
+                "train_merge", make_sm(True), (params_pod, batch_a, state_a),
+                (p_specs, batch_sp, state_specs), donate=(0, 2),
+                model_flops=flops, weight=1.0 / kcfg.k,
+            ),
+        }
+
+    flops = 6.0 * cfg.active_params() * B * S  # fwd+bwd ~ 3x fwd(2ND)
+    return {
+        "train_local": StepDef(
+            "train_local", make(False), (params_pod, batch_a, state_a),
+            (p_specs, batch_sp, state_specs), donate=(0, 2),
+            model_flops=flops, weight=(kcfg.k - 1) / kcfg.k,
+        ),
+        "train_merge": StepDef(
+            "train_merge", make(True), (params_pod, batch_a, state_a),
+            (p_specs, batch_sp, state_specs), donate=(0, 2),
+            model_flops=flops, weight=1.0 / kcfg.k,
+        ),
+    }
+
+
+def _lm_cache_spec(cfg, B, Skv, mesh):
+    """KV cache spec: batch over the data axes and cache LENGTH over 'model'.
+
+    Sharding S (not heads/head-dim) means attention against the cache is a
+    flash-decode pattern under GSPMD: each model shard scores its S-slice
+    and the softmax/PV reductions cross shards as tiny per-token psums — no
+    per-step cache all-gather.  B=1 long-context shards S over everything.
+    """
+    d_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    n_data = data_ways(mesh)
+    if B % n_data == 0 and B >= n_data:
+        kv_spec = P(None, d_axes, "model", None, None)
+        pos_spec = P("model")
+    else:
+        all_ax = d_axes + ("model",)
+        kv_spec = P(None, None, all_ax, None, None)
+        pos_spec = P(all_ax)
+    return {"k": kv_spec, "v": kv_spec, "pos": pos_spec, "t": P()}
+
+
+def _lm_serve_steps(arch: ArchSpec, shape: ShapeSpec, mesh):
+    cfg = arch.model_cfg
+    B, S = shape.dims["batch"], shape.dims["seq"]
+    params_a = jax.eval_shape(lambda: tfm.init_params(jax.random.key(0), cfg))
+    p_specs = lm_param_specs(params_a, mesh, podded=False, serve=True)
+    d_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    if shape.kind == "prefill":
+        batch_a = SDS((B, S), jnp.int32)
+
+        def step(params, tokens):
+            with sharding_ctx(mesh):
+                return tfm.prefill(params, tokens, cfg)
+
+        flops = 2.0 * cfg.active_params() * B * S
+        return {"serve_prefill": StepDef(
+            "serve_prefill", step, (params_a, batch_a),
+            (p_specs, P(d_axes, None)), model_flops=flops,
+        )}
+
+    # decode: one new token against a seq_len cache
+    Skv = tfm.cache_len(cfg, S)
+    cache_a = jax.eval_shape(lambda: tfm.init_cache(cfg, B, S))
+    cache_sp = _lm_cache_spec(cfg, B, Skv, mesh)
+    tok_a = SDS((B,), jnp.int32)
+    tok_sp = P(d_axes) if B % data_ways(mesh) == 0 and B >= data_ways(mesh) else P(None)
+
+    def step(params, cache, tokens):
+        with sharding_ctx(mesh):
+            return tfm.decode_step(params, cache, tokens, cfg)
+
+    flops = 2.0 * cfg.active_params() * B  # one token per slot
+    return {"serve_decode": StepDef(
+        "serve_decode", step, (params_a, cache_a, tok_a),
+        (p_specs, cache_sp, tok_sp), donate=(1,), model_flops=flops,
+    )}
+
+
+# ==================================================================== GNN
+def _gin_batch(shape: ShapeSpec, cfg, n_pod: int):
+    d = shape.dims
+    if shape.name == "molecule":
+        B = d["batch"]
+        N, E = B * d["n_nodes"], B * d["n_edges"]
+        b = {
+            "x": SDS((n_pod, N, d["d_feat"]), jnp.float32),
+            "edge_src": SDS((n_pod, E), jnp.int32),
+            "edge_dst": SDS((n_pod, E), jnp.int32),
+            "graph_ids": SDS((n_pod, N), jnp.int32),
+            "labels": SDS((n_pod, B), jnp.int32),
+        }
+        return b
+    if shape.name == "minibatch_lg":
+        n_max = NeighborSampler.worst_case_nodes(d["batch_nodes"], (d["fanout0"], d["fanout1"]))
+        e_max = NeighborSampler.worst_case_edges(d["batch_nodes"], (d["fanout0"], d["fanout1"]))
+        # pad to multiples of 256 for clean sharding
+        n_max = -(-n_max // 256) * 256
+        e_max = -(-e_max // 256) * 256
+        return {
+            "x": SDS((n_pod, n_max, d["d_feat"]), jnp.float32),
+            "edge_src": SDS((n_pod, e_max), jnp.int32),
+            "edge_dst": SDS((n_pod, e_max), jnp.int32),
+            "edge_mask": SDS((n_pod, e_max), jnp.float32),
+            "node_mask": SDS((n_pod, n_max), jnp.float32),
+            "labels": SDS((n_pod, n_max), jnp.int32),
+        }
+    # full-graph shapes, padded for sharding
+    N = -(-d["n_nodes"] // 256) * 256
+    E = -(-d["n_edges"] // 256) * 256
+    return {
+        "x": SDS((n_pod, N, d["d_feat"]), jnp.float32),
+        "edge_src": SDS((n_pod, E), jnp.int32),
+        "edge_dst": SDS((n_pod, E), jnp.int32),
+        "edge_mask": SDS((n_pod, E), jnp.float32),
+        "node_mask": SDS((n_pod, N), jnp.float32),
+        "labels": SDS((n_pod, N), jnp.int32),
+    }
+
+
+def _gin_steps(arch: ArchSpec, shape: ShapeSpec, mesh, kcfg: KStepConfig,
+               style: str = "sharded_nodes"):
+    d = shape.dims
+    base = arch.model_cfg
+    cfg = dataclasses.replace(
+        base,
+        d_in=d["d_feat"], n_classes=d["n_classes"],
+        readout="graph" if shape.name == "molecule" else "node",
+        node_shard=(style != "replicated_nodes"),
+        # sharded_bf16 (§Perf): whole node state in bf16 so the per-layer
+        # h all-gather and agg reduce run on half-width payloads (the MLP
+        # z-accumulation stays f32 inside gin.forward)
+        dtype=jnp.bfloat16 if style == "sharded_bf16" else base.dtype,
+        message_dtype=jnp.bfloat16 if style == "replicated_nodes" else None,
+    )
+    n_pod = mesh_pods(mesh)
+    opt = KStepAdam(kcfg, n_pod, mesh=mesh)
+    params_a = jax.eval_shape(lambda: gin_lib.init_params(jax.random.key(0), cfg))
+    params_pod = _pod_abstract(params_a, n_pod)
+    state_a = jax.eval_shape(opt.init, params_pod)
+    batch_a = _gin_batch(shape, cfg, n_pod)
+
+    # Leading dim is the pod-replica dim — it must shard over 'pod' so each
+    # pod physically owns its replica and the k-step merge is a real
+    # cross-pod collective.  Inner dims are small -> replicated in-pod.
+    pod_e = "pod" if "pod" in mesh.axis_names else None
+    p_specs = jax.tree.map(lambda x: P(pod_e, *([None] * (x.ndim - 1))), params_pod)
+    state_specs = type(state_a)(
+        step=P(), m=p_specs, v_local=p_specs, v_hat=p_specs,
+        ef=p_specs if state_a.ef is not None else None,
+    )
+    if style == "replicated_nodes":
+        # edges stay fully sharded; node-indexed arrays replicate in-pod so
+        # the scatter reduces with one all-reduce per layer
+        def gin_leaf_spec(name, x):
+            if name.startswith("edge"):
+                return P(pod_e, shard1d(x.shape[1], mesh,
+                                        prefs=(("data", "model"), ("data",))),
+                         *([None] * (x.ndim - 2)))
+            return P(pod_e, *([None] * (x.ndim - 1)))
+        batch_sp = {n: gin_leaf_spec(n, x) for n, x in batch_a.items()}
+    else:
+        batch_sp = jax.tree.map(
+            lambda x: P(pod_e, shard1d(x.shape[1], mesh,
+                                       prefs=(("data", "model"), ("data",), ("model",))),
+                        *([None] * (x.ndim - 2))),
+            batch_a,
+        )
+
+    def make(merge: bool):
+        def step(params, batch, opt_state):
+            with sharding_ctx(mesh):
+                def total_loss(p):
+                    losses = jax.vmap(lambda pi, bi: gin_lib.loss_fn(pi, bi, cfg))(p, batch)
+                    return jnp.sum(losses)
+                grads = jax.grad(total_loss)(params)
+                return opt.step(params, grads, opt_state, merge=merge)
+        return step
+
+    # message passing: E gathers+adds of d_hidden + node MLPs
+    E_real = batch_a["edge_src"].shape[1]
+    N_real = batch_a["x"].shape[1]
+    mlp_flops = 2 * (cfg.d_in * cfg.d_hidden + cfg.d_hidden * cfg.d_hidden * (2 * cfg.n_layers - 1))
+    flops = 3.0 * n_pod * (N_real * mlp_flops + cfg.n_layers * E_real * cfg.d_hidden * 2)
+    return {
+        "train_local": StepDef(
+            "train_local", make(False), (params_pod, batch_a, state_a),
+            (p_specs, batch_sp, state_specs), donate=(0, 2),
+            model_flops=flops, weight=(kcfg.k - 1) / kcfg.k,
+        ),
+        "train_merge": StepDef(
+            "train_merge", make(True), (params_pod, batch_a, state_a),
+            (p_specs, batch_sp, state_specs), donate=(0, 2),
+            model_flops=flops, weight=1.0 / kcfg.k,
+        ),
+    }
+
+
+# ================================================================== recsys
+def _recsys_model_fns(arch: ArchSpec):
+    cfg = arch.model_cfg
+    name = arch.name
+    if name in ("dlrm-mlperf",):
+        return {
+            "tables": rec.dlrm_table_specs(cfg),
+            "init_dense": lambda rng: rec.dlrm_init_dense(rng, cfg),
+            "id_fields": {f"emb_{i:02d}": ("sparse_ids", i) for i in range(cfg.n_sparse)},
+        }
+    if name in ("din", "dien"):
+        return {
+            "tables": rec.din_table_specs(cfg),
+            "init_dense": lambda rng: rec.din_init_dense(rng, cfg),
+            "id_fields": {"items": ("hist_target", None)},
+        }
+    if name == "two-tower-retrieval":
+        return {
+            "tables": rec.two_tower_table_specs(cfg),
+            "init_dense": lambda rng: rec.two_tower_init_dense(rng, cfg),
+            "id_fields": {"items": ("user_item", None)},
+        }
+    if name == "baidu-ctr":
+        return {
+            "tables": rec.ctr_table_specs(cfg),
+            "init_dense": lambda rng: rec.ctr_init_dense(rng, cfg),
+            "id_fields": {"sparse": ("ids", None)},
+        }
+    raise KeyError(name)
+
+
+def _recsys_batch(arch: ArchSpec, B: int):
+    cfg = arch.model_cfg
+    if arch.name == "dlrm-mlperf":
+        return {
+            "dense": SDS((B, cfg.n_dense), jnp.float32),
+            "sparse_ids": SDS((B, cfg.n_sparse), jnp.int32),
+            "label": SDS((B,), jnp.float32),
+        }
+    if arch.name in ("din", "dien"):
+        return {
+            "hist_ids": SDS((B, cfg.seq_len), jnp.int32),
+            "hist_mask": SDS((B, cfg.seq_len), jnp.float32),
+            "target_id": SDS((B,), jnp.int32),
+            "label": SDS((B,), jnp.float32),
+        }
+    if arch.name == "two-tower-retrieval":
+        return {
+            "user_ids": SDS((B, cfg.user_hist_len), jnp.int32),
+            "user_mask": SDS((B, cfg.user_hist_len), jnp.float32),
+            "item_id": SDS((B,), jnp.int32),
+        }
+    if arch.name == "baidu-ctr":
+        return {
+            "ids": SDS((B, cfg.nnz_per_instance), jnp.int32),
+            "field_ids": SDS((B, cfg.nnz_per_instance), jnp.int32),
+            "mask": SDS((B, cfg.nnz_per_instance), jnp.float32),
+            "label": SDS((B,), jnp.float32),
+        }
+    raise KeyError(arch.name)
+
+
+def _recsys_flat_ids(arch: ArchSpec, batch):
+    """Per-table flattened id arrays for the working-set pull."""
+    if arch.name == "dlrm-mlperf":
+        return {f"emb_{i:02d}": batch["sparse_ids"][:, i]
+                for i in range(arch.model_cfg.n_sparse)}
+    if arch.name in ("din", "dien"):
+        return {"items": jnp.concatenate(
+            [batch["hist_ids"].reshape(-1), batch["target_id"]])}
+    if arch.name == "two-tower-retrieval":
+        return {"items": jnp.concatenate(
+            [batch["user_ids"].reshape(-1), batch["item_id"]])}
+    if arch.name == "baidu-ctr":
+        return {"sparse": batch["ids"].reshape(-1)}
+    raise KeyError(arch.name)
+
+
+def _recsys_capacity(arch: ArchSpec, B: int) -> int:
+    cfg = arch.model_cfg
+    if arch.name == "dlrm-mlperf":
+        n = B
+    elif arch.name in ("din", "dien"):
+        n = B * (cfg.seq_len + 1)
+    elif arch.name == "two-tower-retrieval":
+        n = B * (cfg.user_hist_len + 1)
+    else:
+        n = B * cfg.nnz_per_instance
+    return int(-(-n // 256) * 256)
+
+
+def _recsys_split_inv(arch: ArchSpec, invs: Dict[str, jnp.ndarray], batch, n_pod: int):
+    """Reshape the global inverse-index arrays into per-pod slices (leading
+    pod dim) matching how ``pod_batch`` splits the batch (pod-major rows)."""
+    if arch.name == "dlrm-mlperf":
+        return {n: inv.reshape(n_pod, -1) for n, inv in invs.items()}
+    if arch.name in ("din", "dien"):
+        B, T = batch["hist_ids"].shape
+        inv = invs["items"]
+        return {"hist": inv[: B * T].reshape(n_pod, -1),
+                "target": inv[B * T:].reshape(n_pod, -1)}
+    if arch.name == "two-tower-retrieval":
+        B, T = batch["user_ids"].shape
+        inv = invs["items"]
+        return {"user": inv[: B * T].reshape(n_pod, -1),
+                "item": inv[B * T:].reshape(n_pod, -1)}
+    if arch.name == "baidu-ctr":
+        return {"sparse": invs["sparse"].reshape(n_pod, -1)}
+    raise KeyError(arch.name)
+
+
+def _recsys_embed_builder(arch: ArchSpec):
+    """(workings, inv_tree_for_this_pod, per-pod batch) -> embedding inputs."""
+    cfg = arch.model_cfg
+    name = arch.name
+
+    if name == "dlrm-mlperf":
+        def embed(workings, invs, bp):
+            embs = [jnp.take(workings[f"emb_{i:02d}"], invs[f"emb_{i:02d}"], axis=0)
+                    for i in range(cfg.n_sparse)]
+            return jnp.stack(embs, axis=1)
+        return embed
+
+    if name in ("din", "dien"):
+        def embed(workings, invs, bp):
+            B, T = bp["hist_ids"].shape
+            hist = jnp.take(workings["items"], invs["hist"], axis=0).reshape(B, T, -1)
+            target = jnp.take(workings["items"], invs["target"], axis=0)
+            return {"hist": hist, "target": target}
+        return embed
+
+    if name == "two-tower-retrieval":
+        def embed(workings, invs, bp):
+            B, T = bp["user_ids"].shape
+            flat = jnp.take(workings["items"], invs["user"], axis=0)
+            w = bp["user_mask"].reshape(-1)
+            seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), T)
+            pooled = jax.ops.segment_sum(flat * w[:, None], seg, num_segments=B)
+            cnt = jax.ops.segment_sum(w, seg, num_segments=B)
+            user = pooled / jnp.maximum(cnt, 1.0)[:, None]
+            item = jnp.take(workings["items"], invs["item"], axis=0)
+            return {"user": user, "item": item}
+        return embed
+
+    if name == "baidu-ctr":
+        def embed(workings, invs, bp):
+            B, nnz = bp["ids"].shape
+            seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
+                   + bp["field_ids"]).reshape(-1)
+            emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
+                * bp["mask"].reshape(-1)[:, None]
+            bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
+            return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
+        return embed
+
+    raise KeyError(name)
+
+
+def _recsys_loss_builder(arch: ArchSpec):
+    cfg = arch.model_cfg
+    name = arch.name
+    if name == "dlrm-mlperf":
+        def loss(dp, emb, bp, predict=False):
+            logits = rec.dlrm_forward_from_emb(dp, emb, bp, cfg)
+            return jax.nn.sigmoid(logits) if predict else rec.pointwise_loss(logits, bp["label"])
+        return loss
+    if name in ("din", "dien"):
+        def loss(dp, emb, bp, predict=False):
+            logits = rec.din_forward_from_emb(dp, emb, bp, cfg)
+            return jax.nn.sigmoid(logits) if predict else rec.pointwise_loss(logits, bp["label"])
+        return loss
+    if name == "two-tower-retrieval":
+        def loss(dp, emb, bp, predict=False):
+            if predict:
+                u, v = rec.two_tower_forward_from_emb(dp, emb, bp, cfg)
+                return jnp.sum(u * v, -1)
+            return rec.two_tower_loss(dp, emb, bp, cfg)
+        return loss
+    if name == "baidu-ctr":
+        def loss(dp, emb, bp, predict=False):
+            logits = rec.ctr_forward_from_emb(dp, emb, bp, cfg)
+            return jax.nn.sigmoid(logits) if predict else rec.pointwise_loss(logits, bp["label"])
+        return loss
+    raise KeyError(name)
+
+
+def _recsys_dense_flops(arch: ArchSpec, B: int) -> float:
+    """Useful FLOPs per forward for B instances (2*params_matmul*B)."""
+    cfg = arch.model_cfg
+    def mlp_f(sizes):
+        return sum(2 * a * b for a, b in zip(sizes[:-1], sizes[1:]))
+    if arch.name == "dlrm-mlperf":
+        f = mlp_f(list(cfg.bot_mlp)) + mlp_f([cfg.interact_dim] + list(cfg.top_mlp))
+        F = cfg.n_sparse + 1
+        f += 2 * F * F * cfg.embed_dim
+        return f * B
+    if arch.name in ("din", "dien"):
+        d, T = cfg.embed_dim, cfg.seq_len
+        h = cfg.gru_dim or d
+        f = T * mlp_f([4 * h] + list(cfg.attn_mlp) + [1])
+        f += mlp_f([2 * h + 2 * d] + list(cfg.mlp) + [1])
+        if cfg.gru_dim:
+            f += 2 * T * (2 * 3 * h * (d if False else h) + 3 * d * h)  # GRU+AUGRU
+        return f * B
+    if arch.name == "two-tower-retrieval":
+        return 2.0 * B * mlp_f([cfg.embed_dim] + list(cfg.tower_mlp))
+    if arch.name == "baidu-ctr":
+        d, F = cfg.embed_dim, cfg.n_fields
+        f = 3 * 2 * d * d * F + 2 * F * F * d * 2
+        f += mlp_f([F * d] + list(cfg.mlp))
+        return f * B
+    raise KeyError(arch.name)
+
+
+def _recsys_local_dedup_steps(arch: ArchSpec, shape: ShapeSpec, mesh,
+                              kcfg: KStepConfig,
+                              scfg: SparseAdagradConfig = SparseAdagradConfig()):
+    """§Perf variant (baidu-ctr): SHARD-LOCAL dedup — the paper's actual
+    Algorithm-1 design (each node dedups its own batch before pulling).
+
+    The baseline dedups the global id stream with one jnp.unique — a
+    distributed sort (log-rounds of cross-shard traffic).  Here each
+    ('pod','data') shard dedups its own slice with a vmapped unique (sort is
+    shard-local), pulls its own working rows, and scatters its own updates;
+    ids hot on several shards are simply pulled/pushed by each (the paper's
+    PS semantics — AdaGrad accumulates per-worker g^2, exactly like
+    Algorithm 1's push of per-node updates)."""
+    cfg = arch.model_cfg
+    assert arch.name == "baidu-ctr", "local_dedup wired for the paper's arch"
+    n_pod = mesh_pods(mesh)
+    ndp = data_ways(mesh)
+    B = shape.dims["batch"]
+    nnz = cfg.nnz_per_instance
+    cap_l = int(-(-(B // ndp) * nnz // 256) * 256)  # per-shard capacity
+    opt = KStepAdam(kcfg, n_pod, mesh=mesh)
+    sparse_opt = SparseAdagrad(scfg)
+    loss = _recsys_loss_builder(arch)
+    fns = _recsys_model_fns(arch)
+
+    dense_a = jax.eval_shape(lambda: fns["init_dense"](jax.random.key(0)))
+    dense_pod = _pod_abstract(dense_a, n_pod)
+    rows_p = -(-cfg.rows // mesh.size) * mesh.size
+    tables_a = {"sparse": SDS((rows_p, cfg.embed_dim), jnp.float32)}
+    accum_a = {"sparse": SDS((rows_p, cfg.embed_dim), jnp.float32)}
+    state_a = jax.eval_shape(opt.init, dense_pod)
+    batch_a = _recsys_batch(arch, B)
+
+    pod_e = "pod" if "pod" in mesh.axis_names else None
+    dense_sp = jax.tree.map(lambda x: P(pod_e, *([None] * (x.ndim - 1))), dense_pod)
+    table_sp = table_specs_sharding(tables_a, mesh)
+    state_sp = type(state_a)(
+        step=P(), m=dense_sp, v_local=dense_sp, v_hat=dense_sp,
+        ef=dense_sp if state_a.ef is not None else None,
+    )
+    batch_sp = batch_specs(batch_a, mesh)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def make(merge: bool):
+        def step(dense, tables, accum, batch, opt_state):
+            with sharding_ctx(mesh):
+                table = tables["sparse"]
+                # ---- shard-local dedup + pull
+                ids_s = batch["ids"].reshape(ndp, -1)              # (ndp, B/ndp*nnz)
+                ids_s = jax.lax.with_sharding_constraint(
+                    ids_s, NamedSharding(mesh, P(dp_axes, None)))
+                uids, inv = jax.vmap(
+                    lambda v: pull_working_set(v, cap_l))(ids_s)   # (ndp,cap_l),(ndp,n)
+                working = jax.vmap(lambda u: jnp.take(table, u, axis=0))(uids)
+                working = jax.lax.with_sharding_constraint(
+                    working, NamedSharding(mesh, P(dp_axes, None, None)))
+
+                def total_loss(dense_p, w):
+                    # regroup shards per pod: pod p owns groups [p*dpp,(p+1)*dpp)
+                    dpp = ndp // n_pod
+                    w_pod = w.reshape(n_pod, dpp * cap_l, cfg.embed_dim)
+                    inv_pod = (inv.reshape(n_pod, dpp, -1)
+                               + (jnp.arange(dpp, dtype=jnp.int32) * cap_l)[None, :, None]
+                               ).reshape(n_pod, -1)
+                    bp_pod = jax.tree.map(
+                        lambda x: x.reshape((n_pod, x.shape[0] // n_pod) + x.shape[1:]),
+                        batch,
+                    )
+
+                    def per_pod(dp, bp, wp, invp):
+                        Bp, nz = bp["ids"].shape
+                        seg = (jnp.arange(Bp, dtype=jnp.int32)[:, None] * cfg.n_fields
+                               + bp["field_ids"]).reshape(-1)
+                        emb = jnp.take(wp, invp, axis=0) \
+                            * bp["mask"].reshape(-1)[:, None]
+                        bags = jax.ops.segment_sum(
+                            emb, seg, num_segments=Bp * cfg.n_fields)
+                        emb = bags.reshape(Bp, cfg.n_fields, cfg.embed_dim)
+                        return loss(dp, emb, bp)
+
+                    losses = jax.vmap(per_pod)(dense_p, bp_pod, w_pod, inv_pod)
+                    return jnp.sum(losses), losses
+
+                (dg, wg), _ = jax.grad(total_loss, argnums=(0, 1), has_aux=True)(
+                    dense, working
+                )
+                wg = wg / n_pod
+                new_dense, new_state = opt.step(dense, dg, opt_state, merge=merge)
+                # ---- per-shard push (duplicate ids across shards scatter-add)
+                nt, na = sparse_opt.apply_rows(
+                    table, accum["sparse"],
+                    uids.reshape(-1), wg.reshape(-1, cfg.embed_dim),
+                )
+            return new_dense, {"sparse": nt}, {"sparse": na}, new_state
+        return step
+
+    flops = 3.0 * _recsys_dense_flops(arch, B)
+    args = (dense_pod, tables_a, accum_a, batch_a, state_a)
+    specs = (dense_sp, table_sp, table_sp, batch_sp, state_sp)
+    return {
+        "train_local": StepDef(
+            "train_local", make(False), args, specs, donate=(0, 1, 2, 4),
+            model_flops=flops, weight=(kcfg.k - 1) / kcfg.k,
+        ),
+        "train_merge": StepDef(
+            "train_merge", make(True), args, specs, donate=(0, 1, 2, 4),
+            model_flops=flops, weight=1.0 / kcfg.k,
+        ),
+    }
+
+
+def _recsys_routed_steps(arch: ArchSpec, shape: ShapeSpec, mesh,
+                         kcfg: KStepConfig,
+                         scfg: SparseAdagradConfig = SparseAdagradConfig()):
+    """§Perf iteration 3 (baidu-ctr): PS-routed pull/push via shard_map
+    all-to-alls (core/routed_embedding.py) — replaces GSPMD's value-blind
+    masked-gather + all-reduce (~930 MB/device/step) with explicit routing
+    (~tens of MB): every device dedups its own id slice, requests rows from
+    their hash-owning shards, and pushes fused AdaGrad updates back the same
+    route.  This is the paper's parameter-server data path, TPU-native."""
+    from repro.core import routed_embedding as RE
+
+    cfg = arch.model_cfg
+    assert arch.name == "baidu-ctr"
+    n_pod = mesh_pods(mesh)
+    B = shape.dims["batch"]
+    nnz = cfg.nnz_per_instance
+    n_sh = mesh.size
+    all_axes = tuple(mesh.axis_names)
+    n_dg = data_ways(mesh)            # data groups (pod x data)
+    mper = n_sh // n_dg               # model peers per group
+    per_dev = B * nnz // n_sh
+    cap_local = int(-(-per_dev // 128) * 128)
+    cap_route = max(32, int(-(-4 * cap_local // n_sh // 32) * 32))
+    rows_p = -(-cfg.rows // n_sh) * n_sh
+    dim = cfg.embed_dim
+    pull, push = RE.make_routed_pull_push(
+        mesh, rows_p // n_sh, dim, cap_local, cap_route, shard_axes=all_axes)
+
+    opt = KStepAdam(kcfg, n_pod, mesh=mesh)
+    loss = _recsys_loss_builder(arch)
+    fns = _recsys_model_fns(arch)
+    dense_a = jax.eval_shape(lambda: fns["init_dense"](jax.random.key(0)))
+    dense_pod = _pod_abstract(dense_a, n_pod)
+    tables_a = {"sparse": SDS((rows_p, dim), jnp.float32)}
+    accum_a = {"sparse": SDS((rows_p, dim), jnp.float32)}
+    state_a = jax.eval_shape(opt.init, dense_pod)
+    batch_a = _recsys_batch(arch, B)
+
+    pod_e = "pod" if "pod" in mesh.axis_names else None
+    dense_sp = jax.tree.map(lambda x: P(pod_e, *([None] * (x.ndim - 1))), dense_pod)
+    table_sp = {"sparse": P(all_axes, None)}
+    state_sp = type(state_a)(
+        step=P(), m=dense_sp, v_local=dense_sp, v_hat=dense_sp,
+        ef=dense_sp if state_a.ef is not None else None,
+    )
+    batch_sp = batch_specs(batch_a, mesh)
+    dpp = n_dg // n_pod
+
+    def make(merge: bool):
+        def step(dense, tables, accum, batch, opt_state):
+            with sharding_ctx(mesh):
+                # per-device dedup of this device's id slice
+                ids_s = batch["ids"].reshape(n_sh, per_dev)
+                ids_s = jax.lax.with_sharding_constraint(
+                    ids_s, NamedSharding(mesh, P(all_axes, None)))
+                uids, inv = jax.vmap(
+                    lambda v: pull_working_set(v, cap_local))(ids_s)
+                # ---- routed PULL (a2a): rows move once, to their requester
+                working, _, drop_pull = pull(tables["sparse"], uids.reshape(-1))
+                # regroup per data group: gather over model peers only (~MBs)
+                w_g = working.reshape(n_dg, mper * cap_local, dim)
+                w_g = jax.lax.with_sharding_constraint(
+                    w_g, NamedSharding(
+                        mesh, P(("pod", "data") if pod_e else ("data",), None, None)))
+                inv_g = (inv.reshape(n_dg, mper, per_dev)
+                         + (jnp.arange(mper, dtype=jnp.int32) * cap_local)[None, :, None]
+                         ).reshape(n_dg, mper * per_dev)
+
+                def total_loss(dense_p, w):
+                    wp = w.reshape(n_pod, dpp, mper * cap_local, dim)
+                    ip = inv_g.reshape(n_pod, dpp, -1)
+                    bp = jax.tree.map(
+                        lambda x: x.reshape((n_pod, dpp, x.shape[0] // n_dg)
+                                            + x.shape[1:]), batch)
+
+                    def group_loss(dp, bg, wg1, ig1):
+                        Bg, nz = bg["ids"].shape
+                        seg = (jnp.arange(Bg, dtype=jnp.int32)[:, None] * cfg.n_fields
+                               + bg["field_ids"]).reshape(-1)
+                        emb = jnp.take(wg1, ig1, axis=0) \
+                            * bg["mask"].reshape(-1)[:, None]
+                        bags = jax.ops.segment_sum(
+                            emb, seg, num_segments=Bg * cfg.n_fields)
+                        emb = bags.reshape(Bg, cfg.n_fields, dim)
+                        return loss(dp, emb, bg)
+
+                    def per_pod(dp, bpp, wpp, ipp):
+                        return jnp.sum(jax.vmap(
+                            lambda bg, wg1, ig1: group_loss(dp, bg, wg1, ig1)
+                        )(bpp, wpp, ipp))
+
+                    losses = jax.vmap(per_pod)(dense_p, bp, wp, ip)
+                    return jnp.sum(losses), losses
+
+                (dg_, wg_), _ = jax.grad(total_loss, argnums=(0, 1), has_aux=True)(
+                    dense, w_g
+                )
+                wg_ = (wg_ / n_pod).reshape(n_sh * cap_local, dim)
+                new_dense, new_state = opt.step(dense, dg_, opt_state, merge=merge)
+                # ---- routed PUSH (a2a) + fused shard-local AdaGrad
+                nt, na, drop_push = push(
+                    tables["sparse"], accum["sparse"], uids.reshape(-1), wg_,
+                    scfg.lr, scfg.eps,
+                )
+            return new_dense, {"sparse": nt}, {"sparse": na}, new_state
+        return step
+
+    flops = 3.0 * _recsys_dense_flops(arch, B)
+    args = (dense_pod, tables_a, accum_a, batch_a, state_a)
+    specs = (dense_sp, table_sp, table_sp, batch_sp, state_sp)
+    return {
+        "train_local": StepDef(
+            "train_local", make(False), args, specs, donate=(0, 1, 2, 4),
+            model_flops=flops, weight=(kcfg.k - 1) / kcfg.k,
+        ),
+        "train_merge": StepDef(
+            "train_merge", make(True), args, specs, donate=(0, 1, 2, 4),
+            model_flops=flops, weight=1.0 / kcfg.k,
+        ),
+    }
+
+
+def _recsys_train_steps(arch: ArchSpec, shape: ShapeSpec, mesh, kcfg: KStepConfig,
+                        scfg: SparseAdagradConfig = SparseAdagradConfig()):
+    cfg = arch.model_cfg
+    n_pod = mesh_pods(mesh)
+    B = shape.dims["batch"]
+    capacity = _recsys_capacity(arch, B)
+    opt = KStepAdam(kcfg, n_pod, mesh=mesh)
+    sparse_opt = SparseAdagrad(scfg)
+    embed = _recsys_embed_builder(arch)
+    loss = _recsys_loss_builder(arch)
+    fns = _recsys_model_fns(arch)
+
+    dense_a = jax.eval_shape(lambda: fns["init_dense"](jax.random.key(0)))
+    dense_pod = _pod_abstract(dense_a, n_pod)
+    # Pad table rows to the mesh size: jit input shardings require divisible
+    # dims, and an unsharded 100GB+ table replica would OOM every chip.
+    tables_a = {
+        n: SDS((-(-s.rows // mesh.size) * mesh.size, s.dim), jnp.float32)
+        for n, s in fns["tables"].items()
+    }
+    accum_a = jax.tree.map(lambda t: SDS(t.shape, jnp.float32), tables_a)
+    state_a = jax.eval_shape(opt.init, dense_pod)
+    batch_a = _recsys_batch(arch, B)
+
+    pod_e = "pod" if "pod" in mesh.axis_names else None
+    dense_sp = jax.tree.map(lambda x: P(pod_e, *([None] * (x.ndim - 1))), dense_pod)
+    table_sp = table_specs_sharding(tables_a, mesh)
+    state_sp = type(state_a)(
+        step=P(), m=dense_sp, v_local=dense_sp, v_hat=dense_sp,
+        ef=dense_sp if state_a.ef is not None else None,
+    )
+    batch_sp = batch_specs(batch_a, mesh)
+
+    def make(merge: bool):
+        def step(dense, tables, accum, batch, opt_state):
+            with sharding_ctx(mesh):
+                flat_ids = _recsys_flat_ids(arch, batch)
+                pulls = {}
+                for name in sorted(tables):
+                    uids, inv = pull_working_set(flat_ids[name], capacity)
+                    pulls[name] = (uids, inv, jnp.take(tables[name], uids, axis=0))
+                workings = {n: p[2] for n, p in pulls.items()}
+                invs_podded = _recsys_split_inv(
+                    arch, {n: p[1] for n, p in pulls.items()}, batch, n_pod
+                )
+                bp_pod = jax.tree.map(
+                    lambda x: x.reshape((n_pod, x.shape[0] // n_pod) + x.shape[1:]),
+                    batch,
+                )
+
+                def total_loss(dense_p, w):
+                    def per_pod(dp, bp, inv_tree):
+                        emb = embed(w, inv_tree, bp)
+                        return loss(dp, emb, bp)
+                    losses = jax.vmap(per_pod)(dense_p, bp_pod, invs_podded)
+                    return jnp.sum(losses), losses
+
+                (dg, wg), _ = jax.grad(total_loss, argnums=(0, 1), has_aux=True)(
+                    dense, workings
+                )
+                wg = jax.tree.map(lambda g: g / n_pod, wg)
+                new_dense, new_state = opt.step(dense, dg, opt_state, merge=merge)
+                new_tables, new_accum = {}, {}
+                for name in sorted(tables):
+                    nt, na = sparse_opt.apply_rows(
+                        tables[name], accum[name], pulls[name][0], wg[name]
+                    )
+                    new_tables[name] = nt
+                    new_accum[name] = na
+            return new_dense, new_tables, new_accum, new_state
+        return step
+
+    flops = 3.0 * _recsys_dense_flops(arch, B)
+    args = (dense_pod, tables_a, accum_a, batch_a, state_a)
+    specs = (dense_sp, table_sp, jax.tree.map(lambda s: s, table_sp), batch_sp, state_sp)
+    return {
+        "train_local": StepDef(
+            "train_local", make(False), args, specs, donate=(0, 1, 2, 4),
+            model_flops=flops, weight=(kcfg.k - 1) / kcfg.k,
+        ),
+        "train_merge": StepDef(
+            "train_merge", make(True), args, specs, donate=(0, 1, 2, 4),
+            model_flops=flops, weight=1.0 / kcfg.k,
+        ),
+    }
+
+
+def _recsys_serve_steps(arch: ArchSpec, shape: ShapeSpec, mesh):
+    cfg = arch.model_cfg
+    fns = _recsys_model_fns(arch)
+    embed = _recsys_embed_builder(arch)
+    loss = _recsys_loss_builder(arch)
+    dense_a = jax.eval_shape(lambda: fns["init_dense"](jax.random.key(0)))
+    tables_a = {
+        n: SDS((-(-s.rows // mesh.size) * mesh.size, s.dim), jnp.float32)
+        for n, s in fns["tables"].items()
+    }
+    dense_sp = jax.tree.map(lambda x: P(*([None] * x.ndim)), dense_a)
+    table_sp = table_specs_sharding(tables_a, mesh)
+
+    if shape.kind == "retrieval":
+        C = shape.dims["n_candidates"]
+        B = shape.dims["batch"]
+        if arch.name == "two-tower-retrieval":
+            batch_a = {
+                "user_ids": SDS((B, cfg.user_hist_len), jnp.int32),
+                "user_mask": SDS((B, cfg.user_hist_len), jnp.float32),
+                "cand_ids": SDS((C,), jnp.int32),
+            }
+            batch_sp = {"user_ids": P(None, None), "user_mask": P(None, None),
+                        "cand_ids": P(shard1d(C, mesh))}
+
+            def step(dense, tables, batch):
+                with sharding_ctx(mesh):
+                    emb = rec.two_tower_embed_batch(
+                        tables, {"user_ids": batch["user_ids"],
+                                 "user_mask": batch["user_mask"],
+                                 "item_id": batch["cand_ids"][:1]}, cfg)
+                    return rec.two_tower_score_candidates(
+                        dense, tables, emb["user"], batch["cand_ids"], cfg)
+
+            f = _recsys_dense_flops(arch, C)  # item tower dominates
+            return {"serve_retrieval": StepDef(
+                "serve_retrieval", step, (dense_a, tables_a, batch_a),
+                (dense_sp, table_sp, batch_sp), model_flops=f,
+            )}
+        # din/dien/dlrm/baidu-ctr: 1 user context scored against C candidates
+        batch_a = _recsys_batch(arch, C)
+        batch_sp = batch_specs(batch_a, mesh)
+
+        def step(dense, tables, batch):
+            with sharding_ctx(mesh):
+                if arch.name == "dlrm-mlperf":
+                    emb = rec.dlrm_embed_batch(tables, batch, cfg)
+                elif arch.name in ("din", "dien"):
+                    emb = rec.din_embed_batch(tables, batch, cfg)
+                else:
+                    emb = rec.ctr_embed_batch(tables, batch, cfg)
+                return loss(dense, emb, batch, predict=True)
+
+        return {"serve_retrieval": StepDef(
+            "serve_retrieval", step, (dense_a, tables_a, batch_a),
+            (dense_sp, table_sp, batch_sp),
+            model_flops=_recsys_dense_flops(arch, C),
+        )}
+
+    B = shape.dims["batch"]
+    batch_a = _recsys_batch(arch, B)
+    batch_sp = batch_specs(batch_a, mesh)
+
+    def step(dense, tables, batch):
+        with sharding_ctx(mesh):
+            if arch.name == "dlrm-mlperf":
+                emb = rec.dlrm_embed_batch(tables, batch, cfg)
+            elif arch.name in ("din", "dien"):
+                emb = rec.din_embed_batch(tables, batch, cfg)
+            elif arch.name == "two-tower-retrieval":
+                emb = rec.two_tower_embed_batch(tables, batch, cfg)
+            else:
+                emb = rec.ctr_embed_batch(tables, batch, cfg)
+            return loss(dense, emb, batch, predict=True)
+
+    return {"serve": StepDef(
+        "serve", step, (dense_a, tables_a, batch_a),
+        (dense_sp, table_sp, batch_sp),
+        model_flops=_recsys_dense_flops(arch, B),
+    )}
+
+
+# ================================================================ assembly
+def _smoke_shape(arch: ArchSpec, shape: ShapeSpec) -> ShapeSpec:
+    """Shrink a shape spec to CPU-testable dims (same kind/topology)."""
+    d = dict(shape.dims)
+    if arch.family == "lm":
+        d["seq"] = min(d["seq"], 64)
+        d["batch"] = min(d["batch"], 8)
+    elif arch.family == "gnn":
+        for k, v in [("n_nodes", 64), ("n_edges", 256), ("batch_nodes", 8),
+                     ("fanout0", 3), ("fanout1", 2), ("d_feat", 8),
+                     ("n_classes", 3), ("batch", 4)]:
+            if k in d:
+                d[k] = min(d[k], v)
+    else:
+        d["batch"] = min(d["batch"], 16)
+        if "n_candidates" in d:
+            d["n_candidates"] = min(d["n_candidates"], 512)
+    return dataclasses.replace(shape, dims=d, skip=None)
+
+
+def build_cell(
+    arch_name: str, shape_name: str, mesh,
+    kcfg: Optional[KStepConfig] = None,
+    smoke: bool = False,
+    lm_style: str = "tp_fsdp",
+    gin_style: str = "sharded_nodes",
+    recsys_style: str = "global_dedup",
+) -> Cell:
+    arch = get_arch(arch_name)
+    shape = arch.shapes[shape_name]
+    kcfg = kcfg or KStepConfig(k=20, merge="two_phase")
+    if smoke:
+        arch = dataclasses.replace(arch, model_cfg=arch.smoke_cfg)
+        shape = _smoke_shape(arch, shape)
+    if shape.skip:
+        return Cell(arch_name, shape_name, shape.kind, {}, skip=shape.skip)
+    if arch.family == "lm":
+        if shape.kind == "train":
+            steps = _lm_train_steps(arch, shape, mesh, kcfg, style=lm_style)
+        else:
+            steps = _lm_serve_steps(arch, shape, mesh)
+    elif arch.family == "gnn":
+        steps = _gin_steps(arch, shape, mesh, kcfg, style=gin_style)
+    else:
+        if shape.kind == "train":
+            if recsys_style == "local_dedup" and arch.name == "baidu-ctr":
+                steps = _recsys_local_dedup_steps(arch, shape, mesh, kcfg)
+            elif recsys_style == "routed" and arch.name == "baidu-ctr":
+                steps = _recsys_routed_steps(arch, shape, mesh, kcfg)
+            else:
+                steps = _recsys_train_steps(arch, shape, mesh, kcfg)
+        else:
+            steps = _recsys_serve_steps(arch, shape, mesh)
+    return Cell(arch_name, shape_name, shape.kind, steps)
+
+
+def all_cells() -> list:
+    """The assigned 40 (arch x shape) pairs (+ the paper's own arch)."""
+    from repro.configs import list_archs
+    out = []
+    for a in list_archs():
+        spec = get_arch(a)
+        for s in spec.shapes:
+            out.append((a, s))
+    return out

@@ -1,0 +1,1 @@
+"""Model zoo: LM transformer family, GIN, and the recsys/CTR family."""

@@ -1,0 +1,198 @@
+"""Shared model building blocks + activation-sharding hints.
+
+``sharding_ctx(mesh)`` installs a mesh for the duration of a trace; inside it
+``shard_hint(x, spec...)`` lowers to ``with_sharding_constraint`` so the same
+model code runs unannotated on one CPU device and fully annotated under the
+production mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[jax.sharding.Mesh], exclude: tuple = ()):
+    """Install a mesh for shard_hint.  ``exclude`` names mesh axes that are
+    MANUAL in the current region (inside a shard_map over them) — hints drop
+    those entries since constraints may only reference auto axes there."""
+    prev = getattr(_TLS, "mesh", None)
+    prev_ex = getattr(_TLS, "exclude", ())
+    _TLS.mesh = mesh
+    _TLS.exclude = tuple(exclude)
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+        _TLS.exclude = prev_ex
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    return getattr(_TLS, "mesh", None)
+
+
+def shard_hint(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """Constrain x to PartitionSpec(*spec) if a mesh is installed.
+
+    Axis names absent from the installed mesh (or marked manual via
+    sharding_ctx(exclude=...)) are dropped from the spec, so hints written
+    for the multi-pod mesh degrade gracefully on smaller ones.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    excluded = getattr(_TLS, "exclude", ())
+    names = tuple(a for a in mesh.axis_names if a not in excluded)
+
+    def _filter(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    fspec = P(*[_filter(e) for e in spec])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, fspec))
+
+
+# ------------------------------------------------------------------- layers
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # Variance in f32, application in the compute dtype: keeps the backward
+    # residual-stream cotangent (and its TP all-reduce) in bf16 instead of
+    # promoting the whole gradient chain to f32.
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+def sharded_embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """``table[ids]`` whose BACKWARD scatter stays sharded.
+
+    The vanilla VJP of ``jnp.take`` scatters into a zeros-like table; GSPMD
+    frequently materializes that scatter unpartitioned (a full (V, D) f32
+    buffer per device).  This custom VJP pins the cotangent scatter to the
+    embedding-dim sharding of the primal table via ``shard_hint``.
+    """
+    return _embed_lookup(tuple(table.shape), str(table.dtype), table, ids)
+
+
+from functools import partial as _partial  # noqa: E402
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _embed_lookup(tshape, tdtype, table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def _embed_lookup_fwd(tshape, tdtype, table, ids):
+    return jnp.take(table, ids, axis=0), ids
+
+
+def _embed_lookup_bwd(tshape, tdtype, ids, g):
+    flat_ids = ids.reshape(-1)
+    # Constrain operand AND updates to the same embedding-dim sharding so
+    # the SPMD partitioner keeps the scatter shard-local on dim 1.
+    flat_g = shard_hint(g.reshape(-1, tshape[-1]), None, ("data", "model"))
+    zeros = shard_hint(jnp.zeros(tshape, tdtype), None, ("data", "model"))
+    dt = zeros.at[flat_ids].add(flat_g.astype(tdtype))
+    dt = shard_hint(dt, None, ("data", "model"))
+    return dt, None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def he_init(key, shape, dtype=jnp.float32, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape, jnp.float32) * (2.0 / fan) ** 0.5).astype(dtype)
+
+
+def glorot_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    fan_out = shape[-1]
+    lim = (6.0 / (fan_in + fan_out)) ** 0.5
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim).astype(dtype)
+
+
+def mlp_init(key, sizes: Sequence[int], dtype=jnp.float32, bias: bool = True):
+    """[(w, b)] stack for a plain MLP with given layer sizes."""
+    params = []
+    for i in range(len(sizes) - 1):
+        kw = jax.random.fold_in(key, i)
+        w = he_init(kw, (sizes[i], sizes[i + 1]), dtype)
+        b = jnp.zeros((sizes[i + 1],), dtype) if bias else None
+        params.append({"w": w, "b": b} if bias else {"w": w})
+    return params
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act=None):
+    n = len(params)
+    for i, layer in enumerate(params):
+        x = x @ layer["w"]
+        if "b" in layer and layer["b"] is not None:
+            x = x + layer["b"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- losses
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Token-level CE; logits (..., V) any dtype, computed in f32.
+
+    The gold logit is extracted with an iota-compare + masked reduce instead
+    of ``take_along_axis`` — a gather over a vocab-sharded logits tensor
+    would force GSPMD to all-gather the full (tokens, V) array; the masked
+    reduce stays element-wise over the shard and reduces with a tiny psum.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(iota == labels[..., None], shifted, 0.0), axis=-1
+    ) + m[..., 0]
+    return logz - gold
+
+
+def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))

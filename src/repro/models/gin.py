@@ -1,0 +1,132 @@
+"""GIN (Graph Isomorphism Network, Xu et al. 2019) in the segment-sum regime.
+
+JAX sparse is BCOO-only, so message passing is an edge-index scatter:
+``agg[v] = sum_{(u,v) in E} h[u]`` via ``jax.ops.segment_sum`` — this IS the
+SpMM kernel of the GCN/GIN family, expressed TPU-natively (gathers + scatter
+adds partition cleanly over a row-sharded node state under GSPMD).
+
+Supports: full-graph training (node classification), sampled minibatch
+(seed-node loss over a fanout-sampled block, see data/graph_sampler.py) and
+batched disjoint small graphs with segment readout (molecule regime).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import he_init, shard_hint, softmax_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str = "gin"
+    n_layers: int = 5
+    d_in: int = 1433
+    d_hidden: int = 64
+    n_classes: int = 7
+    train_eps: bool = True        # eps=learnable
+    readout: str = "node"         # node | graph (segment readout over graph_id)
+    dtype: Any = jnp.float32
+    # §Perf knobs: node_shard=False replicates the node state in-pod (edges
+    # stay sharded; the per-layer scatter reduces with ONE all-reduce instead
+    # of per-edge cross-shard gathers); message_dtype=bf16 halves its wire.
+    node_shard: bool = True
+    message_dtype: Any = None     # None = dtype
+    # Exact rewrite: W1 commutes with the sum aggregator, so when the input
+    # width exceeds d_hidden, project BEFORE message passing — gathers and
+    # scatters then move d_hidden-wide rows instead of d_in-wide ones.
+    pre_project: bool = False
+
+
+def init_params(rng: jax.Array, cfg: GINConfig) -> Dict[str, Any]:
+    params: Dict[str, Any] = {"eps": jnp.zeros((cfg.n_layers,), jnp.float32), "layers": []}
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, i))
+        params["layers"].append({
+            "w1": he_init(k1, (d_prev, cfg.d_hidden), cfg.dtype),
+            "b1": jnp.zeros((cfg.d_hidden,), cfg.dtype),
+            "w2": he_init(k2, (cfg.d_hidden, cfg.d_hidden), cfg.dtype),
+            "b2": jnp.zeros((cfg.d_hidden,), cfg.dtype),
+        })
+        d_prev = cfg.d_hidden
+    ko = jax.random.fold_in(rng, 999)
+    params["out"] = he_init(ko, (cfg.d_hidden, cfg.n_classes), cfg.dtype)
+    return params
+
+
+def forward(
+    params,
+    x: jnp.ndarray,          # (N, d_in) node features
+    edge_src: jnp.ndarray,   # (E,) int32
+    edge_dst: jnp.ndarray,   # (E,) int32
+    cfg: GINConfig,
+    edge_mask: Optional[jnp.ndarray] = None,   # (E,) bool — padding edges
+    graph_ids: Optional[jnp.ndarray] = None,   # (N,) for graph readout
+    num_graphs: int = 0,
+) -> jnp.ndarray:
+    N = x.shape[0]
+    h = x.astype(cfg.dtype)
+    node_spec = (("pod", "data"), None) if cfg.node_shard else (None, None)
+    mdt = cfg.message_dtype or cfg.dtype
+    for i, lp in enumerate(params["layers"]):
+        pre = cfg.pre_project and h.shape[-1] > lp["w1"].shape[-1]
+        src_feat = (h @ lp["w1"]).astype(mdt) if pre else h.astype(mdt)
+        msg = jnp.take(src_feat, edge_src, axis=0)              # gather
+        if edge_mask is not None:
+            msg = msg * edge_mask[:, None].astype(msg.dtype)
+        agg = jax.ops.segment_sum(msg, edge_dst, num_segments=N)  # scatter-add
+        agg = shard_hint(agg, *node_spec)
+        if pre:
+            # W1((1+eps)h + sum_j h_j) == (1+eps)(h W1) + sum_j (h_j W1)
+            z = ((1.0 + params["eps"][i]) * src_feat.astype(jnp.float32)
+                 + agg.astype(jnp.float32)).astype(cfg.dtype)
+            z = jax.nn.relu(z + lp["b1"])
+        else:
+            z = ((1.0 + params["eps"][i]) * h.astype(jnp.float32)
+                 + agg.astype(jnp.float32)).astype(cfg.dtype)
+            z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
+        h = jax.nn.relu(z @ lp["w2"] + lp["b2"])
+        h = shard_hint(h, *node_spec)
+    if cfg.readout == "graph":
+        assert graph_ids is not None and num_graphs > 0
+        pooled = jax.ops.segment_sum(h, graph_ids, num_segments=num_graphs)
+        return pooled @ params["out"]
+    return h @ params["out"]
+
+
+def loss_fn(params, batch, cfg: GINConfig) -> jnp.ndarray:
+    """batch: x, edge_src, edge_dst, labels, optional edge_mask/node_mask
+    (node_mask restricts the loss to seed/valid nodes), optional graph_ids."""
+    if cfg.readout == "graph":
+        logits = forward(
+            params, batch["x"], batch["edge_src"], batch["edge_dst"], cfg,
+            edge_mask=batch.get("edge_mask"),
+            graph_ids=batch["graph_ids"], num_graphs=batch["labels"].shape[0],
+        )
+        ce = softmax_cross_entropy(logits, batch["labels"])
+        return jnp.mean(ce)
+    logits = forward(
+        params, batch["x"], batch["edge_src"], batch["edge_dst"], cfg,
+        edge_mask=batch.get("edge_mask"),
+    )
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    mask = batch.get("node_mask")
+    if mask is not None:
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+def dense_reference_forward(params, x, adj: jnp.ndarray, cfg: GINConfig):
+    """Oracle using a dense adjacency matrix — tests only."""
+    h = x.astype(cfg.dtype)
+    for i, lp in enumerate(params["layers"]):
+        agg = adj.T.astype(jnp.float32) @ h.astype(jnp.float32)
+        z = ((1.0 + params["eps"][i]) * h.astype(jnp.float32) + agg).astype(cfg.dtype)
+        z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
+        h = jax.nn.relu(z @ lp["w2"] + lp["b2"])
+    return h @ params["out"]

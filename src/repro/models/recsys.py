@@ -1,0 +1,355 @@
+"""Recsys/CTR family: DLRM, DIN, DIEN (AUGRU), two-tower retrieval, and the
+paper's own CTR model (giant multi-hot embedding -> field attention -> MLP).
+
+These are the archs the paper's framework was built for: huge sparse
+embedding tables trained with every-step sparse AdaGrad through the
+working-set pull path (core/embedding_engine.py), and dense towers trained
+with k-step Adam.  All models expose the same two-stage API:
+
+    embed_batch(tables, batch, cfg)      -> pooled embedding features (gathers)
+    forward_from_emb(dense, emb, batch)  -> logits
+
+so the trainer can route the lookup through pulled working sets and take
+gradients w.r.t. the compact pulled rows only (the PS pull/push of Alg. 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding_engine import TableSpec, embedding_bag
+from repro.models.common import (
+    bce_with_logits,
+    he_init,
+    mlp_apply,
+    mlp_init,
+    shard_hint,
+)
+
+# Criteo-1TB per-feature cardinalities (MLPerf DLRM reference).
+CRITEO_ROWS = [
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+]
+
+
+# ======================================================================= DLRM
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 128
+    bot_mlp: Sequence[int] = (13, 512, 256, 128)
+    top_mlp: Sequence[int] = (1024, 1024, 512, 256, 1)
+    rows: Sequence[int] = tuple(CRITEO_ROWS)
+    dtype: Any = jnp.float32
+
+    @property
+    def interact_dim(self) -> int:
+        n = self.n_sparse + 1
+        return n * (n - 1) // 2 + self.embed_dim
+
+
+def dlrm_table_specs(cfg: DLRMConfig) -> Dict[str, TableSpec]:
+    return {
+        f"emb_{i:02d}": TableSpec(f"emb_{i:02d}", rows=cfg.rows[i], dim=cfg.embed_dim)
+        for i in range(cfg.n_sparse)
+    }
+
+
+def dlrm_init_dense(rng: jax.Array, cfg: DLRMConfig):
+    kb, kt = jax.random.split(rng)
+    return {
+        "bot": mlp_init(kb, list(cfg.bot_mlp), cfg.dtype),
+        "top": mlp_init(kt, [cfg.interact_dim] + list(cfg.top_mlp), cfg.dtype),
+    }
+
+
+def dot_interaction(feats: jnp.ndarray) -> jnp.ndarray:
+    """feats (B, F, D) -> lower-triangle pairwise dots (B, F*(F-1)/2)."""
+    B, F, D = feats.shape
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    li, lj = jnp.tril_indices(F, k=-1)
+    return z[:, li, lj]
+
+
+def dlrm_embed_batch(tables, batch, cfg: DLRMConfig) -> jnp.ndarray:
+    """sparse_ids (B, 26) single-hot -> (B, 26, D)."""
+    ids = batch["sparse_ids"]
+    embs = [jnp.take(tables[f"emb_{i:02d}"], ids[:, i], axis=0) for i in range(cfg.n_sparse)]
+    return jnp.stack(embs, axis=1)
+
+
+def dlrm_forward_from_emb(dense, emb, batch, cfg: DLRMConfig) -> jnp.ndarray:
+    x = mlp_apply(dense["bot"], batch["dense"].astype(cfg.dtype), act=jax.nn.relu)
+    x = shard_hint(x, ("pod", "data"), None)
+    feats = jnp.concatenate([x[:, None, :], emb.astype(cfg.dtype)], axis=1)  # (B,27,D)
+    inter = dot_interaction(feats)
+    top_in = jnp.concatenate([x, inter], axis=-1)
+    return mlp_apply(dense["top"], top_in, act=jax.nn.relu)[:, 0]
+
+
+# ==================================================================== DIN/DIEN
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: Sequence[int] = (80, 40)
+    mlp: Sequence[int] = (200, 80)
+    item_vocab: int = 2_000_000
+    gru_dim: int = 0            # DIEN: 108; 0 disables the GRU/AUGRU stage
+    dtype: Any = jnp.float32
+
+
+def din_table_specs(cfg: DINConfig) -> Dict[str, TableSpec]:
+    return {"items": TableSpec("items", rows=cfg.item_vocab, dim=cfg.embed_dim)}
+
+
+def din_init_dense(rng: jax.Array, cfg: DINConfig):
+    d = cfg.embed_dim
+    k = jax.random.split(rng, 8)
+    params = {
+        "att": mlp_init(k[0], [4 * (cfg.gru_dim or d)] + list(cfg.attn_mlp) + [1], cfg.dtype),
+        "mlp": mlp_init(
+            k[1], [(cfg.gru_dim or d) * 2 + 2 * d] + list(cfg.mlp) + [1], cfg.dtype
+        ),
+    }
+    if cfg.gru_dim:
+        h = cfg.gru_dim
+        params["gru"] = {
+            "wx": he_init(k[2], (d, 3 * h), cfg.dtype),
+            "wh": he_init(k[3], (h, 3 * h), cfg.dtype),
+            "b": jnp.zeros((3 * h,), cfg.dtype),
+        }
+        params["augru"] = {
+            "wx": he_init(k[4], (h, 3 * h), cfg.dtype),
+            "wh": he_init(k[5], (h, 3 * h), cfg.dtype),
+            "b": jnp.zeros((3 * h,), cfg.dtype),
+        }
+        params["tproj"] = he_init(k[6], (d, h), cfg.dtype)
+    return params
+
+
+def _gru_scan(p, xs, h0, att: Optional[jnp.ndarray] = None):
+    """GRU over time; with ``att`` (T, B) the update gate is attention-scaled
+    (AUGRU, Zhou et al. 2019).  xs: (T, B, d) -> (T, B, h), final h."""
+    H = p["wh"].shape[0]
+
+    def cell(h, inp):
+        x, a = inp
+        gx = x @ p["wx"] + p["b"]
+        gh = h @ p["wh"]
+        xr, xz, xn = jnp.split(gx, 3, axis=-1)
+        hr, hz, hn = jnp.split(gh, 3, axis=-1)
+        r = jax.nn.sigmoid(xr + hr)
+        z = jax.nn.sigmoid(xz + hz)   # update gate: weight of the NEW state
+        n = jnp.tanh(xn + r * hn)
+        if a is not None:
+            # AUGRU (DIEN eq. 5): u~_t = a_t * u_t — attention scales how much
+            # of the candidate is written; a=0 leaves the hidden state frozen.
+            z = a[:, None] * z
+        h_new = (1.0 - z) * h + z * n
+        return h_new, h_new
+
+    a_seq = att if att is not None else jnp.zeros((xs.shape[0],), xs.dtype)
+    inputs = (xs, att) if att is not None else (xs, None)
+    if att is None:
+        h_final, hs = jax.lax.scan(lambda h, x: cell(h, (x, None)), h0, xs)
+    else:
+        h_final, hs = jax.lax.scan(cell, h0, (xs, att))
+    return hs, h_final
+
+
+def din_attention(dense, hist: jnp.ndarray, target: jnp.ndarray, mask: jnp.ndarray):
+    """hist (B,T,d), target (B,d) -> attention weights (B,T) (masked softmax)."""
+    B, T, d = hist.shape
+    tt = jnp.broadcast_to(target[:, None, :], hist.shape)
+    feat = jnp.concatenate([hist, tt, hist - tt, hist * tt], axis=-1)
+    scores = mlp_apply(dense["att"], feat, act=jax.nn.sigmoid)[..., 0]  # (B,T)
+    scores = jnp.where(mask > 0, scores, -1e30)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def din_embed_batch(tables, batch, cfg: DINConfig):
+    hist = jnp.take(tables["items"], batch["hist_ids"], axis=0)   # (B,T,d)
+    target = jnp.take(tables["items"], batch["target_id"], axis=0)  # (B,d)
+    return {"hist": hist, "target": target}
+
+
+def din_forward_from_emb(dense, emb, batch, cfg: DINConfig) -> jnp.ndarray:
+    hist, target = emb["hist"].astype(cfg.dtype), emb["target"].astype(cfg.dtype)
+    mask = batch["hist_mask"].astype(cfg.dtype)                   # (B,T)
+    if cfg.gru_dim:
+        # DIEN: interest extraction GRU -> attention -> AUGRU evolution.
+        xs = (hist * mask[..., None]).transpose(1, 0, 2)          # (T,B,d)
+        h0 = jnp.zeros((hist.shape[0], cfg.gru_dim), cfg.dtype)
+        states, _ = _gru_scan(dense["gru"], xs, h0)               # (T,B,h)
+        t_h = target @ dense["tproj"]                             # (B,h)
+        att_in = states.transpose(1, 0, 2)                        # (B,T,h)
+        tt = jnp.broadcast_to(t_h[:, None, :], att_in.shape)
+        feat = jnp.concatenate([att_in, tt, att_in - tt, att_in * tt], axis=-1)
+        scores = mlp_apply(dense["att"], feat, act=jax.nn.sigmoid)[..., 0]
+        scores = jnp.where(mask > 0, scores, -1e30)
+        att = jax.nn.softmax(scores, axis=-1)                     # (B,T)
+        _, final = _gru_scan(dense["augru"], states, h0, att=att.T)
+        pooled = final                                            # (B,h)
+        rep = jnp.concatenate([pooled, t_h, target, target * 0 + jnp.mean(hist * mask[..., None], 1)], -1)
+    else:
+        att = din_attention(dense, hist, target, mask)
+        att_hist = jnp.einsum("bt,btd->bd", att, hist)
+        sum_pool = jnp.sum(hist * mask[..., None], axis=1)
+        rep = jnp.concatenate([att_hist, target, att_hist * target, sum_pool], axis=-1)
+    return mlp_apply(dense["mlp"], rep, act=jax.nn.relu)[:, 0]
+
+
+# ================================================================== two-tower
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two_tower"
+    embed_dim: int = 256
+    tower_mlp: Sequence[int] = (1024, 512, 256)
+    user_hist_len: int = 50
+    item_vocab: int = 5_000_000
+    temperature: float = 0.05
+    # In-batch negatives are capped at this pool size: full BxB softmax at
+    # production batch (65k) would materialize a 17 TB logits matrix.
+    neg_pool: int = 4096
+    dtype: Any = jnp.float32
+
+
+def two_tower_table_specs(cfg: TwoTowerConfig) -> Dict[str, TableSpec]:
+    return {"items": TableSpec("items", rows=cfg.item_vocab, dim=cfg.embed_dim)}
+
+
+def two_tower_init_dense(rng: jax.Array, cfg: TwoTowerConfig):
+    ku, ki = jax.random.split(rng)
+    sizes = [cfg.embed_dim] + list(cfg.tower_mlp)
+    return {"user": mlp_init(ku, sizes, cfg.dtype), "item": mlp_init(ki, sizes, cfg.dtype)}
+
+
+def two_tower_embed_batch(tables, batch, cfg: TwoTowerConfig):
+    T = batch["user_ids"].shape[1]
+    B = batch["user_ids"].shape[0]
+    flat = batch["user_ids"].reshape(-1)
+    seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), T)
+    w = batch["user_mask"].reshape(-1)
+    user = embedding_bag(tables["items"], flat, seg, num_bags=B, weights=w, combiner="mean")
+    item = jnp.take(tables["items"], batch["item_id"], axis=0)
+    return {"user": user, "item": item}
+
+
+def _tower(params, x, dtype):
+    y = mlp_apply(params, x.astype(dtype), act=jax.nn.relu)
+    return y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-6)
+
+
+def two_tower_forward_from_emb(dense, emb, batch, cfg: TwoTowerConfig):
+    u = _tower(dense["user"], emb["user"], cfg.dtype)   # (B, D)
+    v = _tower(dense["item"], emb["item"], cfg.dtype)   # (B, D)
+    return u, v
+
+
+def two_tower_loss(dense, emb, batch, cfg: TwoTowerConfig) -> jnp.ndarray:
+    """In-batch sampled softmax with logQ correction (Yi et al., RecSys'19).
+
+    Negatives come from a pool of the first ``neg_pool`` in-batch items; each
+    row's own positive is scored explicitly and its duplicate in the pool is
+    masked, so the loss is exact sampled softmax for any batch size without
+    a (B, B) logits matrix.
+    """
+    u, v = two_tower_forward_from_emb(dense, emb, batch, cfg)
+    B = u.shape[0]
+    M = min(cfg.neg_pool, B)
+    pool = v[:M]                                          # (M, D)
+    pos = jnp.sum(u * v, axis=-1) / cfg.temperature       # (B,)
+    negs = (u @ pool.T) / cfg.temperature                 # (B, M)
+    logq = batch.get("sample_logq")
+    if logq is not None:
+        negs = negs - logq[:M][None, :]
+    # mask each row's own positive inside the pool (rows < M)
+    row = jnp.arange(B)
+    dup = (row[:, None] == jnp.arange(M)[None, :])
+    negs = jnp.where(dup, -1e30, negs.astype(jnp.float32))
+    logits = jnp.concatenate([pos.astype(jnp.float32)[:, None], negs], axis=1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(logz - pos.astype(jnp.float32))
+
+
+def two_tower_score_candidates(dense, tables, user_emb_pooled, cand_ids, cfg: TwoTowerConfig):
+    """Retrieval scoring: one (or few) users against n_candidates items."""
+    u = _tower(dense["user"], user_emb_pooled, cfg.dtype)            # (B, D)
+    cand = jnp.take(tables["items"], cand_ids, axis=0)               # (C, D)
+    v = _tower(dense["item"], cand, cfg.dtype)
+    return u @ v.T                                                   # (B, C)
+
+
+# ============================================================ paper CTR model
+@dataclasses.dataclass(frozen=True)
+class CTRConfig:
+    """The paper's web-search CTR model (Fig. 2): giant multi-hot sparse
+    input -> 64-d embeddings -> field self-attention -> MLP."""
+    name: str = "baidu_ctr"
+    rows: int = 4_000_000_000     # terabyte-scale at dim 64 + f32 accumulator
+    embed_dim: int = 64
+    n_fields: int = 40
+    nnz_per_instance: int = 100
+    attn_heads: int = 4
+    mlp: Sequence[int] = (512, 256, 1)
+    dtype: Any = jnp.float32
+
+
+def ctr_table_specs(cfg: CTRConfig) -> Dict[str, TableSpec]:
+    return {"sparse": TableSpec("sparse", rows=cfg.rows, dim=cfg.embed_dim)}
+
+
+def ctr_init_dense(rng: jax.Array, cfg: CTRConfig):
+    d = cfg.embed_dim
+    k = jax.random.split(rng, 6)
+    return {
+        "wq": he_init(k[0], (d, d), cfg.dtype),
+        "wk": he_init(k[1], (d, d), cfg.dtype),
+        "wv": he_init(k[2], (d, d), cfg.dtype),
+        "mlp": mlp_init(k[3], [cfg.n_fields * d] + list(cfg.mlp), cfg.dtype),
+    }
+
+
+def ctr_embed_batch(tables, batch, cfg: CTRConfig) -> jnp.ndarray:
+    """ids (B, nnz) + field_ids (B, nnz) + mask -> per-field bags (B, F, d)."""
+    B, nnz = batch["ids"].shape
+    flat = batch["ids"].reshape(-1)
+    # bag index = instance * n_fields + field
+    seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
+           + batch["field_ids"]).reshape(-1)
+    w = batch["mask"].reshape(-1)
+    bags = embedding_bag(
+        tables["sparse"], flat, seg, num_bags=B * cfg.n_fields, weights=w
+    )
+    return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
+
+
+def ctr_forward_from_emb(dense, emb, batch, cfg: CTRConfig) -> jnp.ndarray:
+    x = emb.astype(cfg.dtype)                                       # (B,F,d)
+    H = cfg.attn_heads
+    d = cfg.embed_dim
+    hd = d // H
+    B, F, _ = x.shape
+    q = (x @ dense["wq"]).reshape(B, F, H, hd)
+    k = (x @ dense["wk"]).reshape(B, F, H, hd)
+    v = (x @ dense["wv"]).reshape(B, F, H, hd)
+    s = jnp.einsum("bfhd,bghd->bhfg", q, k) / (hd ** 0.5)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(cfg.dtype)
+    o = jnp.einsum("bhfg,bghd->bfhd", p, v).reshape(B, F, d)
+    o = (x + o).reshape(B, F * d)
+    return mlp_apply(dense["mlp"], o, act=jax.nn.relu)[:, 0]
+
+
+# ----------------------------------------------------------------- losses
+def pointwise_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(bce_with_logits(logits, labels))

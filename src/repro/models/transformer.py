@@ -1,0 +1,454 @@
+"""Decoder-only LM family: GQA, qk-norm, QKV bias, RoPE, sliding-window /
+chunked attention, MoE FFNs — one configurable implementation covering
+qwen3-14b, qwen2-7b, granite-8b, mixtral-8x7b and llama4-scout.
+
+Layers are ``lax.scan``-stacked (leading L dim on every layer leaf) with full
+per-layer remat, which keeps the lowered HLO one-layer-sized — essential for
+the 512-device dry-run — and bounds training activation memory to the scan
+carries (sharded across every mesh axis via ``shard_hint``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    apply_rope,
+    he_init,
+    rms_norm,
+    shard_hint,
+    sharded_embed_lookup,
+    softmax_cross_entropy,
+)
+from repro.models import moe as moe_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    rope_theta: float = 1e6
+    qk_norm: bool = False                   # qwen3
+    qkv_bias: bool = False                  # qwen2
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # Attention pattern: full | window (SWA, mixtral) | chunked (llama4 iRoPE)
+    attn_window: Optional[int] = None       # sliding window size
+    attn_chunk: Optional[int] = None        # local chunk size
+    global_every: int = 0                   # with attn_chunk: every Nth layer full
+    # MoE (0 experts = dense FFN)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_group_size: int = 4096
+    shared_expert: bool = False             # llama4 shared expert
+    router_aux_coef: float = 0.0
+    dtype: Any = jnp.bfloat16
+    # Dense (materialized-scores) attention below this seq len; q-blocked
+    # (training, exact, rematerialized per block) / online-softmax blockwise
+    # (forward-only prefill) above it.
+    dense_attn_threshold: int = 1024
+    attn_block_kv: int = 1024
+    attn_block_q: int = 512
+    ce_chunk_tokens: int = 65536  # global tokens per fused-CE chunk
+    # Activation sharding: False = d_model over 'model' (TP layouts);
+    # True = sequence over 'model' (the fsdp_seq layout, §Perf).
+    seq_shard: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def active_params(self) -> int:
+        """Parameters touched per token (for MODEL_FLOPS = 6 * N_active * D)."""
+        d, hd, H, Kv, L = self.d_model, self.hd, self.n_heads, self.n_kv_heads, self.n_layers
+        attn = d * (H * hd) + 2 * d * (Kv * hd) + (H * hd) * d
+        if self.n_experts:
+            ffn = 3 * d * self.d_ff * self.top_k
+            ffn += d * self.n_experts  # router
+            if self.shared_expert:
+                ffn += 3 * d * self.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        embed = 0 if self.tie_embeddings else d * self.vocab
+        return L * (attn + ffn) + d * self.vocab + embed
+
+    def total_params(self) -> int:
+        d, hd, H, Kv, L = self.d_model, self.hd, self.n_heads, self.n_kv_heads, self.n_layers
+        attn = d * (H * hd) + 2 * d * (Kv * hd) + (H * hd) * d
+        if self.n_experts:
+            ffn = 3 * d * self.d_ff * self.n_experts + d * self.n_experts
+            if self.shared_expert:
+                ffn += 3 * d * self.d_ff
+        else:
+            ffn = 3 * d * self.d_ff
+        return L * (attn + ffn + 2 * d) + 2 * d * self.vocab + d
+
+
+
+
+def _act3(cfg):
+    """(B, S, D)-activation PartitionSpec entries for shard_hint."""
+    if cfg.seq_shard:
+        return (("pod", "data"), "model", None)
+    return (("pod", "data"), None, "model")
+
+# ----------------------------------------------------------------- params
+def init_params(rng: jax.Array, cfg: TransformerConfig) -> Dict[str, Any]:
+    d, hd, H, Kv, L, F = (
+        cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.n_layers, cfg.d_ff,
+    )
+    dt = cfg.dtype
+    k = jax.random.split(rng, 16)
+
+    def stack(key, shape, fan_in):
+        return he_init(key, (L,) + shape, dt, fan_in=fan_in)
+
+    layers: Dict[str, Any] = {
+        "attn_norm": jnp.ones((L, d), dt),
+        "ffn_norm": jnp.ones((L, d), dt),
+        "wq": stack(k[0], (d, H * hd), d),
+        "wk": stack(k[1], (d, Kv * hd), d),
+        "wv": stack(k[2], (d, Kv * hd), d),
+        "wo": stack(k[3], (H * hd, d), H * hd),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, H * hd), dt)
+        layers["bk"] = jnp.zeros((L, Kv * hd), dt)
+        layers["bv"] = jnp.zeros((L, Kv * hd), dt)
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((L, hd), dt)
+        layers["k_norm"] = jnp.ones((L, hd), dt)
+    if cfg.n_experts:
+        E = cfg.n_experts
+        layers["router"] = stack(k[4], (d, E), d)
+        layers["we_gate"] = he_init(k[5], (L, E, d, F), dt, fan_in=d)
+        layers["we_up"] = he_init(k[6], (L, E, d, F), dt, fan_in=d)
+        layers["we_down"] = he_init(k[7], (L, E, F, d), dt, fan_in=F)
+        if cfg.shared_expert:
+            layers["ws_gate"] = stack(k[8], (d, F), d)
+            layers["ws_up"] = stack(k[9], (d, F), d)
+            layers["ws_down"] = stack(k[10], (F, d), F)
+    else:
+        layers["w_gate"] = stack(k[11], (d, F), d)
+        layers["w_up"] = stack(k[12], (d, F), d)
+        layers["w_down"] = stack(k[13], (F, d), F)
+
+    params = {
+        "embed": he_init(k[14], (cfg.vocab, d), dt, fan_in=d),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = he_init(k[15], (d, cfg.vocab), dt, fan_in=d)
+    return params
+
+
+
+
+def _whint(cfg, w):
+    """fsdp_seq: anchor weight shards to ('data','model') at the point of use
+    so the partitioner's pre-dot gather runs over in-pod axes only (without
+    this it has been observed gathering the vmapped pod dim across DCN)."""
+    if cfg.seq_shard and w.ndim >= 2:
+        return shard_hint(w, ("data", "model"), *([None] * (w.ndim - 1)))
+    return w
+
+# -------------------------------------------------------------- attention
+def _mask(cfg: TransformerConfig, layer_idx, q_pos, kv_pos):
+    """(Sq, Skv) boolean mask. q_pos/kv_pos absolute positions (int32)."""
+    m = kv_pos[None, :] <= q_pos[:, None]  # causal
+    if cfg.attn_window is not None:
+        m &= (q_pos[:, None] - kv_pos[None, :]) < cfg.attn_window
+    if cfg.attn_chunk is not None:
+        local = (q_pos[:, None] // cfg.attn_chunk) == (kv_pos[None, :] // cfg.attn_chunk)
+        if cfg.global_every > 0:
+            is_global = (layer_idx % cfg.global_every) == (cfg.global_every - 1)
+            m &= jnp.where(is_global, True, local)
+        else:
+            m &= local
+    return m
+
+
+def _sdpa_dense(cfg, layer_idx, q, kk, vv, q_pos, kv_pos, kv_valid=None):
+    """Materialized-scores GQA attention.
+    q: (B,Sq,H,hd)  kk/vv: (B,Skv,Kv,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Kv = kk.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kk).astype(jnp.float32)
+    s *= 1.0 / (hd ** 0.5)
+    m = _mask(cfg, layer_idx, q_pos, kv_pos)
+    if kv_valid is not None:
+        m &= kv_valid[None, :]
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vv)
+    return o.reshape(B, Sq, H, hd)
+
+
+def _sdpa_blockwise(cfg, layer_idx, q, kk, vv, q_pos, kv_pos):
+    """Online-softmax (flash-style) attention, scan over KV blocks.
+    Forward-only path for long prefill; O(Sq * blk) live memory."""
+    B, Sq, H, hd = q.shape
+    Kv = kk.shape[2]
+    G = H // Kv
+    blk = cfg.attn_block_kv
+    Skv = kk.shape[1]
+    nb = Skv // blk
+    assert Skv % blk == 0, f"Skv={Skv} not divisible by kv block {blk}"
+    qg = (q.reshape(B, Sq, Kv, G, hd) * (1.0 / hd ** 0.5)).astype(q.dtype)
+    kb = kk.reshape(B, nb, blk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = vv.reshape(B, nb, blk, Kv, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(nb, blk)
+
+    def body(carry, xs):
+        acc, m_run, l_run = carry
+        k_blk, v_blk, p_blk = xs
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, k_blk).astype(jnp.float32)
+        msk = _mask(cfg, layer_idx, q_pos, p_blk)
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(q.dtype), v_blk
+        ).astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Kv, G, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, Kv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, Sq), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kb, vb, pb))
+    o = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+def _sdpa_qblocked(cfg, layer_idx, q, kk, vv, q_pos, kv_pos):
+    """Exact attention computed one q-block at a time (differentiable).
+
+    Scores for a (block_q x Skv) tile are materialized, softmaxed and
+    discarded per block; ``jax.checkpoint`` on the block body keeps the
+    backward pass from retaining per-block probabilities — live attention
+    memory is O(block_q * Skv) for any sequence length.
+    """
+    B, Sq, H, hd = q.shape
+    blk = cfg.attn_block_q
+    nb = Sq // blk
+    assert Sq % blk == 0, (Sq, blk)
+    qb = q.reshape(B, nb, blk, H, hd).transpose(1, 0, 2, 3, 4)  # (nb,B,blk,H,hd)
+    pb = q_pos.reshape(nb, blk)
+
+    @jax.checkpoint
+    def block(q_blk, p_blk):
+        return _sdpa_dense(cfg, layer_idx, q_blk, kk, vv, p_blk, kv_pos)
+
+    def body(_, xs):
+        q_blk, p_blk = xs
+        return None, block(q_blk, p_blk)
+
+    _, ob = jax.lax.scan(body, None, (qb, pb))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+# ------------------------------------------------------------------ layer
+def _attn_block(cfg, lp, layer_idx, x, q_pos, cache=None):
+    """Self-attention sublayer. With ``cache=(ck, cv, kv_pos, kv_valid)``,
+    attends over the cache (decode); otherwise self-attends over x."""
+    B, S, d = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = h @ _whint(cfg, lp["wq"])
+    kx = h @ _whint(cfg, lp["wk"])
+    vx = h @ _whint(cfg, lp["wv"])
+    if cfg.qkv_bias:
+        q, kx, vx = q + lp["bq"], kx + lp["bk"], vx + lp["bv"]
+    q = q.reshape(B, S, H, hd)
+    kx = kx.reshape(B, S, Kv, hd)
+    vx = vx.reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        kx = rms_norm(kx, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, q_pos[None, :].repeat(B, 0), cfg.rope_theta)
+    kx = apply_rope(kx, q_pos[None, :].repeat(B, 0), cfg.rope_theta)
+
+    if cache is not None:
+        ck, cv, kv_pos, kv_valid, write_idx = cache
+        ck = jax.lax.dynamic_update_slice(ck, kx, (0, write_idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vx, (0, write_idx, 0, 0))
+        o = _sdpa_dense(cfg, layer_idx, q, ck, cv, q_pos, kv_pos, kv_valid)
+        new_cache = (ck, cv)
+    else:
+        # With sequence-sharded activations each shard owns its q rows and
+        # attends against the (gathered) full KV — dense attention is then
+        # shard-local; the q-block scan would instead replicate q per block
+        # and psum every block output across the model axis.
+        if S <= cfg.dense_attn_threshold or cfg.seq_shard:
+            o = _sdpa_dense(cfg, layer_idx, q, kx, vx, q_pos, q_pos)
+        else:
+            o = _sdpa_qblocked(cfg, layer_idx, q, kx, vx, q_pos, q_pos)
+        new_cache = (kx, vx)
+    o = shard_hint(o.reshape(B, S, H * hd), *_act3(cfg))
+    return x + o @ _whint(cfg, lp["wo"]), new_cache
+
+
+def _ffn_block(cfg, lp, x):
+    h = rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_lib.moe_ffn(h, lp, cfg)
+    else:
+        g = jax.nn.silu(h @ _whint(cfg, lp["w_gate"])) * (h @ _whint(cfg, lp["w_up"]))
+        g = shard_hint(g, *_act3(cfg))
+        y = g @ _whint(cfg, lp["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _layer(cfg, lp, layer_idx, x, q_pos, cache=None):
+    x = shard_hint(x, *_act3(cfg))
+    x, new_cache = _attn_block(cfg, lp, layer_idx, x, q_pos, cache)
+    x, aux = _ffn_block(cfg, lp, x)
+    x = shard_hint(x, *_act3(cfg))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------- forward
+def trunk(params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """tokens (B, S) -> (final-normed hidden (B, S, D), aux_loss)."""
+    B, S = tokens.shape
+    x = sharded_embed_lookup(params["embed"], tokens)
+    x = shard_hint(x, *_act3(cfg))
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        lp, lid = xs
+        x, _, aux = _layer(cfg, lp, lid, x, q_pos)
+        return x, aux
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = jax.lax.scan(body, x, (params["layers"], layer_ids))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.sum(auxs)
+
+
+def forward(params, tokens: jnp.ndarray, cfg: TransformerConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B, S) -> (logits (B, S, V), aux_loss scalar)."""
+    x, aux = trunk(params, tokens, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    logits = shard_hint(logits, *_act3(cfg))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: TransformerConfig) -> jnp.ndarray:
+    """batch: {'tokens': (B,S) int32, 'labels': (B,S) int32}.
+
+    The vocab projection + CE runs in token chunks (``jax.checkpoint``ed scan)
+    so the (tokens, V) f32 logits never materialize at once — live CE memory
+    is one chunk regardless of batch/seq (the fused-CE trick).
+    """
+    x, aux = trunk(params, batch["tokens"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    B, S, D = x.shape
+    T = B * S
+    # Chunk over the (unsharded) sequence dim: every data shard participates
+    # in every chunk, and no resharding of x is needed.
+    n_chunks = max(1, min(T // max(cfg.ce_chunk_tokens, 1), S, 64))
+    while S % n_chunks:
+        n_chunks -= 1
+    xt = x.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lt = batch["labels"].reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_ce(xc, lc):
+        if cfg.seq_shard:
+            # gather this chunk's sequence slice (small) so the vocab-
+            # parallel head matmul is shard-local over V
+            xc = shard_hint(xc, ("pod", "data"), None, None)
+        logits = xc @ head
+        logits = shard_hint(logits, ("pod", "data"), None, "model")
+        return jnp.sum(softmax_cross_entropy(logits, lc))
+
+    def body(acc, xs):
+        xc, lc = xs
+        return acc + chunk_ce(xc, lc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xt, lt))
+    return total / T + cfg.router_aux_coef * aux
+
+
+# ----------------------------------------------------------------- decode
+def cache_len(cfg: TransformerConfig, seq_len: int) -> int:
+    """Physical KV length: SWA models keep only a window-size ring buffer."""
+    if cfg.attn_window is not None:
+        return min(seq_len, cfg.attn_window)
+    return seq_len
+
+
+def init_cache(cfg: TransformerConfig, batch: int, seq_len: int):
+    Skv = cache_len(cfg, seq_len)
+    shp = (cfg.n_layers, batch, Skv, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shp, cfg.dtype),
+        "v": jnp.zeros(shp, cfg.dtype),
+        # absolute position of each physical cache slot, -1 = empty
+        "pos": jnp.full((Skv,), -1, jnp.int32),
+        "t": jnp.zeros((), jnp.int32),  # next absolute position
+    }
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """One serving step: tokens (B,) -> (logits (B,V), new_cache).
+
+    The new token's KV is written at slot ``t % Skv`` (a ring buffer — for
+    SWA models old entries are naturally evicted; for full-attention caches
+    Skv covers the whole context so nothing is ever overwritten).
+    """
+    B = tokens.shape[0]
+    Skv = cache["k"].shape[2]
+    t = cache["t"]
+    write_idx = t % Skv
+    q_pos = t[None].astype(jnp.int32)
+    kv_pos = jax.lax.dynamic_update_index_in_dim(cache["pos"], t, write_idx, 0)
+    kv_valid = kv_pos >= 0
+
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)  # (B,1,d)
+    x = shard_hint(x, ("pod", "data"), None, None)
+    layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    def body(x, xs):
+        lp, lid, ck, cv = xs
+        x, (nk, nv), _ = _layer(
+            cfg, lp, lid, x, q_pos, cache=(ck, cv, kv_pos, kv_valid, write_idx)
+        )
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], layer_ids, cache["k"], cache["v"])
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head)[:, 0]
+    new_cache = {"k": nk, "v": nv, "pos": kv_pos, "t": t + 1}
+    return logits, new_cache
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """Inference prefill: full forward returning last-position logits.
+    (Long-context serving runs this once, then ``decode_step`` repeatedly.)"""
+    logits, _ = forward(params, tokens, cfg)
+    return logits[:, -1]

@@ -1,0 +1,1 @@
+from repro.optim.adam import Adam, AdamState, Adagrad, AdagradState  # noqa: F401

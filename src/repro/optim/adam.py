@@ -1,0 +1,84 @@
+"""Reference dense optimizers (single-replica) — the non-k-step baselines the
+paper compares against, and the oracles for the k-step tests (k=1, N=1 must
+match these exactly)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Pytree
+    v: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    """Adam matching Algorithm 2 at N=1 (no bias correction, v0 = eps)."""
+
+    lr: float = 1e-3
+    b1: float = 0.0
+    b2: float = 0.999
+    eps: float = 1e-8
+    bias_correction: bool = False
+
+    def init(self, params: Pytree) -> AdamState:
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+            v=jax.tree.map(lambda x: jnp.full(x.shape, self.eps, jnp.float32), params),
+        )
+
+    def step_fn(self, params, grads, state: AdamState):
+        t = state.step + 1
+        m = jax.tree.map(
+            lambda mm, g: self.b1 * mm + (1 - self.b1) * g.astype(jnp.float32),
+            state.m, grads)
+        v = jax.tree.map(
+            lambda vv, g: self.b2 * vv + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state.v, grads)
+        if self.bias_correction:
+            ms = 1.0 / (1 - self.b1 ** t.astype(jnp.float32)) if self.b1 > 0 else 1.0
+            vs = 1.0 / (1 - self.b2 ** t.astype(jnp.float32))
+        else:
+            ms = vs = 1.0
+        new_p = jax.tree.map(
+            lambda p, mm, vv: (p.astype(jnp.float32)
+                               - self.lr * (mm * ms) / jnp.sqrt(vv * vs)).astype(p.dtype),
+            params, m, v)
+        return new_p, AdamState(step=t, m=m, v=v)
+
+
+class AdagradState(NamedTuple):
+    accum: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Adagrad:
+    lr: float = 0.05
+    eps: float = 1e-10
+    initial_accumulator: float = 0.1
+
+    def init(self, params: Pytree) -> AdagradState:
+        return AdagradState(
+            accum=jax.tree.map(
+                lambda x: jnp.full(x.shape, self.initial_accumulator, jnp.float32), params
+            )
+        )
+
+    def step_fn(self, params, grads, state: AdagradState):
+        accum = jax.tree.map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state.accum, grads)
+        new_p = jax.tree.map(
+            lambda p, g, a: (p.astype(jnp.float32)
+                             - self.lr * g.astype(jnp.float32) / (jnp.sqrt(a) + self.eps)
+                             ).astype(p.dtype),
+            params, grads, accum)
+        return new_p, AdagradState(accum=accum)

@@ -1,0 +1,2 @@
+from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig  # noqa: F401
+from repro.runtime.metrics import auc  # noqa: F401

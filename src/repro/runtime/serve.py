@@ -1,0 +1,92 @@
+"""Batched LM serving loop: prefill + decode with a static-slot batch.
+
+A minimal continuous-batching server: requests occupy slots; finished slots
+(EOS or max tokens) are refilled from the queue between decode steps.  The
+device-side ``decode_step`` is a single compiled executable regardless of
+slot occupancy (inactive slots decode padding and are ignored host-side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (P,) int32
+    max_new_tokens: int = 16
+    out: Optional[List[int]] = None
+
+
+class BatchedServer:
+    def __init__(self, params, cfg: tfm.TransformerConfig, slots: int, max_len: int,
+                 eos_id: int = -1, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = tfm.init_cache(cfg, slots, max_len)
+        self._decode = jax.jit(lambda p, c, t: tfm.decode_step(p, c, t, cfg))
+        self.active: List[Optional[Request]] = [None] * slots
+        self.remaining = np.zeros(slots, np.int64)
+        self.pending: List[Request] = []
+        self.tokens = np.zeros(slots, np.int32)
+        self.stats = {"decoded_tokens": 0, "steps": 0, "wall": 0.0}
+
+    def submit(self, req: Request):
+        req.out = []
+        self.pending.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.active[i] = req
+                # Feed prompt tokens one-by-one through decode (prefill-by-
+                # decode keeps one executable; long-prompt serving uses
+                # tfm.prefill instead and writes the cache in one shot).
+                for tok in req.prompt[:-1]:
+                    _, self.cache = self._decode(
+                        self.params, self.cache,
+                        jnp.asarray(self.tokens).at[i].set(int(tok)),
+                    )
+                self.tokens[i] = int(req.prompt[-1])
+                self.remaining[i] = req.max_new_tokens
+
+    def step(self) -> bool:
+        """One decode step across all slots. Returns False when idle."""
+        self._fill_slots()
+        if all(r is None for r in self.active):
+            return False
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens)
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        self.stats["wall"] += time.perf_counter() - t0
+        self.stats["steps"] += 1
+        for i in range(self.slots):
+            req = self.active[i]
+            if req is None:
+                continue
+            req.out.append(int(nxt[i]))
+            self.tokens[i] = nxt[i]
+            self.remaining[i] -= 1
+            self.stats["decoded_tokens"] += 1
+            if self.remaining[i] <= 0 or nxt[i] == self.eos_id:
+                self.active[i] = None
+        return True
+
+    def run_to_completion(self) -> Dict:
+        while self.step():
+            pass
+        return self.stats

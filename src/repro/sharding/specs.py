@@ -1,0 +1,225 @@
+"""PartitionSpec rules for every model family.
+
+Strategy (defaults; §Perf iterations override per cell):
+- Dense params: ZeRO-3-style — each weight's two largest dims sharded over
+  ('data', 'model'); optimizer moments inherit the same spec; the leading
+  'pod' axis is prepended for podded (k-step replicated) trees.
+- Embedding tables: rows sharded over ALL mesh axes flattened (512-way) —
+  the terabyte table is the thing that must never replicate.
+- Batches: leading batch/token dim over ('pod', 'data').
+- Small leaves (norms, biases, scalars): replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# Leaves smaller than this stay replicated (norm scales, biases, eps, ...).
+_MIN_SHARD_ELEMS = 1 << 16
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def auto_leaf_spec(
+    shape, mesh: Mesh, *, skip_leading: int = 0, axes=("data", "model")
+) -> P:
+    """Shard the two largest eligible dims over ``axes`` (largest gets the
+    first axis); dims must be divisible by the axis size to qualify."""
+    n = len(shape)
+    if int(np.prod(shape)) < _MIN_SHARD_ELEMS:
+        return P(*([None] * n))
+    entries: list = [None] * n
+    dims = sorted(
+        range(skip_leading, n), key=lambda d: -shape[d]
+    )
+    remaining = [a for a in axes if a in mesh.axis_names]
+    for d in dims:
+        if not remaining:
+            break
+        a = remaining[0]
+        if shape[d] % _axis_size(mesh, a) == 0 and shape[d] >= _axis_size(mesh, a):
+            entries[d] = a
+            remaining.pop(0)
+    return P(*entries)
+
+
+def pod_prepend(spec: P) -> P:
+    return P("pod", *spec)
+
+
+def auto_param_specs(
+    params: Pytree, mesh: Mesh, podded: bool = False
+) -> Pytree:
+    """Spec tree matching ``params``.  ``podded=True`` treats the leading dim
+    of every leaf as the pod-replica dim."""
+
+    def leaf(x):
+        shape = x.shape
+        if podded:
+            inner = auto_leaf_spec(shape[1:], mesh)
+            if "pod" in mesh.axis_names:
+                return P("pod", *inner)
+            return P(None, *inner)
+        return auto_leaf_spec(shape, mesh)
+
+    return jax.tree.map(leaf, params)
+
+
+def table_specs_sharding(tables: Pytree, mesh: Mesh) -> Pytree:
+    """Row-shard every embedding table over all mesh axes (flattened)."""
+    all_axes = tuple(mesh.axis_names)
+
+    def leaf(x):
+        rows = x.shape[0]
+        total = int(np.prod([mesh.shape[a] for a in all_axes]))
+        if rows % total == 0:
+            return P(all_axes, *([None] * (x.ndim - 1)))
+        # fall back to the largest prefix of axes that divides rows
+        for k in range(len(all_axes), 0, -1):
+            sub = all_axes[-k:]
+            if rows % int(np.prod([mesh.shape[a] for a in sub])) == 0:
+                return P(sub, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree.map(leaf, tables)
+
+
+def batch_specs(batch: Pytree, mesh: Mesh, batch_axes=("pod", "data")) -> Pytree:
+    """Shard the leading dim of every batch leaf over the data axes."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def leaf(x):
+        if x.ndim == 0:
+            return P()
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if x.shape[0] % size == 0 and x.shape[0] >= size:
+            return P(axes, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return jax.tree.map(leaf, batch)
+
+
+def named_shardings(spec_tree: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# ------------------------------------------------------------- LM overrides
+def lm_param_specs(
+    params: Pytree, mesh: Mesh, podded: bool = False, serve: bool = False,
+    style: str = "tp_fsdp",
+) -> Pytree:
+    """Transformer param specs.
+
+    style='tp_fsdp' (paper-faithful baseline): Megatron TP over 'model' +
+    ZeRO-3 FSDP over 'data' — column-parallel wq/wk/wv/w_gate/w_up (out-dim
+    'model', in-dim 'data'), row-parallel wo/w_down, embedding dim over all
+    axes, vocab-parallel head, replicated norms/biases.
+
+    style='fsdp_seq' (beyond-paper, §Perf): pure ZeRO-3 over the flattened
+    axes + sequence-sharded activations — see _lm_fsdp_seq_specs.
+
+    serve=True keeps weights TP-resident (no FSDP gathers at decode).
+    """
+    if style == "fsdp_seq":
+        return _lm_fsdp_seq_specs(params, mesh, podded)
+    has = lambda a: a in mesh.axis_names
+    # Serving keeps weights fully resident (pure TP): no per-step FSDP
+    # all-gathers on the latency-critical decode path, and no optimizer
+    # state to amortize them against.
+    data = None if serve else ("data" if has("data") else None)
+    model = "model" if has("model") else None
+    all_axes = tuple(a for a in ((() if serve else ("data",)) + ("model",)) if has(a))
+
+    def spec_for(path: str, ndim: int) -> P:
+        col = {"wq": 1, "wk": 1, "wv": 1, "w_gate": 1, "w_up": 1,
+               "ws_gate": 1, "ws_up": 1}
+        row = {"wo": 1, "w_down": 1, "ws_down": 1}
+        # layer leaves carry a leading L dim (scan-stacked)
+        if "we_gate" in path or "we_up" in path:       # (L, E, D, F)
+            return P(None, None, data, model)
+        if "we_down" in path:                          # (L, E, F, D)
+            return P(None, None, model, data)
+        if "router" in path:                           # (L, D, E)
+            return P(None, data, None)
+        for k in col:
+            if path.endswith(k):                       # (L, D, X)
+                return P(None, data, model)
+        for k in row:
+            if path.endswith(k):                       # (L, X, D)
+                return P(None, model, data)
+        if path.endswith("embed"):                     # (V, D)
+            return P(None, all_axes if all_axes else None)
+        if path.endswith("head"):                      # (D, V)
+            return P(data, model)
+        if path.endswith(("bq", "bk", "bv")):          # (L, X)
+            return P(None, model)
+        return P(*([None] * ndim))                     # norms etc.
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        s = spec_for(name, leaf.ndim)
+        if podded:
+            s = P("pod" if has("pod") else None, *s)
+        out.append(s)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _lm_fsdp_seq_specs(params: Pytree, mesh: Mesh, podded: bool) -> Pytree:
+    """Beyond-paper LM training layout (§Perf iteration 1): NO tensor
+    parallelism — every weight is ZeRO-3-sharded over the flattened
+    ('data','model') axes on its d_model-ish dim and all-gathered at use;
+    activations shard batch over 'data' and SEQUENCE over 'model'.
+
+    Why: Megatron-style TP moves ~2 full activations per layer per pass over
+    the 'model' axis (psum/AG of (tokens, d_model)); at 65k tokens/device
+    that is TBs per step.  FSDP moves only ~3x the weight bytes per step
+    (all-gather fwd, re-gather in remat bwd, reduce-scatter grads) plus a
+    small per-layer KV gather for the seq-sharded attention — ~17x less.
+    """
+    has = lambda a: a in mesh.axis_names
+    big = tuple(a for a in ("data", "model") if has(a))
+    big = big if big else None
+
+    def spec_for(path: str, ndim: int) -> P:
+        if "we_gate" in path or "we_up" in path:       # (L, E, D, F)
+            return P(None, None, big, None)
+        if "we_down" in path:                          # (L, E, F, D)
+            return P(None, None, big, None)
+        if "router" in path:                           # (L, D, E)
+            return P(None, big, None)
+        for k in ("wq", "wk", "wv", "w_gate", "w_up", "ws_gate", "ws_up"):
+            if path.endswith(k):                       # (L, D, X)
+                return P(None, big, None)
+        for k in ("wo", "w_down", "ws_down"):
+            if path.endswith(k):                       # (L, X, D)
+                return P(None, big, None)
+        if path.endswith("embed"):                     # (V, D)
+            return P(None, big)
+        if path.endswith("head"):                      # (D, V)
+            # vocab-parallel: a d_model-sharded head would force a
+            # (tokens, V)-sized psum per CE chunk
+            return P(None, "model" if has("model") else None)
+        return P(*([None] * ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        s = spec_for(name, leaf.ndim)
+        if podded:
+            s = P("pod" if has("pod") else None, *s)
+        out.append(s)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,5 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# exclusively for the dry-run).  Kernel tests opt into interpret mode.
+os.environ.setdefault("REPRO_KERNEL_INTERPRET", "1")

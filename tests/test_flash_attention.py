@@ -1,0 +1,63 @@
+"""Pallas flash attention vs the dense softmax oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+def ref_attn(q, k, v, causal):
+    BH, S, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("BH,S,hd,bq,bkv", [
+    (2, 64, 16, 16, 16),
+    (4, 128, 32, 32, 64),
+    (1, 256, 64, 64, 32),
+])
+def test_flash_matches_dense(dtype, causal, BH, S, hd, bq, bkv):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((BH, S, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((BH, S, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((BH, S, hd)), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal,
+                                 block_q=bq, block_kv=bkv, interpret=True)
+    expect = ref_attn(q, k, v, causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol * 10, rtol=tol)
+
+
+def test_flash_gqa_wrapper_matches_model_attention():
+    """flash (with GQA head-broadcast) == the model's _sdpa_dense."""
+    from repro.models import transformer as T
+    cfg = T.TransformerConfig(n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+                              d_ff=64, vocab=32, dtype=jnp.float32)
+    rng = np.random.default_rng(1)
+    B, S, H, Kv, hd = 2, 64, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Kv, hd)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    expect = T._sdpa_dense(cfg, 0, q, k, v, pos, pos)
+    # GQA flatten: q -> (B*H, S, hd); k/v repeat per group
+    G = H // Kv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, S, hd)
+    out = flash_attention_pallas(qf, kf, vf, causal=True,
+                                 block_q=16, block_kv=16, interpret=True)
+    out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4)

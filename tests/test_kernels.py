@@ -1,0 +1,94 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dot_interaction import dot_interaction_pallas
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.fused_adam import fused_adam_pallas
+from repro.kernels.sparse_adagrad import sparse_adagrad_pallas
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,D,nnz,nb,bag_blk,nnz_blk", [
+    (64, 32, 256, 128, 32, 64),
+    (128, 64, 512, 256, 256, 512),
+    (256, 128, 1024, 64, 64, 128),
+    (32, 8, 128, 512, 128, 128),
+])
+def test_embedding_bag(dtype, C, D, nnz, nb, bag_blk, nnz_blk):
+    rng = np.random.default_rng(0)
+    working = jnp.asarray(rng.standard_normal((C, D)), dtype)
+    inv = jnp.asarray(rng.integers(0, C, nnz), jnp.int32)
+    seg = jnp.asarray(rng.integers(0, nb, nnz), jnp.int32)
+    w = jnp.asarray(rng.random(nnz), dtype)
+    out = embedding_bag_pallas(working, inv, seg, w, nb,
+                               bag_block=bag_blk, nnz_block=nnz_blk, interpret=True)
+    expect = ref.embedding_bag_ref(working, inv, seg, w, nb)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype] * 10, rtol=TOL[dtype] * 10,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,F,D,blk", [
+    (64, 27, 32, 32), (128, 27, 128, 64), (32, 8, 16, 32), (256, 13, 64, 128),
+])
+def test_dot_interaction(dtype, B, F, D, blk):
+    rng = np.random.default_rng(1)
+    feats = jnp.asarray(rng.standard_normal((B, F, D)), dtype)
+    out = dot_interaction_pallas(feats, batch_block=blk, interpret=True)
+    expect = ref.dot_interaction_ref(feats)
+    assert out.shape == (B, F * (F - 1) // 2)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        atol=TOL[dtype] * D, rtol=TOL[dtype] * 4,
+    )
+
+
+@pytest.mark.parametrize("n,blk", [(1 << 12, 1 << 10), (1 << 16, 1 << 14), (640, 64)])
+@pytest.mark.parametrize("b1", [0.0, 0.9])
+def test_fused_adam(n, blk, b1):
+    rng = np.random.default_rng(2)
+    p = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    g = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    m = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    v = jnp.asarray(rng.random(n) + 1e-8, jnp.float32)
+    vh = jnp.asarray(rng.random(n) + 1e-3, jnp.float32)
+    got = fused_adam_pallas(p, g, m, v, vh, lr=0.01, b1=b1, block=blk, interpret=True)
+    want = ref.fused_adam_ref(p, g, m, v, vh, lr=0.01, b1=b1)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,D,blk", [(256, 64, 64), (512, 128, 512), (64, 16, 32)])
+def test_sparse_adagrad(dtype, C, D, blk):
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(rng.standard_normal((C, D)), dtype)
+    accum = jnp.asarray(rng.random((C, D)) + 0.1, jnp.float32)
+    grads = jnp.asarray(rng.standard_normal((C, D)), dtype)
+    got = sparse_adagrad_pallas(rows, accum, grads, row_block=blk, interpret=True)
+    want = ref.sparse_adagrad_ref(rows, accum, grads)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=TOL[dtype] * 5, rtol=TOL[dtype] * 5,
+        )
+
+
+def test_ops_dispatch_ref_mode(monkeypatch):
+    """Without the env flag on CPU, ops fall back to the oracle path."""
+    monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
+    from repro.kernels import ops
+    rng = np.random.default_rng(4)
+    feats = jnp.asarray(rng.standard_normal((8, 5, 4)), jnp.float32)
+    out = ops.dot_interaction(feats)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.dot_interaction_ref(feats)))

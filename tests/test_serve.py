@@ -1,0 +1,62 @@
+"""Batched serving loop: continuous batching, slot refill, throughput stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.runtime.serve import BatchedServer, Request
+
+
+def make_model():
+    cfg = T.TransformerConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                              d_ff=64, vocab=50, dtype=jnp.float32, moe_group_size=32)
+    return cfg, T.init_params(jax.random.key(0), cfg)
+
+
+def test_server_completes_all_requests():
+    cfg, p = make_model()
+    srv = BatchedServer(p, cfg, slots=4, max_len=64)
+    reqs = [Request(prompt=np.asarray([1 + i, 2, 3]), max_new_tokens=5)
+            for i in range(7)]  # more requests than slots -> refill path
+    for r in reqs:
+        srv.submit(r)
+    stats = srv.run_to_completion()
+    assert all(len(r.out) == 5 for r in reqs)
+    assert stats["decoded_tokens"] == 35
+    assert stats["steps"] >= 10  # 7 requests over 4 slots: at least 2 waves
+
+
+def test_server_greedy_matches_manual_decode():
+    cfg, p = make_model()
+    prompt = np.asarray([5, 9, 11])
+    srv = BatchedServer(p, cfg, slots=1, max_len=32)
+    r = Request(prompt=prompt, max_new_tokens=4)
+    srv.submit(r)
+    srv.run_to_completion()
+
+    cache = T.init_cache(cfg, 1, 32)
+    tok = None
+    for t in prompt:
+        logits, cache = T.decode_step(p, cache, jnp.asarray([int(t)]), cfg)
+    outs = []
+    for _ in range(4):
+        nxt = int(jnp.argmax(logits[0]))
+        outs.append(nxt)
+        logits, cache = T.decode_step(p, cache, jnp.asarray([nxt]), cfg)
+    assert r.out == outs
+
+
+def test_server_eos_frees_slot():
+    cfg, p = make_model()
+    # find the greedy first token for a given prompt, then use it as EOS
+    srv0 = BatchedServer(p, cfg, slots=1, max_len=32)
+    r0 = Request(prompt=np.asarray([7, 3]), max_new_tokens=1)
+    srv0.submit(r0)
+    srv0.run_to_completion()
+    eos = r0.out[0]
+    srv = BatchedServer(p, cfg, slots=1, max_len=32, eos_id=eos)
+    r1 = Request(prompt=np.asarray([7, 3]), max_new_tokens=10)
+    srv.submit(r1)
+    srv.run_to_completion()
+    assert len(r1.out) == 1 and r1.out[0] == eos

@@ -1,0 +1,139 @@
+"""Integration: end-to-end training behaviour — the paper's experimental
+claims at CPU scale (k-step matches baseline AUC; crash/resume; online
+predict-then-train)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kstep import KStepConfig
+from repro.core.sparse_optim import SparseAdagradConfig
+from repro.data import synthetic as S
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.runtime.metrics import auc
+from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig
+
+CTR_CFG = R.CTRConfig(rows=5000, n_fields=8, nnz_per_instance=20, mlp=(64, 1))
+
+
+def ctr_trainer(n_pod, k, merge="flat", ckpt_dir=None, seed=0):
+    rng = jax.random.key(seed)
+    dense = R.ctr_init_dense(rng, CTR_CFG)
+    tables = {"sparse": jax.random.normal(rng, (CTR_CFG.rows, CTR_CFG.embed_dim)) * 0.05}
+
+    def embed(workings, invs, bp):
+        B, nnz = bp["ids"].shape
+        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * CTR_CFG.n_fields
+               + bp["field_ids"]).reshape(-1)
+        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
+            * bp["mask"].reshape(-1)[:, None]
+        bags = jax.ops.segment_sum(emb, seg, num_segments=B * CTR_CFG.n_fields)
+        return bags.reshape(B, CTR_CFG.n_fields, CTR_CFG.embed_dim)
+
+    def loss(dp, emb, bp, predict=False):
+        logits = R.ctr_forward_from_emb(dp, emb, bp, CTR_CFG)
+        if predict:
+            return jax.nn.sigmoid(logits)
+        return R.pointwise_loss(logits, bp["label"])
+
+    tc = TrainerConfig(
+        n_pod=n_pod,
+        kstep=KStepConfig(lr=1e-3, k=k, b1=0.0, merge=merge),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        ckpt_dir=ckpt_dir, ckpt_every=10, ckpt_async=False,
+    )
+    return HybridTrainer(dense, tables, embed, loss, {"sparse": "ids"},
+                         capacity=8192, cfg=tc)
+
+
+def run_online(tr, steps, seed=1):
+    """Paper §5 protocol: predict each batch with the current model, then
+    train on it; report AUC over the last third."""
+    gen = S.ctr_batches(seed=seed, batch=512, rows=CTR_CFG.rows,
+                        n_fields=CTR_CFG.n_fields, nnz=CTR_CFG.nnz_per_instance)
+    labels, scores = [], []
+    for i in range(steps):
+        b = next(gen)
+        if i >= steps * 2 // 3:
+            scores.append(tr.predict(b))
+            labels.append(b["label"])
+        tr.train_step(b)
+    return auc(np.concatenate(labels), np.concatenate(scores))
+
+
+def test_ctr_baseline_learns():
+    a = run_online(ctr_trainer(n_pod=1, k=1), steps=120)
+    assert a > 0.70, f"baseline AUC {a}"
+
+
+def test_kstep_matches_baseline_auc():
+    """Fig. 9: k-step merging must not hurt AUC measurably."""
+    a_base = run_online(ctr_trainer(n_pod=1, k=1), steps=120)
+    a_k = run_online(ctr_trainer(n_pod=4, k=10), steps=120)
+    assert abs(a_base - a_k) < 0.03, (a_base, a_k)
+
+
+def test_two_phase_and_int8_merges_learn():
+    for merge in ("two_phase", "int8_ef"):
+        a = run_online(ctr_trainer(n_pod=2, k=5, merge=merge), steps=100)
+        assert a > 0.68, (merge, a)
+
+
+def test_crash_resume_bitexact(tmp_path):
+    """Fault tolerance: train 20, crash, resume from ckpt -> identical state
+    to an uninterrupted run consuming the same stream."""
+    d = str(tmp_path)
+    t_ref = ctr_trainer(n_pod=2, k=5, seed=3)
+    gen = S.ctr_batches(seed=9, batch=256, rows=CTR_CFG.rows,
+                        n_fields=CTR_CFG.n_fields, nnz=CTR_CFG.nnz_per_instance)
+    batches = [next(gen) for _ in range(30)]
+    for b in batches:
+        t_ref.train_step(b)
+
+    t_a = ctr_trainer(n_pod=2, k=5, ckpt_dir=d, seed=3)
+    for b in batches[:20]:
+        t_a.train_step(b)
+    del t_a  # crash after step 20 (ckpt_every=10 -> ckpt at 20 exists)
+
+    t_b = ctr_trainer(n_pod=2, k=5, ckpt_dir=d, seed=3)
+    assert t_b.resume()
+    assert t_b.step_num == 20
+    for b in batches[20:]:
+        t_b.train_step(b)
+    for a, b_ in zip(jax.tree.leaves(t_ref.tables), jax.tree.leaves(t_b.tables)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+    for a, b_ in zip(jax.tree.leaves(t_ref.dense), jax.tree.leaves(t_b.dense)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_dense_trainer_lm_learns_and_resumes(tmp_path):
+    cfg = T.TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                              d_ff=128, vocab=64, dtype=jnp.float32, moe_group_size=64)
+    p = T.init_params(jax.random.key(1), cfg)
+    tc = TrainerConfig(n_pod=2, kstep=KStepConfig(lr=2e-3, k=5, b1=0.9),
+                       ckpt_dir=str(tmp_path), ckpt_every=20, ckpt_async=False)
+    tr = DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p, tc)
+    gen = S.lm_batches(seed=0, batch=16, seq_len=32, vocab=64)
+    losses = [tr.train_step(next(gen)) for _ in range(40)]
+    assert losses[-1] < losses[0] - 1.0
+    tr2 = DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p, tc)
+    assert tr2.resume() and tr2.step_num == 40
+
+
+def test_merge_quorum_subset_average():
+    """Straggler mitigation: merging over a pod subset is a valid merge —
+    params equal the subset mean, stragglers keep their local value."""
+    from repro.core.kstep import KStepAdam, pod_replicate
+    pp = pod_replicate({"x": jnp.zeros(4)}, 4)
+    opt = KStepAdam(KStepConfig(lr=0.1, k=1), n_pod=4)
+    state = opt.init(pp)
+    g = jax.tree.map(
+        lambda x: jnp.arange(4.0).reshape(4, 1) * jnp.ones_like(x), pp)
+    p1, state = opt.step(pp, g, state, merge=False)
+    # emulate quorum merge of pods {0,1,2}: average their replicas only
+    subset = jax.tree.map(lambda x: x.at[:3].set(jnp.mean(x[:3], 0)), p1)
+    for leaf in jax.tree.leaves(subset):
+        assert np.allclose(leaf[0], leaf[1])
+        assert not np.allclose(leaf[3], leaf[0])
