@@ -3,7 +3,8 @@
 Online (predict-then-train) AUC for worker counts {1,2,4,8} and
 k in {1,10,20,50}: the paper's claim is that the AUC difference stays in
 the noise.  Runs the REAL training stack (hybrid k-step Adam + sparse
-AdaGrad working sets) on teacher-labelled CTR data.
+AdaGrad working sets through ``build_trainer``) on teacher-labelled CTR
+data.
 """
 
 from __future__ import annotations
@@ -14,40 +15,22 @@ import numpy as np
 
 
 def run(steps: int = 120):
-    import jax
-    import jax.numpy as jnp
     from repro.core.kstep import KStepConfig
     from repro.core.sparse_optim import SparseAdagradConfig
     from repro.data import synthetic as S
     from repro.models import recsys as R
+    from repro.runtime.factory import build_trainer
     from repro.runtime.metrics import auc
-    from repro.runtime.trainer import HybridTrainer, TrainerConfig
+    from repro.runtime.trainer import TrainerConfig
 
-    CFG = R.CTRConfig(rows=5000, n_fields=8, nnz_per_instance=20, mlp=(64, 1))
-
-    def embed(workings, invs, bp):
-        B, nnz = bp["ids"].shape
-        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * CFG.n_fields
-               + bp["field_ids"]).reshape(-1)
-        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
-            * bp["mask"].reshape(-1)[:, None]
-        bags = jax.ops.segment_sum(emb, seg, num_segments=B * CFG.n_fields)
-        return bags.reshape(B, CFG.n_fields, CFG.embed_dim)
-
-    def loss(dp, emb, bp, predict=False):
-        logits = R.ctr_forward_from_emb(dp, emb, bp, CFG)
-        if predict:
-            return jax.nn.sigmoid(logits)
-        return R.pointwise_loss(logits, bp["label"])
+    CFG = R.CTRConfig(rows=5000, n_fields=8, nnz_per_instance=20, mlp=(64, 1),
+                      attn_heads=2)
 
     def train_one(n_pod, k, n_steps):
-        rng = jax.random.key(0)
-        dense = R.ctr_init_dense(rng, CFG)
-        tables = {"sparse": jax.random.normal(rng, (CFG.rows, 64)) * 0.05}
         tc = TrainerConfig(n_pod=n_pod, kstep=KStepConfig(lr=1e-3, k=k, b1=0.0),
-                           sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01))
-        tr = HybridTrainer(dense, tables, embed, loss, {"sparse": "ids"},
-                           capacity=16384, cfg=tc)
+                           sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+                           capacity=16384)
+        tr = build_trainer("baidu-ctr", tc, model_cfg=CFG)
         gen = S.ctr_batches(seed=1, batch=512, rows=CFG.rows, n_fields=8, nnz=20)
         labels, scores = [], []
         t0 = time.perf_counter()

@@ -15,39 +15,21 @@ from repro.runtime.metrics import auc
 
 
 def run(rows: int = 20000, steps: int = 240, batch: int = 512):
-    import jax
-    import jax.numpy as jnp
+    import numpy as np
     from repro.core.kstep import KStepConfig
     from repro.core.sparse_optim import SparseAdagradConfig
     from repro.models import recsys as R
-    from repro.runtime.trainer import HybridTrainer, TrainerConfig
+    from repro.runtime.factory import build_trainer
+    from repro.runtime.trainer import TrainerConfig
 
     results = []
     for hash_k in [rows, rows // 4, rows // 16, rows // 64]:
-        cfg = R.CTRConfig(rows=hash_k, n_fields=8, nnz_per_instance=20, mlp=(64, 1))
-        rng = jax.random.key(0)
-        dense = R.ctr_init_dense(rng, cfg)
-        tables = {"sparse": jax.random.normal(rng, (hash_k, 64)) * 0.05}
-
-        def embed(workings, invs, bp, cfg=cfg):
-            B, nnz = bp["ids"].shape
-            seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
-                   + bp["field_ids"]).reshape(-1)
-            emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
-                * bp["mask"].reshape(-1)[:, None]
-            bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
-            return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
-
-        def loss(dp, emb, bp, predict=False, cfg=cfg):
-            logits = R.ctr_forward_from_emb(dp, emb, bp, cfg)
-            if predict:
-                return jax.nn.sigmoid(logits)
-            return R.pointwise_loss(logits, bp["label"])
-
+        cfg = R.CTRConfig(rows=hash_k, n_fields=8, nnz_per_instance=20,
+                          mlp=(64, 1), attn_heads=2)
         tc = TrainerConfig(n_pod=1, kstep=KStepConfig(lr=1e-3, k=1),
-                           sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01))
-        tr = HybridTrainer(dense, tables, embed, loss, {"sparse": "ids"},
-                           capacity=16384, cfg=tc)
+                           sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+                           capacity=16384)
+        tr = build_trainer("baidu-ctr", tc, model_cfg=cfg)
         gen = S.ctr_batches(seed=1, batch=batch, rows=rows, n_fields=8, nnz=20)
         labels, scores = [], []
         t0 = time.perf_counter()
@@ -58,7 +40,6 @@ def run(rows: int = 20000, steps: int = 240, batch: int = 512):
                 scores.append(tr.predict(b))
                 labels.append(b["label"])
             tr.train_step(b)
-        import numpy as np
         a = auc(np.concatenate(labels), np.concatenate(scores))
         us = (time.perf_counter() - t0) / steps * 1e6
         results.append((f"table1_hash_k={hash_k}", us, f"auc={a:.4f}"))

@@ -6,48 +6,32 @@ Simulates 4 workers ("pods") with k=10 merging on one CPU device — the
 podded representation runs the exact Algorithm-2 semantics anywhere — and
 reports online (predict-then-train) AUC, which should clear 0.75 on the
 teacher-labelled synthetic click stream.
-"""
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+Model + sparse-path construction is config-driven through ``build_trainer``;
+switch the embedding placement with ``placement="routed"``.
+"""
 
 from repro.core.kstep import KStepConfig
 from repro.core.sparse_optim import SparseAdagradConfig
 from repro.data import synthetic as S
-from repro.models import recsys as R
+from repro.models.recsys import CTRConfig
+from repro.runtime.factory import build_trainer
 from repro.runtime.metrics import StreamingAUC
-from repro.runtime.trainer import HybridTrainer, TrainerConfig
+from repro.runtime.trainer import TrainerConfig
 
 
-def main(steps: int = 150, n_pod: int = 4, k: int = 10):
-    cfg = R.CTRConfig(rows=20_000, n_fields=8, nnz_per_instance=20, mlp=(64, 1))
-    rng = jax.random.key(0)
-    dense = R.ctr_init_dense(rng, cfg)
-    tables = {"sparse": jax.random.normal(rng, (cfg.rows, cfg.embed_dim)) * 0.05}
-
-    def embed(workings, invs, bp):
-        B, nnz = bp["ids"].shape
-        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
-               + bp["field_ids"]).reshape(-1)
-        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
-            * bp["mask"].reshape(-1)[:, None]
-        bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
-        return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
-
-    def loss(dp, emb, bp, predict=False):
-        logits = R.ctr_forward_from_emb(dp, emb, bp, cfg)
-        if predict:
-            return jax.nn.sigmoid(logits)
-        return R.pointwise_loss(logits, bp["label"])
-
-    tr = HybridTrainer(
-        dense, tables, embed, loss, {"sparse": "ids"}, capacity=16384,
-        cfg=TrainerConfig(
+def main(steps: int = 150, n_pod: int = 4, k: int = 10, placement: str = "gather"):
+    cfg = CTRConfig(rows=20_000, n_fields=8, nnz_per_instance=20, mlp=(64, 1),
+                    attn_heads=2)
+    tr = build_trainer(
+        "baidu-ctr",
+        TrainerConfig(
             n_pod=n_pod,
             kstep=KStepConfig(lr=1e-3, k=k, b1=0.0, merge="flat"),
             sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+            placement=placement, capacity=16384,
         ),
+        model_cfg=cfg,
     )
     gen = S.ctr_batches(seed=1, batch=512, rows=cfg.rows,
                         n_fields=cfg.n_fields, nnz=cfg.nnz_per_instance)

@@ -81,6 +81,15 @@ def latest_step(directory: str) -> Optional[int]:
     return best
 
 
+def read_manifest(directory: str, step: int) -> Optional[Dict]:
+    """The manifest of one checkpoint (leaves + meta), or None if absent."""
+    path = os.path.join(directory, f"step_{step:010d}", "manifest.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore_tree(
     directory: str,
     step: int,

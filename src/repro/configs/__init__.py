@@ -1,7 +1,11 @@
 """Architecture registry: the 10 assigned archs + the paper's own model.
 
 Each config module defines ``ARCH`` (an ArchSpec).  ``get(name)`` /
-``list_archs()`` are the public lookup API used by --arch flags everywhere.
+``list_archs()`` are the public lookup API used by --arch flags everywhere,
+and the source of truth for ``repro.runtime.factory.build_trainer`` — the
+config-driven path from an arch name + ``TrainerConfig`` to a ready
+Dense/Hybrid trainer (models, embedding engine, and sparse placement wired
+per family).
 """
 
 from __future__ import annotations

@@ -7,8 +7,16 @@ from repro.core.kstep import (  # noqa: F401
 )
 from repro.core import merge  # noqa: F401
 from repro.core.sparse_optim import SparseAdagrad, SparseAdagradState  # noqa: F401
+from repro.core.embedding_backend import (  # noqa: F401
+    EmbeddingBackend,
+    GatherBackend,
+    RoutedBackend,
+    WorkingSet,
+    make_backend,
+)
 from repro.core.embedding_engine import (  # noqa: F401
     EmbeddingEngine,
+    TableSpec,
     embedding_bag,
     pull_working_set,
 )

@@ -1,10 +1,25 @@
-"""Sharded embedding engine — the TPU rendering of the hierarchical parameter
-server (paper §2.3): terabyte-class tables row-sharded across every chip of
-the mesh, with per-batch *working-set pulls*.
+"""Embedding engine — the single facade over the sparse-parameter path.
 
-The paper's key observation survives intact on TPU: each instance references
-only ~100 of the 1e11 sparse features, so compute and communication are
-proportional to the deduplicated working set, never to the table size.
+The TPU rendering of the paper's hierarchical parameter server (§2.3):
+terabyte-class tables row-sharded across the mesh, trained through per-batch
+*working-set pulls* (each instance references ~100 of 1e11 features, so
+compute and communication scale with the deduplicated working set, never
+with the table).  The engine owns everything sparse:
+
+  - the ``TableSpec``s (shape, combiner, which batch field feeds each table),
+  - the pull capacity (static working-set bound),
+  - the sparse optimizer (``SparseAdagrad`` — every-step sync, paper §5),
+  - a pluggable ``EmbeddingBackend`` deciding HOW rows move:
+    ``GatherBackend`` (dedup + ``jnp.take``, single-device/GSPMD) or
+    ``RoutedBackend`` (explicit all-to-all PS routing, hash-sharded) —
+    see ``repro.core.embedding_backend`` for the contract.
+
+Training path per batch (Algorithm 1 lines 3, 11, 13):
+  1. ``pull_batch(tables, batch)``  -> {name: WorkingSet} (one pull each)
+  2. model fwd/bwd over ``ws.rows[ws.inverse]`` — grads land on the compact
+     working set, not the table,
+  3. ``push(tables, accum, working_sets, row_grads)`` — backend scatters the
+     AdaGrad row updates back.
 
 JAX has no native EmbeddingBag and no CSR/CSC sparse — the bag lookup here is
 built from ``jnp.take`` + ``jax.ops.segment_sum`` (this IS part of the system,
@@ -15,10 +30,23 @@ path in ``repro.kernels.embedding_bag``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.embedding_backend import (  # noqa: F401  (re-exported API)
+    EmbeddingBackend,
+    GatherBackend,
+    WorkingSet,
+    make_backend,
+    pull_working_set,
+)
+from repro.core.sparse_optim import (
+    SparseAdagrad,
+    SparseAdagradConfig,
+    SparseAdagradState,
+)
 
 
 # --------------------------------------------------------------------- lookup
@@ -50,24 +78,6 @@ def embedding_bag(
     raise ValueError(f"unknown combiner {combiner!r}")
 
 
-# --------------------------------------------------------------- working set
-def pull_working_set(
-    flat_ids: jnp.ndarray, capacity: int
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Deduplicate the ids referenced by a batch (the PS "pull" manifest).
-
-    Returns (unique_ids (capacity,), inverse (nnz,)) with static shapes:
-    ``unique_ids`` is padded by repeating the smallest id (harmless for the
-    scatter since padded slots receive zero gradient), ``inverse`` maps each
-    original id slot to its row in the pulled working set.
-    ``capacity`` must bound the number of distinct ids in a batch.
-    """
-    uids, inv = jnp.unique(
-        flat_ids, size=capacity, fill_value=None, return_inverse=True
-    )
-    return uids.astype(jnp.int32), inv.astype(jnp.int32)
-
-
 # ---------------------------------------------------------------- the engine
 @dataclasses.dataclass(frozen=True)
 class TableSpec:
@@ -76,37 +86,98 @@ class TableSpec:
     dim: int
     combiner: str = "sum"
     dtype: jnp.dtype = jnp.float32
+    id_field: Optional[str] = None   # batch key holding this table's ids
+                                     # (None -> the table name itself)
 
 
 class EmbeddingEngine:
-    """Owns a dict of row-sharded tables and the pull/lookup/push path.
+    """Owns the tables' specs, capacity, sparse optimizer, and backend.
 
-    Training path per batch (mirrors Algorithm 1 lines 3, 11, 13):
-      1. ``pull(ids)``      — dedup ids, gather working rows (one gather).
-      2. model fwd/bwd over ``working[inverse]`` — grads land on the compact
-         working set, not the table.
-      3. ``SparseAdagrad.apply_rows`` — scatter the row updates back.
+    ``optimizer`` may be a ``SparseAdagrad``, a ``SparseAdagradConfig``, or
+    ``None`` (defaults).  ``backend`` defaults to ``GatherBackend``.
+
+    Tables handled by the engine live in the BACKEND'S physical layout
+    (``init`` prepares them; ``export`` converts back to logical rows for
+    inspection/parity).  Checkpoints therefore roundtrip only through the
+    same placement they were saved with.
     """
 
-    def __init__(self, specs: Dict[str, TableSpec], capacity: int):
+    def __init__(
+        self,
+        specs: Dict[str, TableSpec],
+        capacity: int,
+        optimizer=None,
+        backend: Optional[EmbeddingBackend] = None,
+    ):
         self.specs = dict(specs)
         self.capacity = int(capacity)
+        if optimizer is None:
+            optimizer = SparseAdagrad()
+        elif isinstance(optimizer, SparseAdagradConfig):
+            optimizer = SparseAdagrad(optimizer)
+        self.opt: SparseAdagrad = optimizer
+        self.backend: EmbeddingBackend = backend if backend is not None else GatherBackend()
 
+    # ------------------------------------------------------------ lifecycle
     def init(self, rng: jax.Array, scale: float = 0.01) -> Dict[str, jnp.ndarray]:
+        """Random-normal logical init, converted to the backend's layout."""
         tables = {}
         for i, (name, spec) in enumerate(sorted(self.specs.items())):
             key = jax.random.fold_in(rng, i)
-            tables[name] = (
+            t = (
                 jax.random.normal(key, (spec.rows, spec.dim), jnp.float32) * scale
             ).astype(spec.dtype)
+            tables[name] = self.backend.prepare(t)
         return tables
 
-    def pull(self, table: jnp.ndarray, flat_ids: jnp.ndarray):
-        """Gather the working set for one table.  Returns (uids, inv, working)."""
-        uids, inv = pull_working_set(flat_ids, self.capacity)
-        working = jnp.take(table, uids, axis=0)
-        return uids, inv, working
+    def init_state(self, tables: Dict[str, jnp.ndarray]) -> SparseAdagradState:
+        return self.opt.init(tables)
 
+    def prepare(self, tables: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Logical tables -> backend layout (e.g. when init'd externally)."""
+        return {n: self.backend.prepare(t) for n, t in tables.items()}
+
+    def export(self, tables: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Backend layout -> logical rows (row i == feature id i)."""
+        return {n: self.backend.export(t) for n, t in tables.items()}
+
+    # ------------------------------------------------------------ pull/push
+    def ids_from_batch(self, batch) -> Dict[str, jnp.ndarray]:
+        """Extract each table's flattened id tensor from a batch dict."""
+        return {
+            name: batch[spec.id_field or name].reshape(-1)
+            for name, spec in self.specs.items()
+        }
+
+    def pull(self, tables, flat_ids: Dict[str, jnp.ndarray]) -> Dict[str, WorkingSet]:
+        """Algorithm 1 line 3: one working-set pull per table."""
+        return {
+            name: self.backend.pull(tables[name], ids, self.capacity)
+            for name, ids in flat_ids.items()
+        }
+
+    def pull_batch(self, tables, batch) -> Dict[str, WorkingSet]:
+        return self.pull(tables, self.ids_from_batch(batch))
+
+    def push(self, tables, accum, working_sets: Dict[str, WorkingSet], row_grads):
+        """Algorithm 1 line 13: scatter row updates back (sparse optimizer
+        applied by the backend, shard-locally for the routed placement)."""
+        new_tables, new_accum = {}, {}
+        for name, ws in working_sets.items():
+            nt, na = self.backend.push(
+                tables[name], accum[name], ws, row_grads[name], self.opt
+            )
+            new_tables[name] = nt
+            new_accum[name] = na
+        return new_tables, new_accum
+
+    @staticmethod
+    def overflow(working_sets: Dict[str, WorkingSet]) -> jnp.ndarray:
+        """Total dropped (unserved) requests this batch — the PS overload
+        counter production monitoring watches."""
+        return sum(ws.n_dropped for ws in working_sets.values())
+
+    # -------------------------------------------------------------- lookups
     @staticmethod
     def bag_from_working(
         working: jnp.ndarray,      # (capacity, dim) pulled rows

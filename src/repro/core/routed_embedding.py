@@ -19,6 +19,10 @@ bucket has a fixed capacity; overflowed requests are dropped (returned rows
 are zero, updates discarded) and COUNTED — production monitoring watches
 that counter exactly like PS-shard overload. Capacity is a config knob;
 tests run with capacity = worst case (lossless).
+
+Trainers reach this exchange through ``repro.core.embedding_backend.
+RoutedBackend`` (``--placement routed`` in the launcher); this module stays
+the raw shard_map layer.
 """
 
 from __future__ import annotations

@@ -9,6 +9,11 @@ Here tables are row-sharded jnp arrays; the update is a scatter over the
 unique row ids of the batch.  Under GSPMD the scatter is partitioned over the
 row-sharded table, so only rows crossing shard boundaries generate traffic —
 the TPU rendering of the parameter-server "push" path.
+
+The optimizer is owned by ``EmbeddingEngine`` and applied by the engine's
+``EmbeddingBackend``: ``GatherBackend`` calls ``apply_rows`` directly, while
+``RoutedBackend`` runs the same update shard-locally at the end of its
+reverse gradient route (see ``routed_embedding.push_body``).
 """
 
 from __future__ import annotations

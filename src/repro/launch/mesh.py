@@ -14,20 +14,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions: ``axis_types`` (and the AxisType
+    enum) only exist on newer releases; all axes here are Auto, which is
+    also the default, so omit the kwarg when unsupported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(n_pod: int = 2, data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     """Small mesh over host (CPU) devices for distributed tests/benches."""
-    return jax.make_mesh(
-        (n_pod, data, model), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    return _make_mesh((n_pod, data, model), ("pod", "data", "model"))
 
 
 # TPU v5e hardware constants (roofline targets).

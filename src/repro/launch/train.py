@@ -1,7 +1,29 @@
-"""Production training launcher.
+"""Production training launcher — config-driven via ``build_trainer``.
 
     PYTHONPATH=src python -m repro.launch.train --arch baidu-ctr --shape train_mb1k \
         --k 20 --merge two_phase --steps 200 --ckpt-dir /tmp/run1
+
+Model construction is delegated to ``repro.runtime.factory.build_trainer``
+(driven by the ``repro.configs`` registry); the launcher only wires flags,
+data streams, and fault tolerance.
+
+Sparse placement (``--placement``): how embedding rows move per batch,
+behind the ``EmbeddingBackend`` contract
+(``pull(table, ids, capacity) -> WorkingSet``,
+``push(table, accum, working_set, row_grads, opt)``):
+
+  - ``gather`` (default): dedup + ``jnp.take``; single-device exact, and
+    under GSPMD the compiler partitions the gather over row shards at the
+    cost of value-blind all-reduce traffic.
+  - ``routed``: the paper's PS request routing — ids bucketed by owning
+    shard, exchanged with explicit all_to_alls over a hash-sharded table
+    (wire ~= rows moved once); dropped-request counters are reported via
+    ``trainer.overflow_dropped``.  On this CPU container the mesh
+    degenerates to one shard, so the routed path runs end to end and its
+    loss matches ``gather`` (the acceptance check).
+
+``--capacity`` bounds the deduplicated working set per batch (static shape;
+must be divisible by the shard count for ``routed``).
 
 On a real TPU cluster each process calls ``jax.distributed.initialize()``
 (args: --coordinator/--num-processes/--process-id, or TPU auto-detection)
@@ -17,7 +39,6 @@ same command line (elastic: the mesh may differ across restarts).
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import time
 
@@ -34,6 +55,11 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--n-pod", type=int, default=2)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--sparse-lr", type=float, default=0.5)
+    ap.add_argument("--placement", default="gather",
+                    choices=["gather", "routed"],
+                    help="sparse pull/push backend (see module docstring)")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="working-set bound per batch (0: arch default)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--smoke", action="store_true", default=True,
@@ -57,18 +83,14 @@ def main():
             process_id=args.process_id,
         )
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
     from repro import configs
     from repro.core.kstep import KStepConfig
     from repro.core.sparse_optim import SparseAdagradConfig
     from repro.data import synthetic as S
-    from repro.models import gin as G
-    from repro.models import recsys as R
-    from repro.models import transformer as T
+    from repro.runtime.factory import build_trainer
     from repro.runtime.metrics import StreamingAUC
-    from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig
+    from repro.runtime.trainer import TrainerConfig
 
     spec = configs.get(args.arch)
     cfg = spec.smoke_cfg if args.smoke else spec.model_cfg
@@ -76,13 +98,13 @@ def main():
         n_pod=args.n_pod,
         kstep=KStepConfig(lr=args.lr, k=args.k, merge=args.merge),
         sparse=SparseAdagradConfig(lr=args.sparse_lr, initial_accumulator=0.01),
+        placement=args.placement, capacity=args.capacity or None,
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
     )
     t0 = time.perf_counter()
 
     if spec.family == "lm":
-        params = T.init_params(jax.random.key(0), cfg)
-        tr = DenseTrainer(lambda p, b: T.loss_fn(p, b, cfg), params, tcfg)
+        tr = build_trainer(args.arch, tcfg, smoke=args.smoke)
         if args.ckpt_dir and tr.resume():
             print(f"resumed at step {tr.step_num}")
         gen = S.lm_batches(seed=0, batch=max(args.n_pod * 4, 8), seq_len=64,
@@ -97,53 +119,35 @@ def main():
         gcfg = dc.replace(cfg, d_in=32, n_classes=5)
         g = S.community_graph(seed=0, n_nodes=2000, avg_degree=8,
                               d_feat=32, n_classes=5)
-        params = G.init_params(jax.random.key(0), gcfg)
-        tr = DenseTrainer(lambda p, b: G.loss_fn(p, b, gcfg), params, tcfg)
+        tr = build_trainer(args.arch, tcfg, smoke=args.smoke, model_cfg=gcfg)
         if args.ckpt_dir and tr.resume():
             print(f"resumed at step {tr.step_num}")
         batch = {k: np.stack([v] * args.n_pod) for k, v in
                  [("x", g.x), ("edge_src", g.edge_src),
                   ("edge_dst", g.edge_dst), ("labels", g.labels)]}
         loss = 0.0
-        for i in range(args.steps):
+        for _ in range(args.steps):
             loss = tr.train_step(batch, podded=True)
         print(f"final loss {loss:.4f} "
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return
 
-    # recsys family — hybrid trainer (adapters mirror cells.py)
+    # recsys family — hybrid trainer through the factory
     if args.arch == "baidu-ctr":
-        rng = jax.random.key(0)
-        dense = R.ctr_init_dense(rng, cfg)
-        tables = {"sparse": jax.random.normal(rng, (cfg.rows, cfg.embed_dim)) * 0.05}
-
-        def embed_fn(workings, invs, bp):
-            B, nnz = bp["ids"].shape
-            seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
-                   + bp["field_ids"]).reshape(-1)
-            emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
-                * bp["mask"].reshape(-1)[:, None]
-            bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
-            return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
-
-        def loss_fn(dp, emb, bp, predict=False):
-            logits = R.ctr_forward_from_emb(dp, emb, bp, cfg)
-            return jax.nn.sigmoid(logits) if predict \
-                else R.pointwise_loss(logits, bp["label"])
-
-        tr = HybridTrainer(dense, tables, embed_fn, loss_fn, {"sparse": "ids"},
-                           capacity=1 << 14, cfg=tcfg)
+        tr = build_trainer(args.arch, tcfg, smoke=args.smoke)
         if args.ckpt_dir and tr.resume():
             print(f"resumed at step {tr.step_num}")
         gen = S.ctr_batches(seed=1, batch=args.batch, rows=cfg.rows,
                             n_fields=cfg.n_fields, nnz=cfg.nnz_per_instance)
         meter = StreamingAUC(window=20)
         loss = 0.0
-        for i in range(args.steps):
+        for _ in range(args.steps):
             b = next(gen)
             meter.update(b["label"], tr.predict(b))
             loss = tr.train_step(b)
-        print(f"final loss {loss:.4f} online AUC {meter.value():.4f} "
+        print(f"final loss {loss:.6f} online AUC {meter.value():.4f} "
+              f"placement {args.placement} "
+              f"overflow_dropped {tr.overflow_dropped} "
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return
 

@@ -334,6 +334,42 @@ def ctr_embed_batch(tables, batch, cfg: CTRConfig) -> jnp.ndarray:
     return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
 
 
+def ctr_embed_from_workings(cfg: CTRConfig):
+    """Build the HybridTrainer embed adapter for the paper's CTR model.
+
+    The returned ``embed(workings, invs, batch)`` routes the per-field bag
+    lookup through the pulled working set (``workings["sparse"]`` are the
+    deduplicated rows, ``invs["sparse"]`` maps id slots to working rows), so
+    autodiff lands gradients on the compact pulled rows — Algorithm 1's
+    pull path.  This is the one canonical copy used by the trainer factory,
+    examples, and benchmarks.
+    """
+
+    def embed(workings, invs, batch):
+        B, _ = batch["ids"].shape
+        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
+               + batch["field_ids"]).reshape(-1)
+        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
+            * batch["mask"].reshape(-1)[:, None]
+        bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
+        return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
+
+    return embed
+
+
+def ctr_hybrid_loss(cfg: CTRConfig):
+    """Build the HybridTrainer loss adapter: BCE on the field-attention
+    tower (``predict=True`` returns sigmoid scores for online inference)."""
+
+    def loss(dense, emb, batch, predict=False):
+        logits = ctr_forward_from_emb(dense, emb, batch, cfg)
+        if predict:
+            return jax.nn.sigmoid(logits)
+        return pointwise_loss(logits, batch["label"])
+
+    return loss
+
+
 def ctr_forward_from_emb(dense, emb, batch, cfg: CTRConfig) -> jnp.ndarray:
     x = emb.astype(cfg.dtype)                                       # (B,F,d)
     H = cfg.attn_heads

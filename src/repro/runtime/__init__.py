@@ -1,2 +1,8 @@
-from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig  # noqa: F401
+from repro.runtime.trainer import (  # noqa: F401
+    DenseTrainer,
+    HybridTrainer,
+    TrainerConfig,
+    pod_batch,
+)
+from repro.runtime.factory import build_trainer  # noqa: F401
 from repro.runtime.metrics import auc  # noqa: F401

@@ -1,0 +1,108 @@
+"""Config-driven trainer construction: ``build_trainer(arch, TrainerConfig)``.
+
+One entry point from the ``repro.configs`` registry to a ready trainer, so
+examples, benchmarks, and ``repro.launch.train`` stop hand-rolling model
+construction:
+
+    tcfg = TrainerConfig(n_pod=2, placement="routed")
+    tr = build_trainer("baidu-ctr", tcfg)        # HybridTrainer
+    tr.fit(S.ctr_batches(...), steps=200)
+
+Family wiring:
+  - ``lm``  -> DenseTrainer over ``repro.models.transformer``
+  - ``gnn`` -> DenseTrainer over ``repro.models.gin``
+  - ``recsys`` (baidu-ctr) -> HybridTrainer: an ``EmbeddingEngine`` built
+    from ``ctr_table_specs`` with the backend selected by
+    ``TrainerConfig.placement`` ("gather" | "routed"), and the canonical
+    embed/loss adapters from ``repro.models.recsys``.
+
+``model_cfg`` overrides the registry's smoke/full config (used by examples
+that scale the table up or down); other recsys archs (dlrm/din/dien/
+two-tower) keep their example drivers until their working-set adapters are
+added (ROADMAP open item).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from repro import configs
+from repro.core.embedding_backend import make_backend
+from repro.core.embedding_engine import EmbeddingEngine, TableSpec
+from repro.core.sparse_optim import SparseAdagrad
+from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig
+
+# Bounds the deduplicated ids of one global batch for CTR smoke shapes
+# (batch 1k x nnz 100 Zipf draws stay well under this).
+DEFAULT_CTR_CAPACITY = 1 << 14
+
+
+def build_ctr_engine(
+    model_cfg,
+    cfg: TrainerConfig,
+    mesh: Optional[jax.sharding.Mesh] = None,
+) -> EmbeddingEngine:
+    """EmbeddingEngine for the paper's CTR model, placement-selected."""
+    from repro.models import recsys as R
+
+    specs = {
+        name: dataclasses.replace(s, id_field="ids")
+        for name, s in R.ctr_table_specs(model_cfg).items()
+    }
+    return EmbeddingEngine(
+        specs,
+        capacity=cfg.capacity or DEFAULT_CTR_CAPACITY,
+        optimizer=SparseAdagrad(cfg.sparse),
+        backend=make_backend(cfg.placement, mesh=mesh),
+    )
+
+
+def build_trainer(
+    arch: str,
+    cfg: TrainerConfig,
+    *,
+    smoke: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    seed: int = 0,
+    model_cfg: Any = None,
+    table_scale: float = 0.05,
+):
+    """Construct the trainer for ``arch`` from the config registry."""
+    spec = configs.get(arch)
+    mcfg = model_cfg if model_cfg is not None else (
+        spec.smoke_cfg if smoke else spec.model_cfg
+    )
+    rng = jax.random.key(seed)
+
+    if spec.family == "lm":
+        from repro.models import transformer as T
+
+        params = T.init_params(rng, mcfg)
+        return DenseTrainer(lambda p, b: T.loss_fn(p, b, mcfg), params, cfg, mesh=mesh)
+
+    if spec.family == "gnn":
+        from repro.models import gin as G
+
+        params = G.init_params(rng, mcfg)
+        return DenseTrainer(lambda p, b: G.loss_fn(p, b, mcfg), params, cfg, mesh=mesh)
+
+    if arch == "baidu-ctr":
+        from repro.models import recsys as R
+
+        dense = R.ctr_init_dense(rng, mcfg)
+        engine = build_ctr_engine(mcfg, cfg, mesh=mesh)
+        tables = engine.init(rng, scale=table_scale)
+        return HybridTrainer(
+            dense, engine,
+            R.ctr_embed_from_workings(mcfg), R.ctr_hybrid_loss(mcfg),
+            cfg, mesh=mesh, tables=tables,
+        )
+
+    raise NotImplementedError(
+        f"build_trainer: no working-set adapter for {arch!r} yet "
+        f"(supported: all lm/gnn archs + baidu-ctr; dlrm/din/dien/two-tower "
+        f"run through their example drivers)"
+    )

@@ -5,12 +5,18 @@ podded replicas + k-step Adam; per-pod batches; static local/merge
 executables; checkpoint/restart; straggler-tolerant merging.
 
 ``HybridTrainer`` — the paper's CTR/recsys regime: dense tower under k-step
-Adam + giant sparse tables under every-step working-set AdaGrad
-(Algorithm 1's pull -> train -> push, with the pull deduplicated across the
-*global* batch so the sparse sync stays O(working set)).
+Adam + giant sparse tables owned by an ``EmbeddingEngine`` (Algorithm 1's
+pull -> train -> push through a pluggable ``EmbeddingBackend``; the pull is
+deduplicated across the *global* batch so the sparse sync stays O(working
+set), and overflowed pulls are counted in ``overflow_dropped``).
+
+Construct trainers directly, or — config-driven — through
+``repro.runtime.factory.build_trainer(arch_name, TrainerConfig)``, which
+wires models, engines, and placements from the ``repro.configs`` registry.
 
 Both runtimes implement the fault-tolerance contract:
 - crash-consistent checkpoints (atomic dirs) at a configurable cadence,
+  including the int8 error-feedback residual when ``merge="int8_ef"``,
 - ``resume()`` picks up the newest complete checkpoint (mesh-independent),
 - the k-step merge is the only cross-pod sync point; ``merge_quorum < 1.0``
   lets the merge proceed over a subset of pods (straggler mitigation: any
@@ -28,10 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
-from repro.core.embedding_engine import pull_working_set
-from repro.core.kstep import KStepAdam, KStepConfig, pod_replicate
-from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
+from repro.checkpoint import CheckpointManager, latest_step, read_manifest
+from repro.core.embedding_engine import EmbeddingEngine
+from repro.core.kstep import KStepAdam, KStepConfig, pod_replicate, pod_slice
+from repro.core.sparse_optim import SparseAdagradConfig
 
 Pytree = Any
 
@@ -41,6 +47,8 @@ class TrainerConfig:
     n_pod: int = 1
     kstep: KStepConfig = dataclasses.field(default_factory=KStepConfig)
     sparse: SparseAdagradConfig = dataclasses.field(default_factory=SparseAdagradConfig)
+    placement: str = "gather"     # sparse backend: "gather" | "routed"
+    capacity: Optional[int] = None  # working-set bound (None: arch default)
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     ckpt_keep: int = 3
@@ -49,6 +57,47 @@ class TrainerConfig:
     merge_delay: int = 0          # async merge application lag (in merges)
     log_every: int = 50
     donate: bool = True
+
+
+def pod_batch(batch: Dict[str, np.ndarray], n_pod: int) -> Dict[str, jnp.ndarray]:
+    """Split a global batch into per-pod shards (leading pod dim)."""
+    def f(x):
+        x = jnp.asarray(x)
+        return x.reshape((n_pod, x.shape[0] // n_pod) + x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def _drop_ef_if_absent(like: dict, ckpt: CheckpointManager) -> dict:
+    """Restoring with merge="int8_ef" must tolerate checkpoints written
+    without the residual (older runs, or runs under a lossless merge): drop
+    'ef' from the restore template when the newest manifest lacks it, so
+    resume keeps the fresh zero residual instead of raising KeyError."""
+    if "ef" not in like:
+        return like
+    step = latest_step(ckpt.directory)
+    man = read_manifest(ckpt.directory, step) if step is not None else None
+    if man is not None and not any(
+        k.split("/")[0] == "ef" for k in man["leaves"]
+    ):
+        like = dict(like)
+        like.pop("ef")
+    return like
+
+
+def _fit_loop(trainer, batches: Iterator, steps: int, eval_fn=None) -> list:
+    """Shared fit(): train ``steps`` batches, log every ``log_every``."""
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        loss = trainer.train_step(next(batches))
+        if trainer.step_num % trainer.cfg.log_every == 0:
+            rec = {"step": trainer.step_num, "loss": loss,
+                   "sec": time.perf_counter() - t0}
+            if eval_fn:
+                rec["eval"] = eval_fn(trainer)
+            trainer.history.append(rec)
+    if trainer.ckpt:
+        trainer.ckpt.wait()
+    return trainer.history
 
 
 class DenseTrainer:
@@ -92,11 +141,7 @@ class DenseTrainer:
         return step
 
     def pod_batch(self, batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
-        """Split the global batch into per-pod shards (leading pod dim)."""
-        def f(x):
-            x = jnp.asarray(x)
-            return x.reshape((self.n_pod, x.shape[0] // self.n_pod) + x.shape[1:])
-        return jax.tree.map(f, batch)
+        return pod_batch(batch, self.n_pod)
 
     def train_step(self, batch, podded: bool = False) -> float:
         """``podded=True``: batch leaves already carry the leading pod dim
@@ -111,19 +156,25 @@ class DenseTrainer:
         return float(loss)
 
     # ----------------------------------------------------- fault tolerance
+    def _ckpt_tree(self):
+        tree = {"params": self.params, "m": self.opt_state.m,
+                "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
+        if self.opt_state.ef is not None:
+            # int8_ef merge: the error-feedback residual is state — dropping
+            # it on restart silently re-zeros the compensation.
+            tree["ef"] = self.opt_state.ef
+        return tree
+
     def save(self):
         self.ckpt.save(
-            self.step_num,
-            {"params": self.params, "m": self.opt_state.m,
-             "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat},
+            self.step_num, self._ckpt_tree(),
             meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k},
         )
 
     def resume(self) -> bool:
         if not self.ckpt:
             return False
-        like = {"params": self.params, "m": self.opt_state.m,
-                "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
+        like = _drop_ef_if_absent(self._ckpt_tree(), self.ckpt)
         step, tree = self.ckpt.restore_latest(like)
         if step is None:
             return False
@@ -132,57 +183,59 @@ class DenseTrainer:
         self.opt_state = self.opt_state._replace(
             step=jnp.asarray(step, jnp.int32), m=tree["m"],
             v_local=tree["v_local"], v_hat=tree["v_hat"],
+            ef=tree.get("ef", self.opt_state.ef),
         )
         return True
 
     def fit(self, batches: Iterator, steps: int, eval_fn=None) -> list:
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            loss = self.train_step(next(batches))
-            if self.step_num % self.cfg.log_every == 0:
-                rec = {"step": self.step_num, "loss": loss,
-                       "sec": time.perf_counter() - t0}
-                if eval_fn:
-                    rec["eval"] = eval_fn(self)
-                self.history.append(rec)
-        if self.ckpt:
-            self.ckpt.wait()
-        return self.history
+        return _fit_loop(self, batches, steps, eval_fn)
 
 
 class HybridTrainer:
-    """Dense tower (k-step Adam, podded) + sparse tables (every-step AdaGrad
-    over pulled working sets) — the paper's production regime.
+    """Dense tower (k-step Adam, podded) + sparse tables behind an
+    ``EmbeddingEngine`` — the paper's production regime.
 
-    ``embed_fn(workings, batch)``: build model inputs from pulled rows.
-    ``loss_fn(dense, emb, batch)``: dense-side loss given embeddings.
-    ``id_fields``: {table_name: batch key holding its ids}.
+    Parameters
+    ----------
+    dense_params: the dense tower's parameter pytree (un-podded).
+    engine: owns TableSpecs, capacity, the sparse optimizer, and the
+        placement backend; the trainer never touches raw tables directly.
+    embed_fn(workings, invs, batch): build model inputs from pulled rows
+        (``workings[name]`` = ``WorkingSet.rows``, ``invs[name]`` = the
+        inverse map restricted to this pod's batch shard).
+    loss_fn(dense, emb, batch, predict=False): dense-side loss given
+        embeddings (``predict=True`` returns scores).
+    tables: optional pre-initialized tables IN THE BACKEND'S LAYOUT
+        (e.g. from ``engine.init`` or ``engine.prepare``); ``None`` lets the
+        engine initialize them from ``rng``.
     """
 
     def __init__(
         self,
         dense_params: Pytree,
-        tables: Dict[str, jnp.ndarray],
-        embed_from_workings: Callable,
+        engine: EmbeddingEngine,
+        embed_fn: Callable,
         loss_fn: Callable,
-        id_fields: Dict[str, str],
-        capacity: int,
         cfg: TrainerConfig,
         mesh: Optional[jax.sharding.Mesh] = None,
+        tables: Optional[Dict[str, jnp.ndarray]] = None,
+        rng: Optional[jax.Array] = None,
     ):
         self.cfg = cfg
         self.n_pod = cfg.n_pod
         self.mesh = mesh
+        self.engine = engine
         self.dense = pod_replicate(dense_params, cfg.n_pod)
-        self.tables = tables
-        self.capacity = capacity
-        self.id_fields = id_fields
+        self.tables = (
+            tables if tables is not None
+            else engine.init(rng if rng is not None else jax.random.key(0))
+        )
         self.opt = KStepAdam(cfg.kstep, cfg.n_pod, mesh=mesh)
         self.opt_state = self.opt.init(self.dense)
-        self.sparse_opt = SparseAdagrad(cfg.sparse)
-        self.sparse_state = self.sparse_opt.init(tables)
+        self.sparse_state = engine.init_state(self.tables)
         self.step_num = 0
-        self._embed = embed_from_workings
+        self.overflow_dropped = 0   # cumulative unserved pull/push requests
+        self._embed = embed_fn
         self._loss = loss_fn
         self.ckpt = (
             CheckpointManager(cfg.ckpt_dir, cfg.ckpt_keep, cfg.ckpt_every, cfg.ckpt_async)
@@ -193,21 +246,14 @@ class HybridTrainer:
         self.history: list = []
 
     def _make_step(self, merge: bool):
-        names = sorted(self.id_fields)
-
         def step(dense, tables, accum, batch, batch_podded, opt_state):
-            # ---- PULL (Algorithm 1 line 3): dedup global ids, gather rows.
-            pulls = {}
-            for name in names:
-                ids = batch[self.id_fields[name]].reshape(-1)
-                uids, inv = pull_working_set(ids, self.capacity)
-                pulls[name] = (uids, inv, jnp.take(tables[name], uids, axis=0))
-
-            workings = {n: p[2] for n, p in pulls.items()}
+            # ---- PULL (Algorithm 1 line 3): engine dedups + gathers/routes.
+            wss = self.engine.pull_batch(tables, batch)
+            workings = {n: ws.rows for n, ws in wss.items()}
             # inverse indices sliced per pod so each replica embeds only its
             # own batch shard (vmapped leading pod dim)
             invs_podded = {
-                n: p[1].reshape(self.n_pod, -1) for n, p in pulls.items()
+                n: ws.inverse.reshape(self.n_pod, -1) for n, ws in wss.items()
             }
 
             # ---- local fwd/bwd on the working set (line 12)
@@ -230,35 +276,27 @@ class HybridTrainer:
             # ---- dense k-step Adam
             new_dense, new_opt = self.opt.step(dense, dense_g, opt_state, merge=merge)
 
-            # ---- PUSH (line 13): scatter AdaGrad row updates into tables.
-            new_tables, new_accum = {}, {}
-            for name in names:
-                uids = pulls[name][0]
-                nt, na = self.sparse_opt.apply_rows(
-                    tables[name], accum[name], uids, work_g[name]
-                )
-                new_tables[name] = nt
-                new_accum[name] = na
-            return new_dense, new_tables, new_accum, new_opt, jnp.mean(losses)
+            # ---- PUSH (line 13): backend scatters/routes the row updates.
+            new_tables, new_accum = self.engine.push(tables, accum, wss, work_g)
+            return (new_dense, new_tables, new_accum, new_opt,
+                    jnp.mean(losses), self.engine.overflow(wss))
 
         return step
 
     def pod_batch(self, batch):
-        def f(x):
-            x = jnp.asarray(x)
-            return x.reshape((self.n_pod, x.shape[0] // self.n_pod) + x.shape[1:])
-        return jax.tree.map(f, batch)
+        return pod_batch(batch, self.n_pod)
 
     def train_step(self, batch) -> float:
         self.step_num += 1
         is_merge = (self.step_num % self.cfg.kstep.k) == 0
         fn = self._step_merge if is_merge else self._step_local
         batch = jax.tree.map(jnp.asarray, batch)
-        (self.dense, self.tables, accum, self.opt_state, loss) = fn(
+        (self.dense, self.tables, accum, self.opt_state, loss, dropped) = fn(
             self.dense, self.tables, self.sparse_state.accum,
             batch, self.pod_batch(batch), self.opt_state,
         )
         self.sparse_state = self.sparse_state._replace(accum=accum)
+        self.overflow_dropped += int(dropped)
         if self.ckpt and self.ckpt.should_save(self.step_num):
             self.save()
         return float(loss)
@@ -266,33 +304,56 @@ class HybridTrainer:
     def predict(self, batch) -> np.ndarray:
         """Inference with pod-0's dense replica (online predict-then-train)."""
         batch = jax.tree.map(jnp.asarray, batch)
-        dense0 = jax.tree.map(lambda x: x[0], self.dense)
-        names = sorted(self.id_fields)
-        pulls = {}
-        for name in names:
-            ids = batch[self.id_fields[name]].reshape(-1)
-            uids, inv = pull_working_set(ids, self.capacity)
-            pulls[name] = (inv, jnp.take(self.tables[name], uids, axis=0))
-        workings = {n: p[1] for n, p in pulls.items()}
-        invs = {n: p[0] for n, p in pulls.items()}
+        dense0 = pod_slice(self.dense, 0)
+        wss = self.engine.pull_batch(self.tables, batch)
+        workings = {n: ws.rows for n, ws in wss.items()}
+        invs = {n: ws.inverse for n, ws in wss.items()}
         emb = self._embed(workings, invs, batch)
         return np.asarray(self._loss(dense0, emb, batch, predict=True))
 
+    def fit(self, batches: Iterator, steps: int, eval_fn=None) -> list:
+        return _fit_loop(self, batches, steps, eval_fn)
+
+    # ----------------------------------------------------- fault tolerance
+    def _ckpt_tree(self):
+        tree = {"dense": self.dense, "tables": self.tables,
+                "accum": self.sparse_state.accum, "m": self.opt_state.m,
+                "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
+        if self.opt_state.ef is not None:
+            tree["ef"] = self.opt_state.ef
+        return tree
+
+    def _backend_sig(self):
+        """Identity of the sparse physical layout baked into the tables."""
+        b = self.engine.backend
+        return {"backend": type(b).__name__,
+                "n_shards": getattr(b, "n_shards", 1)}
+
     def save(self):
         self.ckpt.save(
-            self.step_num,
-            {"dense": self.dense, "tables": self.tables,
-             "accum": self.sparse_state.accum, "m": self.opt_state.m,
-             "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat},
-            meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k},
+            self.step_num, self._ckpt_tree(),
+            meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k,
+                  **self._backend_sig()},
         )
 
     def resume(self) -> bool:
         if not self.ckpt:
             return False
-        like = {"dense": self.dense, "tables": self.tables,
-                "accum": self.sparse_state.accum, "m": self.opt_state.m,
-                "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
+        # Tables are checkpointed in the backend's physical layout; loading
+        # them under a different backend (or routed shard count, which
+        # changes the hash-slot permutation) would silently read wrong rows.
+        s = latest_step(self.ckpt.directory)
+        man = read_manifest(self.ckpt.directory, s) if s is not None else None
+        if man is not None and "backend" in man.get("meta", {}):
+            saved = {k: man["meta"][k] for k in ("backend", "n_shards")}
+            if saved != self._backend_sig():
+                raise ValueError(
+                    f"checkpoint written with {saved} but the current engine "
+                    f"uses {self._backend_sig()}: the tables' physical "
+                    f"layouts differ — resume with the saving placement, or "
+                    f"export/re-prepare the tables explicitly"
+                )
+        like = _drop_ef_if_absent(self._ckpt_tree(), self.ckpt)
         step, tree = self.ckpt.restore_latest(like)
         if step is None:
             return False
@@ -302,5 +363,6 @@ class HybridTrainer:
         self.opt_state = self.opt_state._replace(
             step=jnp.asarray(step, jnp.int32), m=tree["m"],
             v_local=tree["v_local"], v_hat=tree["v_hat"],
+            ef=tree.get("ef", self.opt_state.ef),
         )
         return True

@@ -1,0 +1,100 @@
+"""Deterministic fallback for ``hypothesis`` when it isn't installed.
+
+The property tests in this suite use a small slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)``, ``@given(...)`` and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.  This shim replays
+each property over a deterministic sample — range endpoints first (the
+classic edge cases), then seeded pseudo-random draws — so the suite keeps
+its coverage in containers without the dependency instead of skipping four
+modules at collection time.
+
+Usage (see test_embedding_engine.py):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from tests._hypothesis_compat import given, settings, strategies as st
+
+With real hypothesis installed (``pip install -e .[test]``) this module is
+never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+# Cap on replayed examples per property: hypothesis shrinks/dedups cheaply,
+# a plain replay recompiles jitted code per distinct shape — keep it fast.
+_MAX_FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self.edges = list(edges)
+
+    def example(self, rng, i: int):
+        if i < len(self.edges):
+            return self.edges[i]
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            edges=(min_value, max_value),
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(min_value + (max_value - min_value) * rng.random()),
+            edges=(min_value, max_value),
+        )
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        xs = list(elements)
+        return _Strategy(lambda rng: xs[int(rng.integers(0, len(xs)))], edges=xs)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), edges=(False, True))
+
+
+def settings(max_examples: int = 10, **_kw):
+    """Record the example budget; ignore hypothesis-only knobs (deadline...)."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Replay the property over deterministic draws (edges, then seeded)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(
+                getattr(wrapper, "_max_examples", 10), _MAX_FALLBACK_EXAMPLES
+            )
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                pos = tuple(s.example(rng, i) for s in arg_strategies)
+                kw = {k: s.example(rng, i) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **kw)
+
+        # pytest resolves fixtures through __wrapped__'s signature; the
+        # property's drawn arguments must not look like fixture requests.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

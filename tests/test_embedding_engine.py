@@ -4,7 +4,10 @@ property tested (these are the paper's Algorithm 1 lines 3/11/13)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic replay
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core.embedding_engine import (
     EmbeddingEngine,
@@ -94,11 +97,33 @@ def test_engine_end_to_end():
     tables = engine.init(jax.random.key(0))
     ids = jnp.asarray([3, 3, 7, 9, 3], jnp.int32)
     seg = jnp.asarray([0, 0, 1, 1, 2], jnp.int32)
-    uids, inv, working = engine.pull(tables["t"], ids)
-    bags = engine.bag_from_working(working, inv, seg, num_bags=3)
+    ws = engine.pull(tables, {"t": ids})["t"]
+    assert int(ws.n_dropped) == 0
+    bags = engine.bag_from_working(ws.rows, ws.inverse, seg, num_bags=3)
     expect = embedding_bag(tables["t"], ids, seg, 3)
     np.testing.assert_allclose(np.asarray(bags), np.asarray(expect), atol=1e-6)
     assert engine.memory_bytes() == 50 * 4 * 4
+
+
+def test_engine_ids_from_batch_and_push():
+    """Facade roundtrip: pull_batch -> push applies working-set AdaGrad."""
+    engine = EmbeddingEngine(
+        {"t": TableSpec("t", rows=40, dim=4, id_field="my_ids")}, capacity=8,
+        optimizer=SparseAdagradConfig(lr=0.1),
+    )
+    tables = engine.init(jax.random.key(1))
+    state = engine.init_state(tables)
+    batch = {"my_ids": jnp.asarray([[1, 2], [2, 5]], jnp.int32)}
+    wss = engine.pull_batch(tables, batch)
+    # per-slot unit grads accumulated onto working rows, like autodiff would
+    grads = {"t": jnp.zeros_like(wss["t"].rows).at[wss["t"].inverse].add(1.0)}
+    new_tables, new_accum = engine.push(tables, state.accum, wss, grads)
+    # only the 3 touched rows moved
+    moved = np.flatnonzero(
+        np.any(np.asarray(new_tables["t"]) != np.asarray(tables["t"]), axis=1)
+    )
+    np.testing.assert_array_equal(moved, [1, 2, 5])
+    assert int(engine.overflow(wss)) == 0
 
 
 def test_gradient_through_pull_equals_direct():

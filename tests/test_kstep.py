@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic replay
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.core.kstep import KStepAdam, KStepConfig, pod_replicate, pod_consensus_error
 from repro.optim.adam import Adam

@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic replay
+    from tests._hypothesis_compat import given, settings, strategies as st
 
 from repro.models import gin as G
 from repro.models import recsys as R

