@@ -1,4 +1,5 @@
-"""Paper Fig. 10: communication ratio of k-step merging vs the baseline.
+"""Paper Fig. 10: communication ratio of k-step merging vs the baseline,
+plus the sparse-placement wire accounting (routed vs GSPMD gather).
 
 The paper measures model-transmission time ratio ~ 1/k (18.1%, 10.8%, 6.4%,
 2.8%, 1.2% for k = 10..200).  We reproduce the byte accounting exactly: the
@@ -6,6 +7,11 @@ per-step cross-pod (DCN) bytes of the k-step scheme are the merge payload
 amortized over k local steps, vs the every-step gradient sync of the
 baseline (same payload every step).  Byte counts come from the compiled
 multi-pod merge HLO (fig6 probe); the ratio is payload-independent.
+
+The sparse rows quantify what ``--placement routed`` buys on the same
+production mesh: one working-set pull+push compiled under GSPMD (row-
+sharded table, value-blind masked-partials + all-reduce) vs the explicit
+all_to_all request routing — per-device collective bytes and their ratio.
 """
 
 from __future__ import annotations
@@ -16,19 +22,26 @@ import subprocess
 import sys
 
 
-def run(payload_mb: float = 64.0):
+def _probe(probe_args):
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = "src"
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks._mesh_probe", "--probe", "merge",
-         "--schedule", "two_phase", "--payload-mb", str(payload_mb)],
+        [sys.executable, "-m", "benchmarks._mesh_probe"] + probe_args,
         capture_output=True, text=True, env=env, timeout=900,
     )
-    results = []
     if out.returncode != 0:
-        return [("fig10_comm_ratio", 0.0, f"ERROR:{out.stderr[-200:]}")]
-    rec = json.loads(out.stdout.strip().splitlines()[-1])
+        raise RuntimeError(out.stderr[-200:])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(payload_mb: float = 64.0):
+    results = []
+    try:
+        rec = _probe(["--probe", "merge", "--schedule", "two_phase",
+                      "--payload-mb", str(payload_mb)])
+    except RuntimeError as e:
+        return [("fig10_comm_ratio", 0.0, f"ERROR:{e}")]
     merge_dcn = rec["dcn_bytes_per_device"]
     # baseline: the same payload synchronizes cross-pod EVERY step
     for k in [10, 20, 50, 100, 200]:
@@ -38,6 +51,29 @@ def run(payload_mb: float = 64.0):
             f"per_step_dcn_MB={merge_dcn / k / 1e6:.4f},"
             f"ratio_vs_every_step={ratio:.4f},paper={_paper_ratio(k):.3f}",
         ))
+
+    # --placement routed vs GSPMD gather: per-step sparse exchange bytes
+    try:
+        sparse = {
+            p: _probe(["--probe", "sparse", "--placement", p])
+            for p in ("gather", "routed")
+        }
+    except RuntimeError as e:
+        results.append(("fig10_sparse", 0.0, f"ERROR:{e}"))
+        return results
+    for p, rec in sparse.items():
+        results.append((
+            f"fig10_sparse_{p}", 0.0,
+            f"total_MB_per_device={rec['total_bytes_per_device'] / 1e6:.4f},"
+            f"dcn_MB={rec['dcn_bytes_per_device'] / 1e6:.4f},"
+            f"ici_MB={rec['ici_bytes_per_device'] / 1e6:.4f}",
+        ))
+    g = sparse["gather"]["total_bytes_per_device"]
+    r = sparse["routed"]["total_bytes_per_device"]
+    results.append((
+        "fig10_routed_vs_gspmd", 0.0,
+        f"wire_ratio={r / max(g, 1):.4f},saving={1 - r / max(g, 1):.4f}",
+    ))
     return results
 
 

@@ -25,6 +25,7 @@ def main() -> None:
         fig6_twophase,
         fig9_kstep_auc,
         fig10_comm_ratio,
+        fig_cache_hier,
         table1_hashing,
     )
 
@@ -35,6 +36,7 @@ def main() -> None:
         "fig6": lambda: fig6_twophase.run(),
         "fig9": lambda: fig9_kstep_auc.run(steps=steps),
         "fig10": lambda: fig10_comm_ratio.run(),
+        "fig_cache": lambda: fig_cache_hier.run(steps=steps),
     }
 
     print("name,us_per_call,derived")

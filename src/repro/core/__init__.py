@@ -14,6 +14,7 @@ from repro.core.embedding_backend import (  # noqa: F401
     WorkingSet,
     make_backend,
 )
+from repro.core.cache_tier import CachedBackend, CacheState  # noqa: F401
 from repro.core.embedding_engine import (  # noqa: F401
     EmbeddingEngine,
     TableSpec,

@@ -1,0 +1,246 @@
+"""Hierarchical hot/cold cache tier — the paper's §2.3 parameter hierarchy.
+
+The paper's core systems claim is that terabyte tables never need to be
+accelerator-resident: CTR traffic is Zipf-skewed, so a device cache holding
+the hot working set (plus a host tier holding everything) serves almost all
+pulls locally.  ``CachedBackend`` is that placement behind the
+``EmbeddingBackend`` contract:
+
+  - the FULL table and its AdaGrad accumulator stay host-committed (they are
+    threaded through pull/push untouched except for cache spills — on a real
+    accelerator they would be ``jax.device_put`` to the host platform and
+    touched only by the miss gather / spill scatter DMAs),
+  - a fixed-size device cache of ``cache_rows`` slots holds the hottest rows
+    together with their accumulator rows, an id->slot map, per-slot
+    access-frequency counters, and dirty bits — all carried as a
+    jit-traceable ``CacheState`` pytree through the compiled train step.
+
+Per pull (one batched pass, no host round-trips per id):
+  1. dedup the batch ids (shared ``_dedup``), look every unique id up in the
+     id->slot map — hits are served from the cache;
+  2. LFU-with-decay eviction: frequencies decay by ``decay``, the coldest
+     unprotected slots (never a slot hit by the current batch) are chosen
+     with one ``top_k``; evicted *dirty* rows spill value+accumulator back
+     to the host table in one batched scatter;
+  3. misses fetch value+accumulator rows from host in ONE batched gather
+     and are admitted into the victim slots.
+
+``push`` writes the AdaGrad row update through to the cache only (marking
+slots dirty) with arithmetic bit-identical to ``SparseAdagrad.apply_rows``
+— so with ``cache_rows >= table rows`` the backend never evicts and is
+bit-identical to ``GatherBackend`` (asserted by ``tests/test_cache_tier``).
+``flush`` writes all dirty rows back (checkpoint export / parity reads).
+
+Host<->device traffic is metered in bytes (value + f32 accumulator rows per
+miss fetch and per dirty spill) so ``benchmarks/fig_cache_hier.py`` can
+reproduce the cache-size-vs-traffic story.  At true 1e11-row scale the dense
+``id_slot`` map would be a device hash table; at repro scale the dense int32
+map (4 bytes/row vs 260+ bytes/row for value+accum) keeps it simple.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding_backend import WorkingSet, _dedup, _with_drop_row
+from repro.core.sparse_optim import SparseAdagrad
+
+
+class CacheState(NamedTuple):
+    """Device-cache state for ONE table (a jit-traceable pytree).
+
+    Counter convention: a "lookup" is one (non-dropped) id slot served this
+    step; a fetched row serves every same-batch duplicate of its id, so
+    ``hit_rate = 1 - fetched / lookups`` is the fraction of lookups served
+    without host traffic.  Counters are f32 (monotonic, no x64 in jit).
+    """
+
+    slot_uid: jnp.ndarray    # (C,) int32 — logical id held by each slot; -1 empty
+    id_slot: jnp.ndarray     # (rows,) int32 — id -> slot; -1 not cached
+    rows: jnp.ndarray        # (C, dim) table dtype — cached row values
+    accum: jnp.ndarray       # (C, dim) f32 — cached AdaGrad accumulator rows
+    freq: jnp.ndarray        # (C,) f32 — LFU-with-decay counters
+    dirty: jnp.ndarray       # (C,) bool — row updated since admission
+    lookups: jnp.ndarray     # () f32 — id slots served
+    fetched: jnp.ndarray     # () f32 — unique rows fetched from host (misses)
+    evictions: jnp.ndarray   # () f32 — occupied slots reassigned
+    bytes_h2d: jnp.ndarray   # () f32 — host->device fetch traffic
+    bytes_d2h: jnp.ndarray   # () f32 — device->host spill traffic
+
+
+class CachedBackend:
+    """Hot/cold placement: device cache over a host-resident table.
+
+    Parameters
+    ----------
+    cache_rows: device cache size C in rows.  Must be >= the pull capacity
+        (one batch's working set must fit) — enforced at trace time.
+        ``cache_rows >= table rows`` degenerates to a full mirror that is
+        bit-identical to ``GatherBackend``.
+    decay: multiplicative LFU frequency decay per pull (1.0 = plain LFU;
+        lower values forget stale heat faster — drifting Zipf heads).
+    """
+
+    def __init__(self, cache_rows: int, decay: float = 0.95):
+        if cache_rows <= 0:
+            raise ValueError(f"cache_rows must be positive, got {cache_rows}")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.cache_rows = int(cache_rows)
+        self.decay = float(decay)
+
+    # tables stay in logical row layout; the hierarchy lives in CacheState
+    def prepare(self, table: jnp.ndarray) -> jnp.ndarray:
+        return table
+
+    def export(self, table: jnp.ndarray) -> jnp.ndarray:
+        return table
+
+    def init_state(self, table: jnp.ndarray) -> CacheState:
+        n_rows, dim = table.shape
+        C = self.cache_rows
+        z = jnp.zeros((), jnp.float32)
+        return CacheState(
+            slot_uid=jnp.full((C,), -1, jnp.int32),
+            id_slot=jnp.full((n_rows,), -1, jnp.int32),
+            rows=jnp.zeros((C, dim), table.dtype),
+            accum=jnp.zeros((C, dim), jnp.float32),
+            freq=jnp.zeros((C,), jnp.float32),
+            dirty=jnp.zeros((C,), bool),
+            lookups=z, fetched=z, evictions=z, bytes_h2d=z, bytes_d2h=z,
+        )
+
+    def _row_bytes(self, table: jnp.ndarray) -> int:
+        # one row moved = value row + its f32 accumulator row
+        return table.shape[1] * (jnp.dtype(table.dtype).itemsize + 4)
+
+    def pull(self, table, accum, state: CacheState, flat_ids, capacity: int):
+        C = self.cache_rows
+        if C < capacity:
+            raise ValueError(
+                f"cache_rows ({C}) must cover the pull capacity ({capacity}): "
+                f"one batch's working set must fit in the device cache"
+            )
+        n_rows = table.shape[0]
+        uids, inverse, n_dropped = _dedup(flat_ids, capacity)
+        # dedup pads by repeating an already-present id: count each unique id
+        # once (strictly-increasing positions; pads repeat an earlier value)
+        valid = jnp.concatenate(
+            [jnp.ones((1,), bool), uids[1:] > uids[:-1]]
+        )
+        slot = state.id_slot[uids]                       # (capacity,)
+        hit = valid & (slot >= 0)
+        miss = valid & (slot < 0)
+        n_miss = jnp.sum(miss.astype(jnp.int32))
+        # per-uid lookup multiplicity (dropped slots point at `capacity`)
+        counts = jnp.zeros((capacity + 1,), jnp.float32).at[inverse].add(1.0)[
+            :capacity
+        ]
+
+        # ---- LFU-with-decay victim selection (empty slots first, then the
+        # coldest; slots hit by THIS batch are never evicted)
+        freq = state.freq * self.decay
+        score = jnp.where(state.slot_uid < 0, -1.0, freq)
+        protected = (
+            jnp.zeros((C,), bool)
+            .at[jnp.where(hit, slot, C)]
+            .set(True, mode="drop")
+        )
+        score = jnp.where(protected, jnp.inf, score)
+        _, victims = jax.lax.top_k(-score, capacity)     # coldest-first slots
+        used = jnp.arange(capacity) < n_miss             # victims we admit into
+        v_old = state.slot_uid[victims]
+        evict = used & (v_old >= 0)
+        spill = evict & state.dirty[victims]
+
+        # ---- spill evicted dirty rows back to host (one batched scatter)
+        spill_idx = jnp.where(spill, v_old, n_rows)
+        new_table = table.at[spill_idx].set(
+            state.rows[victims].astype(table.dtype), mode="drop"
+        )
+        new_haccum = accum.at[spill_idx].set(state.accum[victims], mode="drop")
+        id_slot = state.id_slot.at[jnp.where(evict, v_old, n_rows)].set(
+            -1, mode="drop"
+        )
+
+        # ---- fetch misses from host in ONE batched gather (value + accum)
+        miss_rank = jnp.cumsum(miss.astype(jnp.int32)) - 1
+        target = jnp.where(
+            miss, victims[jnp.clip(miss_rank, 0, capacity - 1)], C
+        )
+        fetch_idx = jnp.where(miss, uids, 0)
+        fetched_rows = jnp.take(new_table, fetch_idx, axis=0)
+        fetched_accum = jnp.take(new_haccum, fetch_idx, axis=0)
+
+        # ---- admit: map ids to their new slots, install rows, reset heat
+        slot_uid = state.slot_uid.at[target].set(uids, mode="drop")
+        cache_rows = state.rows.at[target].set(fetched_rows, mode="drop")
+        cache_accum = state.accum.at[target].set(fetched_accum, mode="drop")
+        dirty = state.dirty.at[target].set(False, mode="drop")
+        freq = freq.at[target].set(0.0, mode="drop")
+        id_slot = id_slot.at[jnp.where(miss, uids, n_rows)].set(
+            target, mode="drop"
+        )
+        # every working-set id is now cached; touch its slot by multiplicity
+        slot_now = id_slot[uids]
+        freq = freq.at[slot_now].add(counts, mode="drop")
+
+        wrows = jnp.take(cache_rows, slot_now, axis=0)
+        rb = self._row_bytes(table)
+        new_state = CacheState(
+            slot_uid=slot_uid, id_slot=id_slot, rows=cache_rows,
+            accum=cache_accum, freq=freq, dirty=dirty,
+            lookups=state.lookups + jnp.sum(counts),
+            fetched=state.fetched + n_miss.astype(jnp.float32),
+            evictions=state.evictions + jnp.sum(evict.astype(jnp.float32)),
+            bytes_h2d=state.bytes_h2d + n_miss.astype(jnp.float32) * rb,
+            bytes_d2h=state.bytes_d2h
+            + jnp.sum(spill.astype(jnp.float32)) * rb,
+        )
+        ws = WorkingSet(uids, inverse, _with_drop_row(wrows), n_dropped)
+        return ws, new_table, new_haccum, new_state
+
+    def push(self, table, accum, state: CacheState, ws: WorkingSet, row_grads,
+             opt: SparseAdagrad):
+        """Write-through to the CACHE only (host sees the update at spill or
+        flush time): the same ``SparseAdagrad.apply_rows`` update as the
+        gather placement, applied to the cached rows via the id->slot map —
+        bit-identical arithmetic by construction."""
+        uids = ws.uids
+        slot = state.id_slot[uids]          # all cached after the pull
+        new_rows, new_accum = opt.apply_rows(
+            state.rows, state.accum, slot, row_grads[: uids.shape[0]]
+        )
+        new_state = state._replace(
+            rows=new_rows, accum=new_accum,
+            dirty=state.dirty.at[slot].set(True),
+        )
+        return table, accum, new_state
+
+    def flush(self, table, accum, state: CacheState):
+        """Write every dirty cached row (value + accumulator) back to host —
+        checkpoint/export consistency point."""
+        n_rows = table.shape[0]
+        dirty_occ = state.dirty & (state.slot_uid >= 0)
+        idx = jnp.where(dirty_occ, state.slot_uid, n_rows)
+        new_table = table.at[idx].set(state.rows.astype(table.dtype), mode="drop")
+        new_accum = accum.at[idx].set(state.accum, mode="drop")
+        n = jnp.sum(dirty_occ.astype(jnp.float32))
+        new_state = state._replace(
+            dirty=jnp.zeros_like(state.dirty),
+            bytes_d2h=state.bytes_d2h + n * self._row_bytes(table),
+        )
+        return new_table, new_accum, new_state
+
+    def stats(self, state: CacheState) -> dict:
+        """Raw counters as python floats (call OUTSIDE jit)."""
+        return {
+            "lookups": float(state.lookups),
+            "fetched": float(state.fetched),
+            "evictions": float(state.evictions),
+            "bytes_h2d": float(state.bytes_h2d),
+            "bytes_d2h": float(state.bytes_d2h),
+        }

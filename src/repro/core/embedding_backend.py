@@ -5,12 +5,21 @@ trainer *pulls* the deduplicated working set, runs fwd/bwd against the
 compact pulled rows, and *pushes* the row updates back.  How those rows
 physically move is a placement decision, so it lives behind a protocol:
 
-    backend.pull(table, flat_ids, capacity) -> WorkingSet
-    backend.push(table, accum, working_set, row_grads, opt) -> (table, accum)
+    state = backend.init_state(table)
+    backend.pull(table, accum, state, flat_ids, capacity)
+        -> (WorkingSet, table, accum, state)
+    backend.push(table, accum, state, working_set, row_grads, opt)
+        -> (table, accum, state)
+    backend.flush(table, accum, state) -> (table, accum, state)
 
-with ``prepare``/``export`` converting between the logical row layout
-(row i == feature id i) and whatever physical layout the backend shards by.
-Two implementations ship:
+Every backend owns an explicit per-table STATE pytree threaded through the
+compiled train step (``EmbeddingEngine.pull/push`` -> ``HybridTrainer``).
+Stateless placements carry an empty tuple; the cache tier carries its
+id->slot map, frequency counters, and cached rows there.  ``pull`` may
+write the table/accumulator (cache spills), ``flush`` forces any cached
+dirty rows back (checkpoint/export consistency point), and ``prepare``/
+``export`` convert between the logical row layout (row i == feature id i)
+and whatever physical layout the backend shards by.  Three implementations:
 
 ``GatherBackend``
     The single-device / GSPMD path: ``jnp.unique`` dedup + one ``jnp.take``
@@ -27,9 +36,16 @@ Two implementations ship:
     the production overload signal; with ``cap_route`` at the worst case
     (the default) the exchange is lossless.
 
-Both backends return identical results at lossless capacity — asserted by
-``tests/test_embedding_backend.py`` — so trainers can switch placement with
-a config flag (``TrainerConfig.placement`` / ``--placement``).
+``CachedBackend`` (``repro.core.cache_tier``)
+    The paper's §2.3 memory hierarchy: the full table + accumulator stay
+    host-resident, a fixed-size device cache serves the Zipf-hot rows
+    (LFU-with-decay admission/eviction, metered host<->device traffic).
+
+All backends return identical results at lossless capacity (for the cache
+tier: ``cache_rows >= table rows``) — asserted by
+``tests/test_embedding_backend.py`` / ``tests/test_cache_tier.py`` — so
+trainers switch placement with a config flag
+(``TrainerConfig.placement`` / ``--placement``).
 """
 
 from __future__ import annotations
@@ -100,11 +116,19 @@ def _with_drop_row(rows: jnp.ndarray) -> jnp.ndarray:
 class EmbeddingBackend(Protocol):
     """Placement strategy for one embedding table.
 
-    All four methods must be jit-traceable (they run inside the compiled
-    train step).  ``push`` applies the sparse optimizer update itself so a
-    backend can fuse it with the reverse route (RoutedBackend updates rows
-    shard-locally, exactly where they live).
+    All pull/push/flush methods must be jit-traceable (they run inside the
+    compiled train step), take and return the per-table backend state
+    pytree from ``init_state`` (empty tuple for stateless placements), and
+    thread the table + AdaGrad accumulator through so a backend may write
+    them (cache spills/flushes).  ``push`` applies the sparse optimizer
+    update itself so a backend can fuse it with the reverse route
+    (RoutedBackend updates rows shard-locally, exactly where they live) or
+    with its cache (CachedBackend writes through to hot rows only).
     """
+
+    def init_state(self, table: jnp.ndarray):
+        """Per-table backend state pytree (empty tuple if stateless)."""
+        ...
 
     def prepare(self, table: jnp.ndarray) -> jnp.ndarray:
         """Logical row layout -> this backend's physical layout."""
@@ -114,10 +138,15 @@ class EmbeddingBackend(Protocol):
         """Physical layout -> logical rows (checkpoint export / parity)."""
         ...
 
-    def pull(self, table, flat_ids, capacity: int) -> WorkingSet:
+    def flush(self, table, accum, state):
+        """Force deferred writes (cached dirty rows) back into table/accum."""
         ...
 
-    def push(self, table, accum, ws: WorkingSet, row_grads, opt: SparseAdagrad):
+    def pull(self, table, accum, state, flat_ids, capacity: int):
+        ...
+
+    def push(self, table, accum, state, ws: WorkingSet, row_grads,
+             opt: SparseAdagrad):
         ...
 
 
@@ -127,8 +156,12 @@ class GatherBackend:
 
     The right choice on one device and the baseline under GSPMD: the
     compiler partitions the gather/scatter over a row-sharded table, at the
-    cost of value-blind all-reduce traffic (see RoutedBackend).
+    cost of value-blind all-reduce traffic (see RoutedBackend).  Stateless:
+    the backend-state pytree is an empty tuple.
     """
+
+    def init_state(self, table: jnp.ndarray):
+        return ()
 
     def prepare(self, table: jnp.ndarray) -> jnp.ndarray:
         return table
@@ -136,16 +169,21 @@ class GatherBackend:
     def export(self, table: jnp.ndarray) -> jnp.ndarray:
         return table
 
-    def pull(self, table, flat_ids, capacity: int) -> WorkingSet:
+    def flush(self, table, accum, state):
+        return table, accum, state
+
+    def pull(self, table, accum, state, flat_ids, capacity: int):
         uids, inv, n_dropped = _dedup(flat_ids, capacity)
         rows = _with_drop_row(jnp.take(table, uids, axis=0))
-        return WorkingSet(uids, inv, rows, n_dropped)
+        return WorkingSet(uids, inv, rows, n_dropped), table, accum, state
 
-    def push(self, table, accum, ws: WorkingSet, row_grads, opt: SparseAdagrad):
+    def push(self, table, accum, state, ws: WorkingSet, row_grads,
+             opt: SparseAdagrad):
         # row_grads[capacity] belongs to the drop row — discard it.
-        return opt.apply_rows(
+        new_table, new_accum = opt.apply_rows(
             table, accum, ws.uids, row_grads[: ws.uids.shape[0]]
         )
+        return new_table, new_accum, state
 
 
 # ------------------------------------------------------------------- routed
@@ -205,6 +243,9 @@ class RoutedBackend:
             jnp.arange(rows, dtype=jnp.int32), rows // self.n_shards, self.n_shards
         )
 
+    def init_state(self, table: jnp.ndarray):
+        return ()
+
     def prepare(self, table: jnp.ndarray) -> jnp.ndarray:
         perm = self._perm(table.shape[0])
         return jnp.zeros_like(table).at[perm].set(table)
@@ -212,15 +253,20 @@ class RoutedBackend:
     def export(self, table: jnp.ndarray) -> jnp.ndarray:
         return jnp.take(table, self._perm(table.shape[0]), axis=0)
 
-    def pull(self, table, flat_ids, capacity: int) -> WorkingSet:
+    def flush(self, table, accum, state):
+        return table, accum, state
+
+    def pull(self, table, accum, state, flat_ids, capacity: int):
         uids, inv, n_dedup_dropped = _dedup(flat_ids, capacity)
         pull_fn, _ = self._pull_push(table.shape[0], table.shape[1], capacity)
         rows, _, dropped = pull_fn(table, uids)
-        return WorkingSet(
+        ws = WorkingSet(
             uids, inv, _with_drop_row(rows), n_dedup_dropped + jnp.sum(dropped)
         )
+        return ws, table, accum, state
 
-    def push(self, table, accum, ws: WorkingSet, row_grads, opt: SparseAdagrad):
+    def push(self, table, accum, state, ws: WorkingSet, row_grads,
+             opt: SparseAdagrad):
         _, push_fn = self._pull_push(
             table.shape[0], table.shape[1], ws.uids.shape[0]
         )
@@ -228,7 +274,7 @@ class RoutedBackend:
             table, accum, ws.uids, row_grads[: ws.uids.shape[0]],
             opt.cfg.lr, opt.cfg.eps,
         )
-        return new_table, new_accum
+        return new_table, new_accum, state
 
 
 # ------------------------------------------------------------------ factory
@@ -237,25 +283,35 @@ def make_backend(
     mesh: Optional[jax.sharding.Mesh] = None,
     **kwargs,
 ) -> EmbeddingBackend:
-    """``placement`` in {"gather", "routed"} -> a backend instance.
+    """``placement`` in {"gather", "routed", "cached"} -> a backend instance.
 
     ``routed`` without an explicit mesh builds a 1-D mesh over all local
     devices (on one CPU device that degenerates to n_shards=1, where the
     routed exchange is bit-identical to the gather path — the parity the
-    tests and the ``--placement`` acceptance check rely on).
+    tests and the ``--placement`` acceptance check rely on).  ``cached``
+    takes ``cache_rows`` (device cache size, required) and ``decay``
+    (LFU decay, optional) — see ``repro.core.cache_tier.CachedBackend``.
     """
     if placement == "gather":
         # mesh is legitimate shared context (GSPMD shards the gather);
-        # routed-only knobs are not — dropping them silently would make a
-        # capacity-bounded experiment run unbounded.
+        # placement-specific knobs are not — dropping them silently would
+        # make a capacity-bounded experiment run unbounded.
         if kwargs:
             raise TypeError(
                 f"placement 'gather' does not accept {sorted(kwargs)} "
-                f"(routed-only options)"
+                f"(routed/cached-only options)"
             )
         return GatherBackend()
     if placement == "routed":
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
         return RoutedBackend(mesh, **kwargs)
-    raise ValueError(f"unknown placement {placement!r}; use 'gather' or 'routed'")
+    if placement == "cached":
+        from repro.core.cache_tier import CachedBackend
+
+        if "cache_rows" not in kwargs:
+            raise TypeError("placement 'cached' requires cache_rows")
+        return CachedBackend(**kwargs)
+    raise ValueError(
+        f"unknown placement {placement!r}; use 'gather', 'routed', or 'cached'"
+    )

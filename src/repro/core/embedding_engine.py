@@ -10,16 +10,24 @@ with the table).  The engine owns everything sparse:
   - the pull capacity (static working-set bound),
   - the sparse optimizer (``SparseAdagrad`` — every-step sync, paper §5),
   - a pluggable ``EmbeddingBackend`` deciding HOW rows move:
-    ``GatherBackend`` (dedup + ``jnp.take``, single-device/GSPMD) or
-    ``RoutedBackend`` (explicit all-to-all PS routing, hash-sharded) —
-    see ``repro.core.embedding_backend`` for the contract.
+    ``GatherBackend`` (dedup + ``jnp.take``, single-device/GSPMD),
+    ``RoutedBackend`` (explicit all-to-all PS routing, hash-sharded), or
+    ``CachedBackend`` (device hot-row cache over a host-resident table,
+    paper §2.3) — see ``repro.core.embedding_backend`` for the contract.
+
+Every backend carries an explicit per-table STATE pytree (empty for the
+stateless placements; the cache tier's id->slot map/frequency counters/
+cached rows for ``cached``), created by ``init_backend_state`` and threaded
+through every pull/push — it is jit-traceable and checkpointable.
 
 Training path per batch (Algorithm 1 lines 3, 11, 13):
-  1. ``pull_batch(tables, batch)``  -> {name: WorkingSet} (one pull each)
+  1. ``pull_batch(tables, accum, states, batch)``
+       -> ({name: WorkingSet}, tables, accum, states)  (one pull each;
+     tables/accum come back because a cache pull may spill evicted rows)
   2. model fwd/bwd over ``ws.rows[ws.inverse]`` — grads land on the compact
      working set, not the table,
-  3. ``push(tables, accum, working_sets, row_grads)`` — backend scatters the
-     AdaGrad row updates back.
+  3. ``push(tables, accum, states, working_sets, row_grads)`` — backend
+     scatters the AdaGrad row updates back (or into its cache).
 
 JAX has no native EmbeddingBag and no CSR/CSC sparse — the bag lookup here is
 built from ``jnp.take`` + ``jax.ops.segment_sum`` (this IS part of the system,
@@ -30,7 +38,7 @@ path in ``repro.kernels.embedding_bag``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -133,13 +141,31 @@ class EmbeddingEngine:
     def init_state(self, tables: Dict[str, jnp.ndarray]) -> SparseAdagradState:
         return self.opt.init(tables)
 
+    def init_backend_state(self, tables: Dict[str, jnp.ndarray]) -> Dict[str, Any]:
+        """Per-table backend state pytrees (empty tuples when stateless)."""
+        return {n: self.backend.init_state(t) for n, t in tables.items()}
+
     def prepare(self, tables: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
         """Logical tables -> backend layout (e.g. when init'd externally)."""
         return {n: self.backend.prepare(t) for n, t in tables.items()}
 
     def export(self, tables: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
-        """Backend layout -> logical rows (row i == feature id i)."""
+        """Backend layout -> logical rows (row i == feature id i).
+
+        For placements with deferred writes (the cache tier), call
+        ``flush`` first so dirty cached rows reach the tables."""
         return {n: self.backend.export(t) for n, t in tables.items()}
+
+    def flush(self, tables, accum, states):
+        """Force deferred backend writes (dirty cached rows) back into the
+        tables/accumulator — the checkpoint/export consistency point."""
+        new_tables, new_accum, new_states = {}, {}, {}
+        for name in tables:
+            nt, na, ns = self.backend.flush(
+                tables[name], accum[name], states[name]
+            )
+            new_tables[name], new_accum[name], new_states[name] = nt, na, ns
+        return new_tables, new_accum, new_states
 
     # ------------------------------------------------------------ pull/push
     def ids_from_batch(self, batch) -> Dict[str, jnp.ndarray]:
@@ -149,27 +175,54 @@ class EmbeddingEngine:
             for name, spec in self.specs.items()
         }
 
-    def pull(self, tables, flat_ids: Dict[str, jnp.ndarray]) -> Dict[str, WorkingSet]:
-        """Algorithm 1 line 3: one working-set pull per table."""
-        return {
-            name: self.backend.pull(tables[name], ids, self.capacity)
-            for name, ids in flat_ids.items()
-        }
+    def pull(self, tables, accum, states, flat_ids: Dict[str, jnp.ndarray]):
+        """Algorithm 1 line 3: one working-set pull per table.
 
-    def pull_batch(self, tables, batch) -> Dict[str, WorkingSet]:
-        return self.pull(tables, self.ids_from_batch(batch))
-
-    def push(self, tables, accum, working_sets: Dict[str, WorkingSet], row_grads):
-        """Algorithm 1 line 13: scatter row updates back (sparse optimizer
-        applied by the backend, shard-locally for the routed placement)."""
-        new_tables, new_accum = {}, {}
-        for name, ws in working_sets.items():
-            nt, na = self.backend.push(
-                tables[name], accum[name], ws, row_grads[name], self.opt
+        Returns (working_sets, tables, accum, states) — the table tree comes
+        back because a cache-tier pull may spill evicted dirty rows into it.
+        """
+        wss, new_tables, new_accum, new_states = {}, {}, {}, {}
+        for name, ids in flat_ids.items():
+            ws, nt, na, ns = self.backend.pull(
+                tables[name], accum[name], states[name], ids, self.capacity
             )
-            new_tables[name] = nt
-            new_accum[name] = na
-        return new_tables, new_accum
+            wss[name] = ws
+            new_tables[name], new_accum[name], new_states[name] = nt, na, ns
+        return wss, new_tables, new_accum, new_states
+
+    def pull_batch(self, tables, accum, states, batch):
+        return self.pull(tables, accum, states, self.ids_from_batch(batch))
+
+    def push(self, tables, accum, states, working_sets: Dict[str, WorkingSet],
+             row_grads):
+        """Algorithm 1 line 13: scatter row updates back (sparse optimizer
+        applied by the backend — shard-locally for the routed placement,
+        write-through to hot rows for the cache tier)."""
+        new_tables, new_accum, new_states = {}, {}, {}
+        for name, ws in working_sets.items():
+            nt, na, ns = self.backend.push(
+                tables[name], accum[name], states[name], ws,
+                row_grads[name], self.opt
+            )
+            new_tables[name], new_accum[name], new_states[name] = nt, na, ns
+        return new_tables, new_accum, new_states
+
+    def cache_stats(self, states) -> Dict[str, float]:
+        """Aggregate cache-tier counters across tables ({} for stateless
+        placements).  Call outside jit — reads concrete counter values."""
+        stats_fn = getattr(self.backend, "stats", None)
+        if stats_fn is None:
+            return {}
+        tot: Dict[str, float] = {}
+        for s in states.values():
+            for k, v in stats_fn(s).items():
+                tot[k] = tot.get(k, 0.0) + v
+        return {
+            "cache_hit_rate": 1.0 - tot["fetched"] / max(tot["lookups"], 1.0),
+            "evictions": int(tot["evictions"]),
+            "cache_bytes_h2d": tot["bytes_h2d"],
+            "cache_bytes_d2h": tot["bytes_d2h"],
+        }
 
     @staticmethod
     def overflow(working_sets: Dict[str, WorkingSet]) -> jnp.ndarray:

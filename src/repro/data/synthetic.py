@@ -39,12 +39,15 @@ def _zipf_ids(rng: np.random.Generator, shape, vocab: int, a: float = 1.1) -> np
 # ------------------------------------------------------------------- CTR
 def ctr_batches(
     seed: int, batch: int, rows: int, n_fields: int = 40, nnz: int = 100,
-    worker: int = 0,
+    worker: int = 0, zipf_a: float = 1.1,
 ) -> Iterator[Dict[str, np.ndarray]]:
-    """Paper CTR model stream: multi-hot ids + field ids + teacher labels."""
+    """Paper CTR model stream: multi-hot ids + field ids + teacher labels.
+
+    ``zipf_a`` sets the id skew (lower = flatter; the cache-tier hit-rate
+    experiments use 1.05, the paper-motivated hot-head regime)."""
     rng = np.random.default_rng(seed + worker * 1_000_003)
     while True:
-        ids = _zipf_ids(rng, (batch, nnz), rows)
+        ids = _zipf_ids(rng, (batch, nnz), rows, a=zipf_a)
         field_ids = rng.integers(0, n_fields, (batch, nnz)).astype(np.int32)
         mask = (rng.random((batch, nnz)) < 0.9).astype(np.float32)
         score = (_id_weights(ids) * mask).sum(1) / np.sqrt(nnz)

@@ -21,9 +21,17 @@ behind the ``EmbeddingBackend`` contract
     ``trainer.overflow_dropped``.  On this CPU container the mesh
     degenerates to one shard, so the routed path runs end to end and its
     loss matches ``gather`` (the acceptance check).
+  - ``cached``: the paper's §2.3 memory hierarchy — the full table and its
+    AdaGrad accumulator stay host-resident; a device cache of
+    ``--cache-rows`` rows serves the Zipf-hot working set (LFU-with-decay
+    admission/eviction, write-through pushes, dirty spills).  Steady-state
+    ``cache_hit_rate``/``evictions`` are reported in the training history
+    next to ``overflow_dropped``; with ``--cache-rows >= rows`` the cache
+    degenerates to a full mirror bit-identical to ``gather``.
 
 ``--capacity`` bounds the deduplicated working set per batch (static shape;
-must be divisible by the shard count for ``routed``).
+must be divisible by the shard count for ``routed``; ``--cache-rows`` must
+cover it for ``cached``).
 
 On a real TPU cluster each process calls ``jax.distributed.initialize()``
 (args: --coordinator/--num-processes/--process-id, or TPU auto-detection)
@@ -56,10 +64,13 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--sparse-lr", type=float, default=0.5)
     ap.add_argument("--placement", default="gather",
-                    choices=["gather", "routed"],
+                    choices=["gather", "routed", "cached"],
                     help="sparse pull/push backend (see module docstring)")
     ap.add_argument("--capacity", type=int, default=0,
                     help="working-set bound per batch (0: arch default)")
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help="device cache rows for --placement cached "
+                         "(0: working-set capacity, the minimum)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--smoke", action="store_true", default=True,
@@ -99,6 +110,7 @@ def main():
         kstep=KStepConfig(lr=args.lr, k=args.k, merge=args.merge),
         sparse=SparseAdagradConfig(lr=args.sparse_lr, initial_accumulator=0.01),
         placement=args.placement, capacity=args.capacity or None,
+        cache_rows=args.cache_rows or None,
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
     )
     t0 = time.perf_counter()
@@ -128,6 +140,8 @@ def main():
         loss = 0.0
         for _ in range(args.steps):
             loss = tr.train_step(batch, podded=True)
+        if tr.ckpt:
+            tr.ckpt.wait()   # async writer must land the final checkpoint
         print(f"final loss {loss:.4f} "
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return
@@ -145,9 +159,17 @@ def main():
             b = next(gen)
             meter.update(b["label"], tr.predict(b))
             loss = tr.train_step(b)
+        if tr.ckpt:
+            tr.ckpt.wait()   # async writer must land the final checkpoint
+        stats = tr.sparse_metrics()
+        cache = (
+            f"cache_hit_rate {stats['cache_hit_rate']:.3f} "
+            f"evictions {stats['evictions']} "
+            if "cache_hit_rate" in stats else ""
+        )
         print(f"final loss {loss:.6f} online AUC {meter.value():.4f} "
               f"placement {args.placement} "
-              f"overflow_dropped {tr.overflow_dropped} "
+              f"overflow_dropped {tr.overflow_dropped} {cache}"
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return
 

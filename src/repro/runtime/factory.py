@@ -13,8 +13,9 @@ Family wiring:
   - ``gnn`` -> DenseTrainer over ``repro.models.gin``
   - ``recsys`` (baidu-ctr) -> HybridTrainer: an ``EmbeddingEngine`` built
     from ``ctr_table_specs`` with the backend selected by
-    ``TrainerConfig.placement`` ("gather" | "routed"), and the canonical
-    embed/loss adapters from ``repro.models.recsys``.
+    ``TrainerConfig.placement`` ("gather" | "routed" | "cached" — the
+    cache tier sizes its device cache from ``TrainerConfig.cache_rows``),
+    and the canonical embed/loss adapters from ``repro.models.recsys``.
 
 ``model_cfg`` overrides the registry's smoke/full config (used by examples
 that scale the table up or down); other recsys archs (dlrm/din/dien/
@@ -52,11 +53,24 @@ def build_ctr_engine(
         name: dataclasses.replace(s, id_field="ids")
         for name, s in R.ctr_table_specs(model_cfg).items()
     }
+    capacity = cfg.capacity or DEFAULT_CTR_CAPACITY
+    kwargs = {}
+    if cfg.placement == "cached":
+        # default to the minimum feasible cache (one batch's working set);
+        # an EXPLICIT undersized cache_rows is an error, not a silent clamp
+        # (a cache-size experiment must run with the cache it asked for)
+        if cfg.cache_rows and cfg.cache_rows < capacity:
+            raise ValueError(
+                f"cache_rows ({cfg.cache_rows}) must cover the working-set "
+                f"capacity ({capacity}): one batch's pull must fit in the "
+                f"device cache"
+            )
+        kwargs["cache_rows"] = cfg.cache_rows or capacity
     return EmbeddingEngine(
         specs,
-        capacity=cfg.capacity or DEFAULT_CTR_CAPACITY,
+        capacity=capacity,
         optimizer=SparseAdagrad(cfg.sparse),
-        backend=make_backend(cfg.placement, mesh=mesh),
+        backend=make_backend(cfg.placement, mesh=mesh, **kwargs),
     )
 
 

@@ -8,7 +8,11 @@ executables; checkpoint/restart; straggler-tolerant merging.
 Adam + giant sparse tables owned by an ``EmbeddingEngine`` (Algorithm 1's
 pull -> train -> push through a pluggable ``EmbeddingBackend``; the pull is
 deduplicated across the *global* batch so the sparse sync stays O(working
-set), and overflowed pulls are counted in ``overflow_dropped``).
+set), and overflowed pulls are counted in ``overflow_dropped``).  Each
+backend's per-table state pytree (the cache tier's id->slot map/counters/
+cached rows under ``--placement cached``) is threaded through the compiled
+step, checkpointed alongside the tables, and surfaced into ``fit`` history
+as ``cache_hit_rate``/``evictions`` next to ``overflow_dropped``.
 
 Construct trainers directly, or — config-driven — through
 ``repro.runtime.factory.build_trainer(arch_name, TrainerConfig)``, which
@@ -47,8 +51,10 @@ class TrainerConfig:
     n_pod: int = 1
     kstep: KStepConfig = dataclasses.field(default_factory=KStepConfig)
     sparse: SparseAdagradConfig = dataclasses.field(default_factory=SparseAdagradConfig)
-    placement: str = "gather"     # sparse backend: "gather" | "routed"
+    placement: str = "gather"     # sparse backend: "gather"|"routed"|"cached"
     capacity: Optional[int] = None  # working-set bound (None: arch default)
+    cache_rows: Optional[int] = None  # device cache size for "cached"
+                                      # (None: arch default; must be >= capacity)
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     ckpt_keep: int = 3
@@ -92,6 +98,11 @@ def _fit_loop(trainer, batches: Iterator, steps: int, eval_fn=None) -> list:
         if trainer.step_num % trainer.cfg.log_every == 0:
             rec = {"step": trainer.step_num, "loss": loss,
                    "sec": time.perf_counter() - t0}
+            # sparse-path health: overflow counter + cache-tier hit
+            # rate/evictions (HybridTrainer; cached placement only)
+            sparse_metrics = getattr(trainer, "sparse_metrics", None)
+            if sparse_metrics is not None:
+                rec.update(sparse_metrics())
             if eval_fn:
                 rec["eval"] = eval_fn(trainer)
             trainer.history.append(rec)
@@ -233,6 +244,10 @@ class HybridTrainer:
         self.opt = KStepAdam(cfg.kstep, cfg.n_pod, mesh=mesh)
         self.opt_state = self.opt.init(self.dense)
         self.sparse_state = engine.init_state(self.tables)
+        # per-table backend state (cache-tier id->slot map/counters/rows;
+        # empty tuples for the stateless placements) — threaded through the
+        # compiled step and checkpointed alongside the tables.
+        self.backend_state = engine.init_backend_state(self.tables)
         self.step_num = 0
         self.overflow_dropped = 0   # cumulative unserved pull/push requests
         self._embed = embed_fn
@@ -246,9 +261,13 @@ class HybridTrainer:
         self.history: list = []
 
     def _make_step(self, merge: bool):
-        def step(dense, tables, accum, batch, batch_podded, opt_state):
-            # ---- PULL (Algorithm 1 line 3): engine dedups + gathers/routes.
-            wss = self.engine.pull_batch(tables, batch)
+        def step(dense, tables, accum, bstate, batch, batch_podded, opt_state):
+            # ---- PULL (Algorithm 1 line 3): engine dedups + gathers/routes/
+            # serves from cache.  tables/accum come back because a cache-tier
+            # pull spills evicted dirty rows into the host table.
+            wss, tables, accum, bstate = self.engine.pull_batch(
+                tables, accum, bstate, batch
+            )
             workings = {n: ws.rows for n, ws in wss.items()}
             # inverse indices sliced per pod so each replica embeds only its
             # own batch shard (vmapped leading pod dim)
@@ -277,8 +296,10 @@ class HybridTrainer:
             new_dense, new_opt = self.opt.step(dense, dense_g, opt_state, merge=merge)
 
             # ---- PUSH (line 13): backend scatters/routes the row updates.
-            new_tables, new_accum = self.engine.push(tables, accum, wss, work_g)
-            return (new_dense, new_tables, new_accum, new_opt,
+            new_tables, new_accum, bstate = self.engine.push(
+                tables, accum, bstate, wss, work_g
+            )
+            return (new_dense, new_tables, new_accum, bstate, new_opt,
                     jnp.mean(losses), self.engine.overflow(wss))
 
         return step
@@ -291,9 +312,10 @@ class HybridTrainer:
         is_merge = (self.step_num % self.cfg.kstep.k) == 0
         fn = self._step_merge if is_merge else self._step_local
         batch = jax.tree.map(jnp.asarray, batch)
-        (self.dense, self.tables, accum, self.opt_state, loss, dropped) = fn(
+        (self.dense, self.tables, accum, self.backend_state, self.opt_state,
+         loss, dropped) = fn(
             self.dense, self.tables, self.sparse_state.accum,
-            batch, self.pod_batch(batch), self.opt_state,
+            self.backend_state, batch, self.pod_batch(batch), self.opt_state,
         )
         self.sparse_state = self.sparse_state._replace(accum=accum)
         self.overflow_dropped += int(dropped)
@@ -302,14 +324,62 @@ class HybridTrainer:
         return float(loss)
 
     def predict(self, batch) -> np.ndarray:
-        """Inference with pod-0's dense replica (online predict-then-train)."""
+        """Inference with pod-0's dense replica (online predict-then-train).
+
+        Reads through the sparse path without committing its side effects:
+        cache admissions/spills from the inference pull are discarded, so
+        predict never perturbs training state (misses are still served —
+        the pull fetches from the authoritative host rows)."""
         batch = jax.tree.map(jnp.asarray, batch)
         dense0 = pod_slice(self.dense, 0)
-        wss = self.engine.pull_batch(self.tables, batch)
+        wss, _, _, _ = self.engine.pull_batch(
+            self.tables, self.sparse_state.accum, self.backend_state, batch
+        )
         workings = {n: ws.rows for n, ws in wss.items()}
         invs = {n: ws.inverse for n, ws in wss.items()}
         emb = self._embed(workings, invs, batch)
         return np.asarray(self._loss(dense0, emb, batch, predict=True))
+
+    def sparse_metrics(self) -> Dict[str, float]:
+        """Sparse-path health counters for trainer history/monitoring:
+        cumulative ``overflow_dropped`` plus, under the cached placement,
+        ``cache_hit_rate``/``evictions``/host<->device byte counters."""
+        m: Dict[str, float] = {"overflow_dropped": self.overflow_dropped}
+        m.update(self.engine.cache_stats(self.backend_state))
+        return m
+
+    def suggest_capacity(self, history=None, safety: float = 1.25) -> int:
+        """Recommend a dedup capacity from observed overflow (the first step
+        of overflow-aware capacity autoscaling).
+
+        Reads the ``overflow_dropped`` series from ``history`` (default: this
+        trainer's own ``fit`` history): with no drops the current capacity
+        stands; otherwise grow to the next power of two covering the current
+        capacity plus ``safety`` x the worst observed per-step drop rate
+        (powers of two keep routed shard divisibility).
+        """
+        hist = self.history if history is None else history
+        worst = 0.0
+        prev_step, prev_drop = 0, 0.0
+        for rec in hist:
+            if "overflow_dropped" not in rec:
+                continue
+            d_steps = rec["step"] - prev_step
+            if d_steps > 0:
+                worst = max(
+                    worst, (rec["overflow_dropped"] - prev_drop) / d_steps
+                )
+            prev_step, prev_drop = rec["step"], rec["overflow_dropped"]
+        if not hist and self.step_num > 0:
+            # no logged records yet: fall back to the cumulative average
+            worst = self.overflow_dropped / self.step_num
+        if worst <= 0:
+            return self.engine.capacity
+        need = self.engine.capacity + safety * worst
+        cap = 1
+        while cap < need:
+            cap <<= 1
+        return cap
 
     def fit(self, batches: Iterator, steps: int, eval_fn=None) -> list:
         return _fit_loop(self, batches, steps, eval_fn)
@@ -321,13 +391,23 @@ class HybridTrainer:
                 "v_local": self.opt_state.v_local, "v_hat": self.opt_state.v_hat}
         if self.opt_state.ef is not None:
             tree["ef"] = self.opt_state.ef
+        if jax.tree.leaves(self.backend_state):
+            # cache-tier (or other stateful-placement) state is training
+            # state: host tables alone are stale while rows sit dirty in the
+            # device cache, so the cache must roundtrip with them.
+            tree["bstate"] = self.backend_state
         return tree
 
     def _backend_sig(self):
-        """Identity of the sparse physical layout baked into the tables."""
+        """Identity of the sparse physical layout baked into the tables
+        (+ cache geometry, which shapes the checkpointed backend state)."""
         b = self.engine.backend
-        return {"backend": type(b).__name__,
-                "n_shards": getattr(b, "n_shards", 1)}
+        sig = {"backend": type(b).__name__,
+               "n_shards": getattr(b, "n_shards", 1)}
+        cache_rows = getattr(b, "cache_rows", None)
+        if cache_rows is not None:
+            sig["cache_rows"] = int(cache_rows)
+        return sig
 
     def save(self):
         self.ckpt.save(
@@ -341,15 +421,22 @@ class HybridTrainer:
             return False
         # Tables are checkpointed in the backend's physical layout; loading
         # them under a different backend (or routed shard count, which
-        # changes the hash-slot permutation) would silently read wrong rows.
+        # changes the hash-slot permutation; or a cached run's host tables,
+        # which are stale wherever rows sat dirty in the device cache)
+        # would silently read wrong rows.
         s = latest_step(self.ckpt.directory)
         man = read_manifest(self.ckpt.directory, s) if s is not None else None
         if man is not None and "backend" in man.get("meta", {}):
-            saved = {k: man["meta"][k] for k in ("backend", "n_shards")}
-            if saved != self._backend_sig():
+            sig = self._backend_sig()
+            saved = {k: man["meta"][k]
+                     for k in ("backend", "n_shards", "cache_rows")
+                     if k in man["meta"]}
+            if saved != {k: sig.get(k) for k in saved} or (
+                "cache_rows" in sig and "cache_rows" not in saved
+            ):
                 raise ValueError(
                     f"checkpoint written with {saved} but the current engine "
-                    f"uses {self._backend_sig()}: the tables' physical "
+                    f"uses {sig}: the tables' physical "
                     f"layouts differ — resume with the saving placement, or "
                     f"export/re-prepare the tables explicitly"
                 )
@@ -360,6 +447,7 @@ class HybridTrainer:
         self.step_num = step
         self.dense, self.tables = tree["dense"], tree["tables"]
         self.sparse_state = self.sparse_state._replace(accum=tree["accum"])
+        self.backend_state = tree.get("bstate", self.backend_state)
         self.opt_state = self.opt_state._replace(
             step=jnp.asarray(step, jnp.int32), m=tree["m"],
             v_local=tree["v_local"], v_hat=tree["v_hat"],

@@ -1,0 +1,258 @@
+"""Cache tier (paper §2.3): CachedBackend keeps hot rows on device over a
+host-resident table.
+
+Acceptance properties:
+  - with ``cache_rows >= table rows`` the backend is BIT-identical to
+    GatherBackend (pulls, pushes, exported tables/accumulator),
+  - with a 10%-sized cache on the Zipf(1.05) synthetic CTR stream the
+    steady-state hit rate is >= 80%,
+  - evicted dirty rows spill value+accumulator back to the host table,
+  - cache state checkpoints and resumes bit-exactly through HybridTrainer,
+    and resuming cached tables under a different placement (or cache
+    geometry) is rejected by the layout guard.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache_tier import CachedBackend
+from repro.core.embedding_backend import GatherBackend, make_backend
+from repro.core.kstep import KStepConfig
+from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
+from repro.data import synthetic as S
+from repro.runtime.factory import build_trainer
+from repro.runtime.trainer import TrainerConfig
+
+
+def test_cache_rows_must_cover_capacity():
+    cb = CachedBackend(cache_rows=8)
+    table = jnp.zeros((32, 2), jnp.float32)
+    accum = jnp.zeros((32, 2), jnp.float32)
+    with pytest.raises(ValueError, match="cache_rows"):
+        cb.pull(table, accum, cb.init_state(table), jnp.zeros(4, jnp.int32), 16)
+    with pytest.raises(ValueError, match="cache_rows"):
+        CachedBackend(cache_rows=0)
+    with pytest.raises(ValueError, match="decay"):
+        CachedBackend(cache_rows=8, decay=0.0)
+
+
+def test_cached_full_mirror_bit_identical_to_gather():
+    """cache_rows >= rows: no eviction ever happens and every pull/push is
+    bit-identical to the gather placement (the PR acceptance parity)."""
+    rng = np.random.default_rng(0)
+    rows, dim, cap = 64, 8, 64
+    opt = SparseAdagrad(SparseAdagradConfig(lr=0.1))
+    gb, cb = GatherBackend(), CachedBackend(cache_rows=rows)
+
+    table = jnp.asarray(rng.standard_normal((rows, dim)), jnp.float32)
+    tg, tc = gb.prepare(table), cb.prepare(table)
+    sg, sc = gb.init_state(tg), cb.init_state(tc)
+    ag = jnp.full((rows, dim), 0.1, jnp.float32)
+    ac = jnp.full((rows, dim), 0.1, jnp.float32)
+
+    for step in range(4):
+        ids = jnp.asarray(rng.integers(0, rows, 50), jnp.int32)
+        wg, tg, ag, sg = gb.pull(tg, ag, sg, ids, cap)
+        wc, tc, ac, sc = cb.pull(tc, ac, sc, ids, cap)
+        np.testing.assert_array_equal(np.asarray(wg.uids), np.asarray(wc.uids))
+        np.testing.assert_array_equal(
+            np.asarray(wg.inverse), np.asarray(wc.inverse)
+        )
+        np.testing.assert_array_equal(np.asarray(wg.rows), np.asarray(wc.rows))
+        slot_g = rng.standard_normal((50, dim)).astype(np.float32)
+        row_g = np.zeros((cap, dim), np.float32)
+        np.add.at(row_g, np.asarray(wg.inverse), slot_g)
+        row_g = jnp.asarray(row_g)
+        tg, ag, sg = gb.push(tg, ag, sg, wg, row_g, opt)
+        tc, ac, sc = cb.push(tc, ac, sc, wc, row_g, opt)
+        # flush on a COPY each step: host tables must match gather exactly
+        ft, fa, _ = cb.flush(tc, ac, sc)
+        np.testing.assert_array_equal(np.asarray(gb.export(tg)),
+                                      np.asarray(cb.export(ft)))
+        np.testing.assert_array_equal(np.asarray(ag), np.asarray(fa))
+    assert float(sc.evictions) == 0.0
+    assert float(sc.bytes_d2h) == 0.0   # nothing ever spilled
+
+
+def test_cached_eviction_spills_dirty_rows():
+    """A full cache turnover must write the dirty rows (value + accumulator)
+    back to the host table before the slots are reused."""
+    rows, dim, cap = 8, 2, 4
+    opt = SparseAdagrad(SparseAdagradConfig(lr=0.5))
+    cb = CachedBackend(cache_rows=cap, decay=1.0)
+    gb = GatherBackend()
+
+    table0 = jnp.arange(rows * dim, dtype=jnp.float32).reshape(rows, dim)
+    accum0 = jnp.full((rows, dim), 0.1, jnp.float32)
+    tc, ac, sc = table0, accum0, cb.init_state(table0)
+    tg, ag, sg = table0, accum0, gb.init_state(table0)
+
+    ids_a = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    grads = jnp.ones((cap + 1, dim), jnp.float32)
+
+    wc, tc, ac, sc = cb.pull(tc, ac, sc, ids_a, cap)
+    tc, ac, sc = cb.push(tc, ac, sc, wc, grads, opt)
+    wg, tg, ag, sg = gb.pull(tg, ag, sg, ids_a, cap)
+    tg, ag, sg = gb.push(tg, ag, sg, wg, grads, opt)
+    # write-through to cache only: host rows 0..3 still pristine
+    np.testing.assert_array_equal(np.asarray(tc), np.asarray(table0))
+    assert bool(jnp.all(sc.dirty))
+
+    # second batch misses on 4 fresh ids -> evicts all 4 slots -> spills
+    ids_b = jnp.asarray([4, 5, 6, 7], jnp.int32)
+    wc, tc, ac, sc = cb.pull(tc, ac, sc, ids_b, cap)
+    assert float(sc.evictions) == 4.0
+    assert float(sc.bytes_d2h) == 4 * dim * (4 + 4)
+    np.testing.assert_array_equal(np.asarray(tc[:4]), np.asarray(tg[:4]))
+    np.testing.assert_array_equal(np.asarray(ac[:4]), np.asarray(ag[:4]))
+
+    # pulling the spilled ids again re-fetches the pushed values from host
+    wc2, tc, ac, sc = cb.pull(tc, ac, sc, ids_a, cap)
+    np.testing.assert_array_equal(np.asarray(wc2.rows[:cap]),
+                                  np.asarray(tg[:4]))
+
+
+def test_cached_hit_rate_zipf_10pct_cache():
+    """PR acceptance: >= 80% steady-state hit rate with a 10%-sized cache on
+    the Zipf(1.05) synthetic CTR stream.
+
+    Hit rate counts id LOOKUPS served without a host fetch: a fetched row
+    serves every same-batch duplicate of its id, so
+    ``hit_rate = 1 - fetched / lookups``.
+    """
+    rows, dim, cap = 50_000, 8, 4096
+    C = rows // 10
+    cb = CachedBackend(cache_rows=C, decay=0.95)
+    table = jnp.zeros((rows, dim), jnp.float32)
+    accum = jnp.zeros((rows, dim), jnp.float32)
+    state = cb.init_state(table)
+
+    pull = jax.jit(functools.partial(cb.pull, capacity=cap))
+    gen = S.ctr_batches(seed=7, batch=512, rows=rows, n_fields=8, nnz=20,
+                        zipf_a=1.05)
+    warm_lookups = warm_fetched = 0.0
+    for step in range(60):
+        ids = jnp.asarray(next(gen)["ids"].reshape(-1))
+        ws, table, accum, state = pull(table, accum, state, flat_ids=ids)
+        assert int(ws.n_dropped) == 0   # capacity covers the working set
+        if step == 39:                  # steady state: measure the last 20
+            warm_lookups = float(state.lookups)
+            warm_fetched = float(state.fetched)
+    hit_rate = 1.0 - (float(state.fetched) - warm_fetched) / (
+        float(state.lookups) - warm_lookups
+    )
+    assert hit_rate >= 0.80, f"steady-state hit rate {hit_rate:.3f}"
+    # the cold start must have fetched at least a cache-full of rows
+    assert float(state.fetched) >= C
+
+
+def _cached_tcfg(ckpt_dir=None, cache_rows=4096, capacity=4096):
+    return TrainerConfig(
+        n_pod=2, kstep=KStepConfig(lr=1e-3, k=5, b1=0.0),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        placement="cached", capacity=capacity, cache_rows=cache_rows,
+        ckpt_dir=ckpt_dir, ckpt_every=10, ckpt_async=False, log_every=5,
+    )
+
+
+def _ctr_gen(seed=9):
+    return S.ctr_batches(seed=seed, batch=256, rows=20000, n_fields=8,
+                         nnz=20, zipf_a=1.05)
+
+
+def test_factory_rejects_undersized_cache():
+    """An EXPLICIT cache_rows below the working-set capacity is an error,
+    not a silent clamp — a cache-size experiment must run with the cache it
+    asked for (cache_rows=None defaults to the capacity floor)."""
+    with pytest.raises(ValueError, match="cache_rows"):
+        build_trainer("baidu-ctr", _cached_tcfg(cache_rows=1024))
+    tr = build_trainer("baidu-ctr", _cached_tcfg(cache_rows=None))
+    assert tr.engine.backend.cache_rows == tr.engine.capacity
+
+
+def test_cached_trainer_history_metrics():
+    """fit() surfaces cache_hit_rate/evictions next to overflow_dropped."""
+    tr = build_trainer("baidu-ctr", _cached_tcfg())
+    hist = tr.fit(_ctr_gen(), 10)
+    assert tr.step_num == 10
+    for rec in hist:
+        assert np.isfinite(rec["loss"])
+        assert 0.0 <= rec["cache_hit_rate"] <= 1.0
+        assert rec["evictions"] >= 0
+        assert rec["overflow_dropped"] == 0
+    # a 4096-row cache over a 20k-row Zipf table must evict and still hit
+    assert hist[-1]["evictions"] > 0
+    assert hist[-1]["cache_hit_rate"] > 0.5
+    assert hist[-1]["cache_bytes_h2d"] > 0
+
+
+def test_cached_checkpoint_resume_bitexact(tmp_path):
+    """Crash/resume with the cache tier: host tables + device-cache state
+    roundtrip so the resumed run is bit-identical to an uninterrupted one."""
+    d = str(tmp_path)
+    gen = _ctr_gen()
+    batches = [next(gen) for _ in range(30)]
+
+    t_ref = build_trainer("baidu-ctr", _cached_tcfg())
+    for b in batches:
+        t_ref.train_step(b)
+
+    t_a = build_trainer("baidu-ctr", _cached_tcfg(ckpt_dir=d))
+    for b in batches[:20]:
+        t_a.train_step(b)
+    del t_a  # crash after step 20 (ckpt_every=10 -> ckpt at 20 exists)
+
+    t_b = build_trainer("baidu-ctr", _cached_tcfg(ckpt_dir=d))
+    assert t_b.resume() and t_b.step_num == 20
+    for b in batches[20:]:
+        t_b.train_step(b)
+
+    for a, b_ in zip(jax.tree.leaves(t_ref.tables), jax.tree.leaves(t_b.tables)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    for a, b_ in zip(jax.tree.leaves(t_ref.backend_state),
+                     jax.tree.leaves(t_b.backend_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    for a, b_ in zip(jax.tree.leaves(t_ref.dense), jax.tree.leaves(t_b.dense)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_cached_resume_rejects_other_placements(tmp_path):
+    """Cached-run checkpoints hold host tables that are stale wherever rows
+    sat dirty in the device cache — resuming them under gather (or under a
+    different cache geometry) must fail loudly."""
+    d = str(tmp_path)
+    t_a = build_trainer("baidu-ctr", _cached_tcfg(ckpt_dir=d))
+    gen = _ctr_gen()
+    for _ in range(10):
+        t_a.train_step(next(gen))
+
+    gather_cfg = _cached_tcfg(ckpt_dir=d)
+    gather_cfg.placement = "gather"
+    t_gather = build_trainer("baidu-ctr", gather_cfg)
+    with pytest.raises(ValueError, match="physical"):
+        t_gather.resume()
+
+    t_resized = build_trainer(
+        "baidu-ctr", _cached_tcfg(ckpt_dir=d, cache_rows=8192)
+    )
+    with pytest.raises(ValueError, match="physical"):
+        t_resized.resume()
+
+
+def test_gather_resume_rejects_cached(tmp_path):
+    """The guard works in the other direction too: a gather checkpoint must
+    not silently seed a cached run's cold cache state."""
+    d = str(tmp_path)
+    cfg = _cached_tcfg(ckpt_dir=d)
+    cfg.placement = "gather"
+    t_a = build_trainer("baidu-ctr", cfg)
+    gen = _ctr_gen()
+    for _ in range(10):
+        t_a.train_step(next(gen))
+    t_b = build_trainer("baidu-ctr", _cached_tcfg(ckpt_dir=d))
+    with pytest.raises(ValueError, match="physical"):
+        t_b.resume()

@@ -40,6 +40,7 @@ def run_sub(code: str) -> str:
 def test_backends_satisfy_protocol():
     assert isinstance(GatherBackend(), EmbeddingBackend)
     assert isinstance(make_backend("routed"), EmbeddingBackend)
+    assert isinstance(make_backend("cached", cache_rows=8), EmbeddingBackend)
 
 
 def test_gather_routed_parity_single_shard():
@@ -51,12 +52,14 @@ def test_gather_routed_parity_single_shard():
 
     table = jnp.asarray(rng.standard_normal((rows, dim)), jnp.float32)
     tg, tr = gb.prepare(table), rb.prepare(table)
+    sg, sr = gb.init_state(tg), rb.init_state(tr)
     ag = jnp.full((rows, dim), 0.1, jnp.float32)
     ar = jnp.full((rows, dim), 0.1, jnp.float32)
 
     for step in range(3):
         ids = jnp.asarray(rng.integers(0, rows, 50), jnp.int32)
-        wg, wr = gb.pull(tg, ids, cap), rb.pull(tr, ids, cap)
+        wg, tg, ag, sg = gb.pull(tg, ag, sg, ids, cap)
+        wr, tr, ar, sr = rb.pull(tr, ar, sr, ids, cap)
         assert int(wg.n_dropped) == 0 and int(wr.n_dropped) == 0
         np.testing.assert_array_equal(np.asarray(wg.uids), np.asarray(wr.uids))
         np.testing.assert_array_equal(np.asarray(wg.inverse), np.asarray(wr.inverse))
@@ -66,8 +69,8 @@ def test_gather_routed_parity_single_shard():
         row_g = np.zeros((cap, dim), np.float32)
         np.add.at(row_g, np.asarray(wg.inverse), slot_g)
         row_g = jnp.asarray(row_g)
-        tg, ag = gb.push(tg, ag, wg, row_g, opt)
-        tr, ar = rb.push(tr, ar, wr, row_g, opt)
+        tg, ag, sg = gb.push(tg, ag, sg, wg, row_g, opt)
+        tr, ar, sr = rb.push(tr, ar, sr, wr, row_g, opt)
         np.testing.assert_allclose(
             np.asarray(gb.export(tg)), np.asarray(rb.export(tr)), atol=1e-5
         )
@@ -77,25 +80,33 @@ def test_gather_routed_parity_single_shard():
 
 
 def test_dedup_overflow_counted_and_graceful():
-    """More distinct ids than capacity: counted on BOTH backends, and the
+    """More distinct ids than capacity: counted on ALL backends, and the
     dropped slots read the zero drop row (finite lookups, no NaN fill)."""
     table = jnp.ones((32, 2), jnp.float32)
     ids = jnp.arange(16, dtype=jnp.int32)
-    for backend in (GatherBackend(), make_backend("routed")):
+    for backend in (GatherBackend(), make_backend("routed"),
+                    make_backend("cached", cache_rows=16)):
         t = backend.prepare(table)
-        ws = backend.pull(t, ids, 8)
+        accum = jnp.full(table.shape, 0.1, jnp.float32)
+        state = backend.init_state(t)
+        ws, _, _, _ = backend.pull(t, accum, state, ids, 8)
         assert int(ws.n_dropped) == 8
         looked_up = np.asarray(jnp.take(ws.rows, ws.inverse, axis=0))
         assert np.all(np.isfinite(looked_up))
         # served slots see real rows, dropped slots see zeros
         assert np.all(looked_up[:8] == 1.0) and np.all(looked_up[8:] == 0.0)
-        assert int(backend.pull(t, ids, 16).n_dropped) == 0
+        ws2, _, _, _ = backend.pull(t, accum, backend.init_state(t), ids, 16)
+        assert int(ws2.n_dropped) == 0
 
 
 def test_make_backend_validation():
     import pytest
     with pytest.raises(ValueError, match="placement"):
         make_backend("bogus")
+    with pytest.raises(TypeError, match="cache_rows"):
+        make_backend("cached")
+    with pytest.raises(TypeError, match="gather"):
+        make_backend("gather", cache_rows=8)
     # shard axes absent from the mesh are ignored (single-pod spec reuse)
     rb = RoutedBackend(jax.make_mesh((1,), ("data",)),
                        shard_axes=("pod", "data", "model"))
@@ -119,18 +130,20 @@ rng = np.random.default_rng(0)
 opt = SparseAdagrad(SparseAdagradConfig(lr=0.1))
 table = jnp.asarray(rng.standard_normal((rows, dim)), jnp.float32)
 tg, tr = gb.prepare(table), rb.prepare(table)
+sg, sr = gb.init_state(tg), rb.init_state(tr)
 ag = ar = jnp.full((rows, dim), 0.1, jnp.float32)
 for _ in range(2):
     ids = jnp.asarray(rng.integers(0, rows, 100), jnp.int32)
-    wg, wr = gb.pull(tg, ids, cap), rb.pull(tr, ids, cap)
+    wg, tg, ag, sg = gb.pull(tg, ag, sg, ids, cap)
+    wr, tr, ar, sr = rb.pull(tr, ar, sr, ids, cap)
     assert int(wg.n_dropped) == 0 and int(wr.n_dropped) == 0
     np.testing.assert_allclose(np.asarray(wg.rows), np.asarray(wr.rows), atol=1e-6)
     slot_g = rng.standard_normal((100, dim)).astype(np.float32)
     row_g = np.zeros((cap, dim), np.float32)
     np.add.at(row_g, np.asarray(wg.inverse), slot_g)
     row_g = jnp.asarray(row_g)
-    tg, ag = gb.push(tg, ag, wg, row_g, opt)
-    tr, ar = rb.push(tr, ar, wr, row_g, opt)
+    tg, ag, sg = gb.push(tg, ag, sg, wg, row_g, opt)
+    tr, ar, sr = rb.push(tr, ar, sr, wr, row_g, opt)
     np.testing.assert_allclose(np.asarray(gb.export(tg)),
                                np.asarray(rb.export(tr)), atol=1e-5)
     np.testing.assert_allclose(np.asarray(gb.export(ag)),
@@ -160,13 +173,18 @@ def test_build_trainer_fit_smoke():
 
 
 def test_build_trainer_placement_parity():
-    """--placement routed trains end to end and matches gather losses."""
+    """--placement routed/cached train end to end and match gather losses
+    (cached runs with a full-mirror cache, its lossless configuration)."""
     losses = {}
-    for placement in ("gather", "routed"):
-        tr = build_trainer("baidu-ctr", _tcfg(placement))
+    for placement in ("gather", "routed", "cached"):
+        tcfg = _tcfg(placement)
+        if placement == "cached":
+            tcfg.cache_rows = 20000   # >= table rows: bit-identical regime
+        tr = build_trainer("baidu-ctr", tcfg)
         gen = S.ctr_batches(seed=1, batch=256, rows=20000, n_fields=8, nnz=20)
         losses[placement] = [tr.train_step(next(gen)) for _ in range(5)]
     np.testing.assert_allclose(losses["gather"], losses["routed"], atol=1e-4)
+    np.testing.assert_allclose(losses["gather"], losses["cached"], atol=1e-6)
 
 
 def test_build_trainer_dense_families():

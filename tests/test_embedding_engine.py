@@ -95,14 +95,18 @@ def test_engine_end_to_end():
         {"t": TableSpec("t", rows=50, dim=4)}, capacity=16
     )
     tables = engine.init(jax.random.key(0))
+    accum = engine.init_state(tables).accum
+    states = engine.init_backend_state(tables)
     ids = jnp.asarray([3, 3, 7, 9, 3], jnp.int32)
     seg = jnp.asarray([0, 0, 1, 1, 2], jnp.int32)
-    ws = engine.pull(tables, {"t": ids})["t"]
+    wss, _, _, _ = engine.pull(tables, accum, states, {"t": ids})
+    ws = wss["t"]
     assert int(ws.n_dropped) == 0
     bags = engine.bag_from_working(ws.rows, ws.inverse, seg, num_bags=3)
     expect = embedding_bag(tables["t"], ids, seg, 3)
     np.testing.assert_allclose(np.asarray(bags), np.asarray(expect), atol=1e-6)
     assert engine.memory_bytes() == 50 * 4 * 4
+    assert engine.cache_stats(states) == {}   # stateless placement
 
 
 def test_engine_ids_from_batch_and_push():
@@ -113,11 +117,16 @@ def test_engine_ids_from_batch_and_push():
     )
     tables = engine.init(jax.random.key(1))
     state = engine.init_state(tables)
+    states = engine.init_backend_state(tables)
     batch = {"my_ids": jnp.asarray([[1, 2], [2, 5]], jnp.int32)}
-    wss = engine.pull_batch(tables, batch)
+    wss, tables_p, accum_p, states_p = engine.pull_batch(
+        tables, state.accum, states, batch
+    )
     # per-slot unit grads accumulated onto working rows, like autodiff would
     grads = {"t": jnp.zeros_like(wss["t"].rows).at[wss["t"].inverse].add(1.0)}
-    new_tables, new_accum = engine.push(tables, state.accum, wss, grads)
+    new_tables, new_accum, _ = engine.push(
+        tables_p, accum_p, states_p, wss, grads
+    )
     # only the 3 touched rows moved
     moved = np.flatnonzero(
         np.any(np.asarray(new_tables["t"]) != np.asarray(tables["t"]), axis=1)

@@ -154,6 +154,37 @@ def test_resume_rejects_backend_mismatch(tmp_path):
         t_b.resume()
 
 
+def test_suggest_capacity_from_overflow():
+    """Overflow-aware capacity autoscaling (step 1): a trainer that drops
+    pulls recommends a larger power-of-two capacity; a clean trainer keeps
+    its current one."""
+    clean = ctr_trainer(n_pod=1, k=1)
+    gen = S.ctr_batches(seed=9, batch=256, rows=CTR_CFG.rows,
+                        n_fields=CTR_CFG.n_fields, nnz=CTR_CFG.nnz_per_instance)
+    clean.cfg.log_every = 2
+    clean.fit(gen, 4)
+    assert clean.overflow_dropped == 0
+    assert clean.suggest_capacity() == clean.engine.capacity
+
+    # synthetic history: 300 drops over 2 steps at capacity 8192
+    # -> needs >= 8192 + 1.25 * 150 -> next pow2 = 16384
+    hist = [{"step": 2, "overflow_dropped": 300}]
+    assert clean.suggest_capacity(history=hist) == 16384
+
+    # live overflow: capacity 64 cannot hold ~2k distinct ids per batch
+    from repro.runtime.factory import build_trainer
+    tight = build_trainer("baidu-ctr", TrainerConfig(
+        n_pod=1, kstep=KStepConfig(lr=1e-3, k=1, b1=0.0),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        capacity=64, log_every=2,
+    ))
+    gen = S.ctr_batches(seed=1, batch=256, rows=20000, n_fields=8, nnz=20)
+    tight.fit(gen, 4)
+    assert tight.overflow_dropped > 0
+    suggested = tight.suggest_capacity()
+    assert suggested > 64 and (suggested & (suggested - 1)) == 0
+
+
 def test_dense_trainer_lm_learns_and_resumes(tmp_path):
     cfg = T.TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                               d_ff=128, vocab=64, dtype=jnp.float32, moe_group_size=64)
