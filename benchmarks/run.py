@@ -22,6 +22,7 @@ def main() -> None:
 
     from benchmarks import (  # noqa: E402
         fig5_pipeline,
+        fig5_prefetch,
         fig6_twophase,
         fig9_kstep_auc,
         fig10_comm_ratio,
@@ -33,6 +34,7 @@ def main() -> None:
     benches = {
         "table1": lambda: table1_hashing.run(steps=steps),
         "fig5": lambda: fig5_pipeline.run(),
+        "fig5_prefetch": lambda: fig5_prefetch.run(steps=steps // 2),
         "fig6": lambda: fig6_twophase.run(),
         "fig9": lambda: fig9_kstep_auc.run(steps=steps),
         "fig10": lambda: fig10_comm_ratio.run(),

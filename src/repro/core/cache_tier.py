@@ -102,7 +102,10 @@ class CachedBackend:
     def init_state(self, table: jnp.ndarray) -> CacheState:
         n_rows, dim = table.shape
         C = self.cache_rows
-        z = jnp.zeros((), jnp.float32)
+        # counters get DISTINCT buffers: the state pytree is donated into
+        # the compiled pull stage, and donating one shared zero five times
+        # is an XLA error ("attempt to donate the same buffer twice")
+        z = lambda: jnp.zeros((), jnp.float32)
         return CacheState(
             slot_uid=jnp.full((C,), -1, jnp.int32),
             id_slot=jnp.full((n_rows,), -1, jnp.int32),
@@ -110,7 +113,7 @@ class CachedBackend:
             accum=jnp.zeros((C, dim), jnp.float32),
             freq=jnp.zeros((C,), jnp.float32),
             dirty=jnp.zeros((C,), bool),
-            lookups=z, fetched=z, evictions=z, bytes_h2d=z, bytes_d2h=z,
+            lookups=z(), fetched=z(), evictions=z(), bytes_h2d=z(), bytes_d2h=z(),
         )
 
     def _row_bytes(self, table: jnp.ndarray) -> int:

@@ -29,6 +29,15 @@ Training path per batch (Algorithm 1 lines 3, 11, 13):
   3. ``push(tables, accum, states, working_sets, row_grads)`` — backend
      scatters the AdaGrad row updates back (or into its cache).
 
+The pull is also exposed as an explicit *stage* (``pull_stage`` — one jitted
+executable with buffer donation; ``pull_async`` dispatches it for a batch
+WITHOUT blocking, ``commit`` is the documented hand-off point): because a
+pull is a pure ``(tables, accum, states) -> (ws, tables, accum, states)``
+transition, a prefetcher (``repro.core.prefetch.PrefetchingEngine``) can
+speculatively dispatch batch t+1's pull while the device still runs batch
+t's fwd/bwd — the cache tier's table spill is the only ordering point, and
+it is serialized by handing the pull's returned tables to the next stage.
+
 JAX has no native EmbeddingBag and no CSR/CSC sparse — the bag lookup here is
 built from ``jnp.take`` + ``jax.ops.segment_sum`` (this IS part of the system,
 per the assignment), with a Pallas TPU kernel for the fused gather-reduce hot
@@ -125,6 +134,7 @@ class EmbeddingEngine:
             optimizer = SparseAdagrad(optimizer)
         self.opt: SparseAdagrad = optimizer
         self.backend: EmbeddingBackend = backend if backend is not None else GatherBackend()
+        self._pull_jits: Dict[bool, Any] = {}   # donate flag -> jitted stage
 
     # ------------------------------------------------------------ lifecycle
     def init(self, rng: jax.Array, scale: float = 0.01) -> Dict[str, jnp.ndarray]:
@@ -193,6 +203,49 @@ class EmbeddingEngine:
     def pull_batch(self, tables, accum, states, batch):
         return self.pull(tables, accum, states, self.ids_from_batch(batch))
 
+    # --------------------------------------------------- async pull staging
+    def pull_stage(self, donate: bool = True):
+        """The compiled PULL stage: ``(tables, accum, states, flat_ids) ->
+        (wss, tables, accum, states)``.
+
+        One cached ``jax.jit`` per donate flag — the SAME executable serves
+        synchronous pulls and speculative prefetch dispatches, so prefetched
+        training is bit-identical to synchronous training by construction.
+        With ``donate=True`` the table/accumulator/state buffers are donated
+        (the pull consumes the committed sparse state and hands back the
+        post-pull state; callers must drop their old references).
+        """
+        donate = bool(donate)
+        if donate not in self._pull_jits:
+            def _pull(tables, accum, states, flat_ids):
+                return self.pull(tables, accum, states, flat_ids)
+            self._pull_jits[donate] = jax.jit(
+                _pull, donate_argnums=(0, 1, 2) if donate else ()
+            )
+        return self._pull_jits[donate]
+
+    def pull_async(self, tables, accum, states, batch, donate: bool = True):
+        """Dispatch (do NOT block on) the pull stage for ``batch``.
+
+        Returns the un-materialized ``(wss, tables, accum, states)`` —
+        under JAX async dispatch these are futures, so the caller can keep
+        queuing work (the next step's fwd/bwd) while the pull executes.
+        """
+        return self.pull_stage(donate)(
+            tables, accum, states, self.ids_from_batch(batch)
+        )
+
+    @staticmethod
+    def commit(pulled):
+        """Hand a dispatched pull's ``(wss, tables, accum, states)`` to the
+        train stage — the serialization point of the prefetch protocol.
+
+        No computation happens here: the pull of batch t+1 commutes with the
+        push of batch t except through the table/accum/state trees, and
+        passing THESE returned trees onward is what serializes the cache
+        tier's spills against the next step's reads."""
+        return pulled
+
     def push(self, tables, accum, states, working_sets: Dict[str, WorkingSet],
              row_grads):
         """Algorithm 1 line 13: scatter row updates back (sparse optimizer
@@ -207,9 +260,11 @@ class EmbeddingEngine:
             new_tables[name], new_accum[name], new_states[name] = nt, na, ns
         return new_tables, new_accum, new_states
 
-    def cache_stats(self, states) -> Dict[str, float]:
-        """Aggregate cache-tier counters across tables ({} for stateless
-        placements).  Call outside jit — reads concrete counter values."""
+    def cache_counters(self, states) -> Dict[str, float]:
+        """Raw CUMULATIVE cache-tier counters summed across tables ({} for
+        stateless placements).  Call outside jit — materializes the device
+        scalars.  Interval (per-logging-window) deltas are the trainer's
+        job: it snapshots these totals at each boundary."""
         stats_fn = getattr(self.backend, "stats", None)
         if stats_fn is None:
             return {}
@@ -217,12 +272,24 @@ class EmbeddingEngine:
         for s in states.values():
             for k, v in stats_fn(s).items():
                 tot[k] = tot.get(k, 0.0) + v
+        return tot
+
+    @staticmethod
+    def derive_cache_stats(counters: Dict[str, float]) -> Dict[str, float]:
+        """Counter totals/deltas -> the reported stat dict ({} for {})."""
+        if not counters:
+            return {}
         return {
-            "cache_hit_rate": 1.0 - tot["fetched"] / max(tot["lookups"], 1.0),
-            "evictions": int(tot["evictions"]),
-            "cache_bytes_h2d": tot["bytes_h2d"],
-            "cache_bytes_d2h": tot["bytes_d2h"],
+            "cache_hit_rate": 1.0
+            - counters["fetched"] / max(counters["lookups"], 1.0),
+            "evictions": int(counters["evictions"]),
+            "cache_bytes_h2d": counters["bytes_h2d"],
+            "cache_bytes_d2h": counters["bytes_d2h"],
         }
+
+    def cache_stats(self, states) -> Dict[str, float]:
+        """Whole-run cache stats ({} for stateless placements)."""
+        return self.derive_cache_stats(self.cache_counters(states))
 
     @staticmethod
     def overflow(working_sets: Dict[str, WorkingSet]) -> jnp.ndarray:
@@ -246,12 +313,17 @@ class EmbeddingEngine:
         if weights is not None:
             emb = emb * weights[:, None].astype(emb.dtype)
         out = jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)
-        if combiner == "mean":
+        if combiner == "sum":
+            return out
+        if combiner in ("mean", "sqrtn"):
             cnt = jax.ops.segment_sum(
                 jnp.ones_like(segment_ids, emb.dtype), segment_ids, num_segments=num_bags
             )
-            out = out / jnp.maximum(cnt, 1.0)[:, None]
-        return out
+            denom = jnp.maximum(cnt, 1.0)
+            if combiner == "sqrtn":
+                denom = jnp.sqrt(denom)
+            return out / denom[:, None]
+        raise ValueError(f"unknown combiner {combiner!r}")
 
     def memory_bytes(self) -> int:
         return sum(

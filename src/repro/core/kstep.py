@@ -261,10 +261,30 @@ class KStepAdam:
         )
 
     # ----------------------------------------------------- delayed merging
+    def delayed_merge_collective(self, params: Pytree, state: KStepAdamState):
+        """Launch the cross-pod collective for a DELAYED merge.
+
+        Returns ``(merged, state')``: the pod-average of the current params
+        (to be applied ``merge_delay`` boundaries later through
+        ``apply_delayed_merge``) and the state with the Algorithm-2 line-12
+        ``v_hat <- mean_i v_local`` refresh, which applies immediately so
+        the local Adam denominators stay fresh while the parameter average
+        is in flight."""
+        merged = self._mean(params, allow_lossy=True)
+        if self.cfg.merge_v:
+            state = state._replace(
+                v_hat=self._mean(state.v_local, allow_lossy=False)
+            )
+        return merged, state
+
     @staticmethod
     def snapshot(params: Pytree) -> Pytree:
-        """Record params at a merge boundary for async (delayed) application."""
-        return params
+        """Record params at a merge boundary for async (delayed) application.
+
+        A real COPY: the live params are donated into subsequent local
+        steps, so the snapshot must own its buffers until the delayed merge
+        lands."""
+        return jax.tree.map(jnp.copy, params)
 
     @staticmethod
     def apply_delayed_merge(params_now, snapshot, merged):

@@ -1,0 +1,111 @@
+"""Double-buffered pull prefetch — the paper's Fig. 5 pipeline for the PS pull.
+
+Algorithm 1 runs pull -> fwd/bwd -> push strictly serially; the paper hides
+the parameter-server pull latency behind the accelerator's fwd/bwd work
+(Fig. 5's Read-Ins / Pull-Sparse / Train-DNN overlap, the same read-ahead
+structure as HugeCTR's hybrid-embedding prefetch and the AIBox hierarchical
+PS).  PR 2 made ``pull`` an explicit ``(tables, accum, state) ->
+(ws, tables, accum, state)`` transition, which is exactly what a prefetcher
+needs: the pull of batch t+1 commutes with the push of batch t except
+through those trees, so dispatching it early and handing the returned trees
+to the next step preserves bit-exactness (the cache tier's spill is the
+only ordering point, serialized by the hand-off).
+
+``PrefetchingEngine`` wraps any ``EmbeddingEngine`` with a one-slot
+double buffer:
+
+    pf = PrefetchingEngine(engine)
+    pending = pf.dispatch(tables, accum, states, staged_batch, src=batch)
+        # jitted pull (buffer donation) dispatched, NOT blocked on — under
+        # JAX async dispatch it overlaps the still-running train step
+    ...
+    wss, tables, accum, states = pf.commit()   # hand-off to the train stage
+
+Invariants (all loud, never silent):
+  - at most ONE pull is in flight (``dispatch`` while pending raises),
+  - ``commit`` without a pending pull raises,
+  - each ``PendingPull`` remembers the source batch object (``src``) so a
+    trainer can detect being fed a different batch than it prefetched,
+  - dispatch donates the committed table/accum/state buffers into the pull;
+    the logically-identical post-pull trees in the pending slot are the only
+    valid handles until commit (checkpointing must therefore happen at
+    commit boundaries — ``HybridTrainer.save`` enforces this).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+from repro.core.embedding_engine import EmbeddingEngine, WorkingSet
+
+
+class PendingPull(NamedTuple):
+    """One dispatched (possibly still executing) working-set pull.
+
+    All array leaves are un-materialized device values: under JAX async
+    dispatch they are futures that resolve when the pull executes.  The
+    ``tables``/``accum``/``bstate`` trees are the POST-pull sparse state —
+    logically identical to the committed state the pull consumed (a pull
+    moves rows between host and cache coherently; only push changes
+    values), so reads (e.g. online ``predict``) may use them while the
+    pull is in flight."""
+
+    wss: Dict[str, WorkingSet]   # per-table pulled working sets
+    tables: Dict[str, Any]       # post-pull tables (cache spills applied)
+    accum: Dict[str, Any]        # post-pull AdaGrad accumulators
+    bstate: Dict[str, Any]       # post-pull backend state (cache admissions)
+    batch: Any                   # the device-staged batch the pull serves
+    src: Any                     # the caller's original batch object (identity
+                                 # key for mismatch detection; keeps it alive)
+
+
+class PrefetchingEngine:
+    """One-slot (double-buffered) speculative pull dispatcher.
+
+    ``donate`` is forwarded to ``EmbeddingEngine.pull_stage``: the committed
+    sparse-state buffers are donated into the pull, so the caller must treat
+    the ``PendingPull``'s trees as the only live handles until ``commit``.
+    """
+
+    def __init__(self, engine: EmbeddingEngine, donate: bool = True):
+        self.engine = engine
+        self.donate = bool(donate)
+        self._pending: Optional[PendingPull] = None
+
+    @property
+    def pending(self) -> Optional[PendingPull]:
+        return self._pending
+
+    def dispatch(self, tables, accum, states, batch, src=None) -> PendingPull:
+        """Dispatch ``batch``'s pull against the committed sparse state.
+
+        Returns immediately (the pull runs under async dispatch); the result
+        lives in the pending slot until ``commit``.  ``batch`` must already
+        be device-staged; ``src`` is the caller's original batch object,
+        kept for identity checks."""
+        if self._pending is not None:
+            raise RuntimeError(
+                "PrefetchingEngine.dispatch: a pull is already in flight — "
+                "train on it (commit()) before dispatching another "
+                "(the prefetch pipeline is one batch deep)"
+            )
+        wss, t, a, s = self.engine.pull_async(
+            tables, accum, states, batch, donate=self.donate
+        )
+        self._pending = PendingPull(
+            wss=wss, tables=t, accum=a, bstate=s, batch=batch,
+            src=batch if src is None else src,
+        )
+        return self._pending
+
+    def commit(self) -> PendingPull:
+        """Take the pending pull for consumption by the train stage (the
+        serialization point: its trees carry the only valid sparse state)."""
+        p = self._pending
+        if p is None:
+            raise RuntimeError(
+                "PrefetchingEngine.commit: no pull in flight — dispatch() "
+                "one first (or run the synchronous pull path)"
+            )
+        self._pending = None
+        return p

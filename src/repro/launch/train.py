@@ -33,6 +33,12 @@ behind the ``EmbeddingBackend`` contract
 must be divisible by the shard count for ``routed``; ``--cache-rows`` must
 cover it for ``cached``).
 
+``--prefetch`` turns on the double-buffered pull prefetch (paper Fig. 5):
+the next batch's working-set pull is dispatched while the current step is
+still executing, for any placement — bit-identical results, overlapped
+pull latency.  ``--merge-delay N`` (DenseTrainer archs only) applies each
+k-step merge's cross-pod average N boundaries late (DCN latency hiding).
+
 On a real TPU cluster each process calls ``jax.distributed.initialize()``
 (args: --coordinator/--num-processes/--process-id, or TPU auto-detection)
 and the production mesh spans all pods; in this CPU container it runs the
@@ -71,6 +77,12 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="device cache rows for --placement cached "
                          "(0: working-set capacity, the minimum)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffered pull prefetch: overlap the next "
+                         "batch's pull with the current step (Fig. 5)")
+    ap.add_argument("--merge-delay", type=int, default=0,
+                    help="apply k-step merges N boundaries late "
+                         "(DenseTrainer archs; 0 = synchronous merges)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--smoke", action="store_true", default=True,
@@ -110,7 +122,8 @@ def main():
         kstep=KStepConfig(lr=args.lr, k=args.k, merge=args.merge),
         sparse=SparseAdagradConfig(lr=args.sparse_lr, initial_accumulator=0.01),
         placement=args.placement, capacity=args.capacity or None,
-        cache_rows=args.cache_rows or None,
+        cache_rows=args.cache_rows or None, prefetch=args.prefetch,
+        merge_delay=args.merge_delay,
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
     )
     t0 = time.perf_counter()
@@ -122,7 +135,8 @@ def main():
         gen = S.lm_batches(seed=0, batch=max(args.n_pod * 4, 8), seq_len=64,
                            vocab=cfg.vocab)
         hist = tr.fit(gen, args.steps)
-        print(f"final loss {hist[-1]['loss']:.4f} "
+        final = f"{hist[-1]['loss']:.4f}" if hist else "n/a (steps < log_every)"
+        print(f"final loss {final} "
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return
 
@@ -157,18 +171,22 @@ def main():
         loss = 0.0
         for _ in range(args.steps):
             b = next(gen)
+            # --prefetch: dispatch b's pull now (no-op otherwise) so it
+            # overlaps the previous step still executing on the device;
+            # predict reads the pull's pass-through state mid-flight.
+            tr.prefetch(b)
             meter.update(b["label"], tr.predict(b))
             loss = tr.train_step(b)
         if tr.ckpt:
             tr.ckpt.wait()   # async writer must land the final checkpoint
         stats = tr.sparse_metrics()
         cache = (
-            f"cache_hit_rate {stats['cache_hit_rate']:.3f} "
-            f"evictions {stats['evictions']} "
-            if "cache_hit_rate" in stats else ""
+            f"cache_hit_rate {stats['cache_hit_rate_total']:.3f} "
+            f"evictions {stats['evictions_total']} "
+            if "cache_hit_rate_total" in stats else ""
         )
-        print(f"final loss {loss:.6f} online AUC {meter.value():.4f} "
-              f"placement {args.placement} "
+        print(f"final loss {float(loss):.6f} online AUC {meter.value():.4f} "
+              f"placement {args.placement} prefetch {args.prefetch} "
               f"overflow_dropped {tr.overflow_dropped} {cache}"
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return

@@ -16,6 +16,8 @@ Family wiring:
     ``TrainerConfig.placement`` ("gather" | "routed" | "cached" — the
     cache tier sizes its device cache from ``TrainerConfig.cache_rows``),
     and the canonical embed/loss adapters from ``repro.models.recsys``.
+    ``TrainerConfig.prefetch`` turns on the double-buffered pull prefetch
+    (any placement, bit-identical results); dense families reject it.
 
 ``model_cfg`` overrides the registry's smoke/full config (used by examples
 that scale the table up or down); other recsys archs (dlrm/din/dien/

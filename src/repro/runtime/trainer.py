@@ -2,17 +2,29 @@
 
 ``DenseTrainer`` — any model whose parameters are all dense (LM, GNN):
 podded replicas + k-step Adam; per-pod batches; static local/merge
-executables; checkpoint/restart; straggler-tolerant merging.
+executables; checkpoint/restart; optional delayed (asynchronous) merge
+application (``merge_delay``).
 
 ``HybridTrainer`` — the paper's CTR/recsys regime: dense tower under k-step
-Adam + giant sparse tables owned by an ``EmbeddingEngine`` (Algorithm 1's
-pull -> train -> push through a pluggable ``EmbeddingBackend``; the pull is
-deduplicated across the *global* batch so the sparse sync stays O(working
-set), and overflowed pulls are counted in ``overflow_dropped``).  Each
-backend's per-table state pytree (the cache tier's id->slot map/counters/
-cached rows under ``--placement cached``) is threaded through the compiled
-step, checkpointed alongside the tables, and surfaced into ``fit`` history
-as ``cache_hit_rate``/``evictions`` next to ``overflow_dropped``.
+Adam + giant sparse tables owned by an ``EmbeddingEngine``.  Algorithm 1's
+pull -> train -> push runs as TWO compiled stages behind a pluggable
+``EmbeddingBackend``: a PULL stage (dedup + gather/route/cache admission)
+and a TRAIN+PUSH stage (fwd/bwd on the working set, k-step Adam, row-update
+scatter).  The split is what enables the paper's Fig. 5 pipeline: with
+``TrainerConfig.prefetch`` the trainer dispatches batch t+1's pull right
+after batch t's train stage is queued (``repro.core.prefetch``), so under
+JAX async dispatch the pull overlaps the step still executing — and the
+hand-off of the pull's returned ``(tables, accum, state)`` trees serializes
+the cache tier's spills, keeping prefetched training bit-identical to
+synchronous training.  Checkpoints are only written at commit boundaries
+(never with a pull in flight); ``save`` enforces this loudly.
+
+The hot path never blocks the host: ``train_step`` returns the loss as a
+device array and accumulates the overflow counter on-device; Python floats
+materialize only at ``log_every``/checkpoint boundaries (``fit`` history
+values are plain floats as before).  ``sparse_metrics`` reports PER-INTERVAL
+deltas (since the previous logging boundary) with whole-run cumulative
+values under ``*_total`` keys.
 
 Construct trainers directly, or — config-driven — through
 ``repro.runtime.factory.build_trainer(arch_name, TrainerConfig)``, which
@@ -22,14 +34,19 @@ Both runtimes implement the fault-tolerance contract:
 - crash-consistent checkpoints (atomic dirs) at a configurable cadence,
   including the int8 error-feedback residual when ``merge="int8_ef"``,
 - ``resume()`` picks up the newest complete checkpoint (mesh-independent),
-- the k-step merge is the only cross-pod sync point; ``merge_quorum < 1.0``
-  lets the merge proceed over a subset of pods (straggler mitigation: any
-  subset average is a valid Algorithm-2 merge with smaller N),
-- ``merge_delay > 0`` applies merges asynchronously (DCN latency hiding).
+- the k-step merge is the only cross-pod sync point,
+- ``merge_delay > 0`` (DenseTrainer) applies each merge's cross-pod average
+  ``merge_delay`` boundaries late, preserving the local drift since its
+  snapshot (DCN latency hiding; the in-flight merge queue is not
+  checkpointed — a restart resumes with an empty queue).
+
+Config knobs are never silently ignored: a trainer that cannot honor
+``prefetch``/``merge_delay``/``merge_quorum`` raises at construction.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
@@ -41,6 +58,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager, latest_step, read_manifest
 from repro.core.embedding_engine import EmbeddingEngine
 from repro.core.kstep import KStepAdam, KStepConfig, pod_replicate, pod_slice
+from repro.core.prefetch import PrefetchingEngine
 from repro.core.sparse_optim import SparseAdagradConfig
 
 Pytree = Any
@@ -55,14 +73,37 @@ class TrainerConfig:
     capacity: Optional[int] = None  # working-set bound (None: arch default)
     cache_rows: Optional[int] = None  # device cache size for "cached"
                                       # (None: arch default; must be >= capacity)
+    prefetch: bool = False        # double-buffered pull prefetch
+                                  # (HybridTrainer only; Fig. 5 overlap)
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     ckpt_keep: int = 3
     ckpt_async: bool = True
-    merge_quorum: float = 1.0     # fraction of pods required at a merge
-    merge_delay: int = 0          # async merge application lag (in merges)
+    merge_quorum: float = 1.0     # reserved: only 1.0 (all pods) implemented
+    merge_delay: int = 0          # async merge application lag, in merges
+                                  # (DenseTrainer only)
     log_every: int = 50
     donate: bool = True
+
+
+def _reject_dead_knobs(cfg: TrainerConfig, trainer: str, merge_delay_ok: bool):
+    """No-silent-config contract: a documented knob either works or raises —
+    it is never accepted and ignored."""
+    if cfg.merge_quorum != 1.0:
+        raise NotImplementedError(
+            f"{trainer}: merge_quorum={cfg.merge_quorum} is not implemented "
+            "(there is no straggler/failure detector yet — merges always "
+            "run over all pods); set merge_quorum=1.0"
+        )
+    if cfg.merge_delay < 0:
+        raise ValueError(f"merge_delay must be >= 0, got {cfg.merge_delay}")
+    if cfg.merge_delay > 0 and not merge_delay_ok:
+        raise ValueError(
+            f"{trainer} does not support merge_delay={cfg.merge_delay}: the "
+            "sparse side synchronizes every step, so a delayed dense merge "
+            "would shear the two halves of the model — use DenseTrainer, or "
+            "merge_delay=0"
+        )
 
 
 def pod_batch(batch: Dict[str, np.ndarray], n_pod: int) -> Dict[str, jnp.ndarray]:
@@ -91,21 +132,40 @@ def _drop_ef_if_absent(like: dict, ckpt: CheckpointManager) -> dict:
 
 
 def _fit_loop(trainer, batches: Iterator, steps: int, eval_fn=None) -> list:
-    """Shared fit(): train ``steps`` batches, log every ``log_every``."""
+    """Shared fit(): train ``steps`` batches, log every ``log_every``.
+
+    Runs one batch ahead of the device: the next batch is drawn from the
+    iterator while the step executes, and — when the trainer prefetches
+    (``cfg.prefetch``) — its pull is dispatched as soon as the current step
+    is queued.  Checkpoints (inside ``train_step``) and logged metrics both
+    materialize BEFORE the next pull is dispatched, so they capture the
+    committed state, never a speculative pull."""
+    if steps <= 0:
+        if trainer.ckpt:
+            trainer.ckpt.wait()   # fit(gen, 0) still flushes async saves
+        return trainer.history
     t0 = time.perf_counter()
-    for _ in range(steps):
-        loss = trainer.train_step(next(batches))
+    prefetch = getattr(trainer, "prefetch", None)
+    b = next(batches)
+    if prefetch is not None:
+        prefetch(b)
+    for i in range(steps):
+        loss = trainer.train_step(b)
+        b = next(batches) if i + 1 < steps else None
         if trainer.step_num % trainer.cfg.log_every == 0:
-            rec = {"step": trainer.step_num, "loss": loss,
+            rec = {"step": trainer.step_num, "loss": float(loss),
                    "sec": time.perf_counter() - t0}
-            # sparse-path health: overflow counter + cache-tier hit
-            # rate/evictions (HybridTrainer; cached placement only)
+            # sparse-path health: per-interval overflow + cache-tier hit
+            # rate/evictions (HybridTrainer; cached placement only).
+            # advance=True: only the logger moves the interval baseline.
             sparse_metrics = getattr(trainer, "sparse_metrics", None)
             if sparse_metrics is not None:
-                rec.update(sparse_metrics())
+                rec.update(sparse_metrics(advance=True))
             if eval_fn:
                 rec["eval"] = eval_fn(trainer)
             trainer.history.append(rec)
+        if prefetch is not None and b is not None:
+            prefetch(b)
     if trainer.ckpt:
         trainer.ckpt.wait()
     return trainer.history
@@ -123,6 +183,18 @@ class DenseTrainer:
         param_shardings: Optional[Pytree] = None,
     ):
         self.cfg = cfg
+        _reject_dead_knobs(cfg, "DenseTrainer", merge_delay_ok=True)
+        if cfg.prefetch:
+            raise ValueError(
+                "DenseTrainer: prefetch=True is a sparse-path feature "
+                "(HybridTrainer's pull prefetch) — an all-dense model has "
+                "no pull stage to overlap; set prefetch=False"
+            )
+        if cfg.merge_delay > 0 and cfg.kstep.merge == "int8_ef":
+            raise NotImplementedError(
+                "merge_delay>0 with merge='int8_ef' is not supported: the "
+                "error-feedback residual needs the fused merge path"
+            )
         self.n_pod = cfg.n_pod
         self.mesh = mesh
         self.params = pod_replicate(params, cfg.n_pod)
@@ -139,6 +211,11 @@ class DenseTrainer:
         donate = (0, 2) if cfg.donate else ()
         self._local = jax.jit(self._make_step(merge=False), donate_argnums=donate)
         self._merge = jax.jit(self._make_step(merge=True), donate_argnums=donate)
+        # merge_delay > 0: queue of (snapshot, in-flight merged average)
+        self._pending_merges: collections.deque = collections.deque()
+        if cfg.merge_delay > 0:
+            self._delayed_collective = jax.jit(self.opt.delayed_merge_collective)
+            self._delayed_apply = jax.jit(KStepAdam.apply_delayed_merge)
         self.history: list = []
 
     def _make_step(self, merge: bool):
@@ -154,17 +231,39 @@ class DenseTrainer:
     def pod_batch(self, batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
         return pod_batch(batch, self.n_pod)
 
-    def train_step(self, batch, podded: bool = False) -> float:
+    def _delayed_merge_boundary(self):
+        """``merge_delay > 0``: at each merge boundary, first apply the
+        average launched ``merge_delay`` boundaries ago (preserving the
+        local drift since its snapshot — ``KStepAdam.apply_delayed_merge``),
+        then launch this boundary's cross-pod collective (parameter average
+        + the Algorithm-2 ``v_hat <- mean v_local`` refresh, which applies
+        immediately so local denominators stay fresh)."""
+        if len(self._pending_merges) >= self.cfg.merge_delay:
+            snap_old, merged_old = self._pending_merges.popleft()
+            self.params = self._delayed_apply(self.params, snap_old, merged_old)
+        snap = KStepAdam.snapshot(self.params)
+        merged, self.opt_state = self._delayed_collective(
+            self.params, self.opt_state
+        )
+        self._pending_merges.append((snap, merged))
+
+    def train_step(self, batch, podded: bool = False) -> jnp.ndarray:
         """``podded=True``: batch leaves already carry the leading pod dim
-        (e.g. full-graph training where each pod sees the same graph)."""
+        (e.g. full-graph training where each pod sees the same graph).
+
+        Returns the mean loss as a DEVICE array (no host sync — the hot
+        path never blocks; ``float()`` it at logging boundaries)."""
         self.step_num += 1
-        is_merge = (self.step_num % self.cfg.kstep.k) == 0
-        fn = self._merge if is_merge else self._local
+        is_boundary = (self.step_num % self.cfg.kstep.k) == 0
+        fused_merge = is_boundary and self.cfg.merge_delay == 0
+        fn = self._merge if fused_merge else self._local
         pb = jax.tree.map(jnp.asarray, batch) if podded else self.pod_batch(batch)
         self.params, self.opt_state, loss = fn(self.params, pb, self.opt_state)
+        if is_boundary and self.cfg.merge_delay > 0:
+            self._delayed_merge_boundary()
         if self.ckpt and self.ckpt.should_save(self.step_num):
             self.save()
-        return float(loss)
+        return loss
 
     # ----------------------------------------------------- fault tolerance
     def _ckpt_tree(self):
@@ -196,6 +295,7 @@ class DenseTrainer:
             v_local=tree["v_local"], v_hat=tree["v_hat"],
             ef=tree.get("ef", self.opt_state.ef),
         )
+        self._pending_merges.clear()   # in-flight delayed merges don't resume
         return True
 
     def fit(self, batches: Iterator, steps: int, eval_fn=None) -> list:
@@ -219,6 +319,13 @@ class HybridTrainer:
     tables: optional pre-initialized tables IN THE BACKEND'S LAYOUT
         (e.g. from ``engine.init`` or ``engine.prepare``); ``None`` lets the
         engine initialize them from ``rng``.
+
+    The train step runs as two compiled stages sharing one contract —
+    ``pull`` (``engine.pull_stage``) and ``train+push`` — so the synchronous
+    path and the prefetched path (``cfg.prefetch``; see
+    ``repro.core.prefetch``) execute the SAME executables and produce
+    bit-identical results; the prefetched path merely dispatches the pull of
+    batch t+1 before batch t's train stage has finished executing.
     """
 
     def __init__(
@@ -233,6 +340,7 @@ class HybridTrainer:
         rng: Optional[jax.Array] = None,
     ):
         self.cfg = cfg
+        _reject_dead_knobs(cfg, "HybridTrainer", merge_delay_ok=False)
         self.n_pod = cfg.n_pod
         self.mesh = mesh
         self.engine = engine
@@ -246,28 +354,42 @@ class HybridTrainer:
         self.sparse_state = engine.init_state(self.tables)
         # per-table backend state (cache-tier id->slot map/counters/rows;
         # empty tuples for the stateless placements) — threaded through the
-        # compiled step and checkpointed alongside the tables.
+        # compiled stages and checkpointed alongside the tables.
         self.backend_state = engine.init_backend_state(self.tables)
         self.step_num = 0
-        self.overflow_dropped = 0   # cumulative unserved pull/push requests
+        # device-resident cumulative overflow counter (materialized only at
+        # logging/checkpoint boundaries — the hot path never syncs the host)
+        self._overflow = jnp.zeros((), jnp.int32)
+        self._metrics_prev: Dict[str, float] = {}  # counter snapshot at last log
+        self._metrics_base_step = 0   # step the counters were last re-zeroed at
         self._embed = embed_fn
         self._loss = loss_fn
         self.ckpt = (
             CheckpointManager(cfg.ckpt_dir, cfg.ckpt_keep, cfg.ckpt_every, cfg.ckpt_async)
             if cfg.ckpt_dir else None
         )
-        self._step_local = jax.jit(self._make_step(False))
-        self._step_merge = jax.jit(self._make_step(True))
+        donate = cfg.donate
+        # stage 1: the engine's compiled pull (shared with the prefetcher —
+        # same executable => prefetched training is bit-identical)
+        self._pull = engine.pull_stage(donate=donate)
+        # stage 2: fwd/bwd on the working set + k-step Adam + push.  The
+        # working sets (arg 4) are NOT donated: their int index buffers and
+        # capacity-shaped rows can never alias the stage's outputs.
+        train_donate = (0, 1, 2, 3, 6, 7) if donate else ()
+        self._train_local = jax.jit(
+            self._make_train(False), donate_argnums=train_donate
+        )
+        self._train_merge = jax.jit(
+            self._make_train(True), donate_argnums=train_donate
+        )
+        self._prefetcher = (
+            PrefetchingEngine(engine, donate=donate) if cfg.prefetch else None
+        )
         self.history: list = []
 
-    def _make_step(self, merge: bool):
-        def step(dense, tables, accum, bstate, batch, batch_podded, opt_state):
-            # ---- PULL (Algorithm 1 line 3): engine dedups + gathers/routes/
-            # serves from cache.  tables/accum come back because a cache-tier
-            # pull spills evicted dirty rows into the host table.
-            wss, tables, accum, bstate = self.engine.pull_batch(
-                tables, accum, bstate, batch
-            )
+    def _make_train(self, merge: bool):
+        def train(dense, tables, accum, bstate, wss, batch_podded, opt_state,
+                  overflow):
             workings = {n: ws.rows for n, ws in wss.items()}
             # inverse indices sliced per pod so each replica embeds only its
             # own batch shard (vmapped leading pod dim)
@@ -275,7 +397,7 @@ class HybridTrainer:
                 n: ws.inverse.reshape(self.n_pod, -1) for n, ws in wss.items()
             }
 
-            # ---- local fwd/bwd on the working set (line 12)
+            # ---- local fwd/bwd on the working set (Algorithm 1 line 12)
             def total_loss(dense_p, w):
                 def per_pod(dp, bp, inv_p):
                     emb = self._embed(w, inv_p, bp)
@@ -299,29 +421,106 @@ class HybridTrainer:
             new_tables, new_accum, bstate = self.engine.push(
                 tables, accum, bstate, wss, work_g
             )
+            new_overflow = overflow + self.engine.overflow(wss).astype(jnp.int32)
             return (new_dense, new_tables, new_accum, bstate, new_opt,
-                    jnp.mean(losses), self.engine.overflow(wss))
+                    jnp.mean(losses), new_overflow)
 
-        return step
+        return train
 
     def pod_batch(self, batch):
         return pod_batch(batch, self.n_pod)
 
-    def train_step(self, batch) -> float:
+    def _stage(self, batch):
+        return jax.tree.map(jnp.asarray, batch)
+
+    def prefetch(self, batch) -> bool:
+        """Speculatively dispatch ``batch``'s working-set pull (the Fig. 5
+        overlap).  No-op unless ``cfg.prefetch``; idempotent for the batch
+        already in flight; a DIFFERENT batch while one is pending is a
+        pipeline bug and raises.  After dispatch the trainer's sparse-state
+        handles point at the pull's pass-through trees (logically identical
+        values — a pull moves rows coherently, only push changes them), so
+        online ``predict`` keeps working mid-flight."""
+        if self._prefetcher is None or batch is None:
+            return False
+        pending = self._prefetcher.pending
+        if pending is not None:
+            if pending.src is batch:
+                return True
+            raise RuntimeError(
+                "HybridTrainer.prefetch: a pull for a different batch is "
+                "already in flight — train_step() it before prefetching "
+                "the next batch (the pipeline is one batch deep)"
+            )
+        pending = self._prefetcher.dispatch(
+            self.tables, self.sparse_state.accum, self.backend_state,
+            self._stage(batch), src=batch,
+        )
+        # the dispatch donated the committed buffers; the post-pull trees
+        # are now the only valid handles until the commit in train_step
+        self.tables = pending.tables
+        self.backend_state = pending.bstate
+        self.sparse_state = self.sparse_state._replace(accum=pending.accum)
+        return True
+
+    def train_step(self, batch) -> jnp.ndarray:
+        """One pull -> train -> push step on ``batch``.
+
+        Uses the prefetched pull when one is in flight (``cfg.prefetch``),
+        otherwise dispatches the pull stage synchronously — the same
+        executables either way.  Returns the mean loss as a DEVICE array
+        (no host sync; ``float()`` it at logging boundaries)."""
+        if self._prefetcher is not None:
+            pending = self._prefetcher.pending
+            # reject BEFORE any state moves (step_num included): a caught
+            # misuse error must not shift the merge/checkpoint cadence
+            if pending is not None and pending.src is not batch:
+                raise RuntimeError(
+                    "HybridTrainer.train_step: the in-flight prefetched pull "
+                    "belongs to a different batch than the one passed — "
+                    "feed the same batch to prefetch() and train_step()"
+                )
         self.step_num += 1
         is_merge = (self.step_num % self.cfg.kstep.k) == 0
-        fn = self._step_merge if is_merge else self._step_local
-        batch = jax.tree.map(jnp.asarray, batch)
+        fn = self._train_merge if is_merge else self._train_local
+        if self._prefetcher is not None:
+            if self._prefetcher.pending is None:
+                self.prefetch(batch)   # cold start: pull now (not early)
+            p = self._prefetcher.commit()
+            wss, staged = p.wss, p.batch
+            tables, accum, bstate = p.tables, p.accum, p.bstate
+        else:
+            staged = self._stage(batch)
+            wss, tables, accum, bstate = self.engine.commit(self._pull(
+                self.tables, self.sparse_state.accum, self.backend_state,
+                self.engine.ids_from_batch(staged),
+            ))
         (self.dense, self.tables, accum, self.backend_state, self.opt_state,
-         loss, dropped) = fn(
-            self.dense, self.tables, self.sparse_state.accum,
-            self.backend_state, batch, self.pod_batch(batch), self.opt_state,
+         loss, self._overflow) = fn(
+            self.dense, tables, accum, bstate, wss,
+            self.pod_batch(staged), self.opt_state, self._overflow,
         )
         self.sparse_state = self.sparse_state._replace(accum=accum)
-        self.overflow_dropped += int(dropped)
         if self.ckpt and self.ckpt.should_save(self.step_num):
-            self.save()
-        return float(loss)
+            self.save()   # committed state: the next pull is not yet queued
+        return loss
+
+    def train_step_prefetched(self, batch, next_batch=None) -> jnp.ndarray:
+        """One pipelined step for manual (non-``fit``) loops: train on
+        ``batch`` (consuming its prefetched pull, or pulling now on a cold
+        start), then dispatch ``next_batch``'s pull so it overlaps the step
+        just queued."""
+        loss = self.train_step(batch)
+        if next_batch is not None:
+            self.prefetch(next_batch)
+        return loss
+
+    @property
+    def overflow_dropped(self) -> int:
+        """Cumulative unserved pull/push requests, across restarts (the
+        counter is checkpointed) — materializes the device-resident scalar
+        (read at logging boundaries, not per step)."""
+        return int(self._overflow)
 
     def predict(self, batch) -> np.ndarray:
         """Inference with pod-0's dense replica (online predict-then-train).
@@ -329,7 +528,9 @@ class HybridTrainer:
         Reads through the sparse path without committing its side effects:
         cache admissions/spills from the inference pull are discarded, so
         predict never perturbs training state (misses are still served —
-        the pull fetches from the authoritative host rows)."""
+        the pull fetches from the authoritative host rows).  Valid while a
+        prefetched pull is in flight: the pass-through trees it reads are
+        logically identical to the committed state."""
         batch = jax.tree.map(jnp.asarray, batch)
         dense0 = pod_slice(self.dense, 0)
         wss, _, _, _ = self.engine.pull_batch(
@@ -340,38 +541,59 @@ class HybridTrainer:
         emb = self._embed(workings, invs, batch)
         return np.asarray(self._loss(dense0, emb, batch, predict=True))
 
-    def sparse_metrics(self) -> Dict[str, float]:
-        """Sparse-path health counters for trainer history/monitoring:
-        cumulative ``overflow_dropped`` plus, under the cached placement,
-        ``cache_hit_rate``/``evictions``/host<->device byte counters."""
-        m: Dict[str, float] = {"overflow_dropped": self.overflow_dropped}
-        m.update(self.engine.cache_stats(self.backend_state))
+    def sparse_metrics(self, advance: bool = False) -> Dict[str, float]:
+        """Sparse-path health for trainer history/monitoring, PER INTERVAL
+        (deltas since the last logging boundary — the current window):
+        ``overflow_dropped`` plus, under the cached placement,
+        ``cache_hit_rate``/``evictions``/host<->device byte meters.
+        Whole-run cumulative values ride along under ``*_total`` keys
+        (``cache_hit_rate_total`` is the whole-run blend).
+
+        A PURE read by default — poll it freely between boundaries.  Only
+        ``advance=True`` (what ``fit``'s logger passes) moves the interval
+        baseline forward, so external polls never eat a window's deltas out
+        from under the history records."""
+        total = int(self._overflow)
+        counters = self.engine.cache_counters(self.backend_state)
+        prev = self._metrics_prev
+        m: Dict[str, float] = {
+            "overflow_dropped": total - int(prev.get("overflow", 0)),
+            "overflow_dropped_total": total,
+        }
+        if counters:
+            delta = {k: v - prev.get(k, 0.0) for k, v in counters.items()}
+            m.update(self.engine.derive_cache_stats(delta))
+            for k, v in self.engine.derive_cache_stats(counters).items():
+                m[f"{k}_total"] = v
+        if advance:
+            self._metrics_prev = {"overflow": total, **counters}
         return m
 
     def suggest_capacity(self, history=None, safety: float = 1.25) -> int:
         """Recommend a dedup capacity from observed overflow (the first step
         of overflow-aware capacity autoscaling).
 
-        Reads the ``overflow_dropped`` series from ``history`` (default: this
-        trainer's own ``fit`` history): with no drops the current capacity
-        stands; otherwise grow to the next power of two covering the current
-        capacity plus ``safety`` x the worst observed per-step drop rate
-        (powers of two keep routed shard divisibility).
+        Reads the PER-INTERVAL ``overflow_dropped`` records from ``history``
+        (default: this trainer's own ``fit`` history, whose first interval
+        starts at the step the counters were last zeroed — construction or
+        resume): with no drops the current capacity stands; otherwise grow
+        to the next power of two covering the current capacity plus
+        ``safety`` x the worst observed per-step drop rate (powers of two
+        keep routed shard divisibility).
         """
         hist = self.history if history is None else history
         worst = 0.0
-        prev_step, prev_drop = 0, 0.0
+        prev_step = self._metrics_base_step if history is None else 0
         for rec in hist:
             if "overflow_dropped" not in rec:
                 continue
             d_steps = rec["step"] - prev_step
             if d_steps > 0:
-                worst = max(
-                    worst, (rec["overflow_dropped"] - prev_drop) / d_steps
-                )
-            prev_step, prev_drop = rec["step"], rec["overflow_dropped"]
+                worst = max(worst, rec["overflow_dropped"] / d_steps)
+            prev_step = rec["step"]
         if not hist and self.step_num > 0:
             # no logged records yet: fall back to the cumulative average
+            # (the overflow counter spans the whole run — it is checkpointed)
             worst = self.overflow_dropped / self.step_num
         if worst <= 0:
             return self.engine.capacity
@@ -396,6 +618,9 @@ class HybridTrainer:
             # state: host tables alone are stale while rows sit dirty in the
             # device cache, so the cache must roundtrip with them.
             tree["bstate"] = self.backend_state
+        # the overflow counter rides along so post-resume *_total metrics
+        # share one baseline with the cache counters living in bstate
+        tree["overflow"] = self._overflow
         return tree
 
     def _backend_sig(self):
@@ -410,6 +635,16 @@ class HybridTrainer:
         return sig
 
     def save(self):
+        if self._prefetcher is not None and self._prefetcher.pending is not None:
+            # flush-on-checkpoint: a checkpoint must capture the committed
+            # (post-push) state — the speculative pull's cache admissions
+            # would double-count on resume.  fit/train_step save at commit
+            # boundaries before the next pull is dispatched.
+            raise RuntimeError(
+                "HybridTrainer.save: a prefetched pull is in flight — "
+                "checkpoints capture committed state only; save at step "
+                "boundaries (as fit/train_step do) before prefetching"
+            )
         self.ckpt.save(
             self.step_num, self._ckpt_tree(),
             meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k,
@@ -441,6 +676,10 @@ class HybridTrainer:
                     f"export/re-prepare the tables explicitly"
                 )
         like = _drop_ef_if_absent(self._ckpt_tree(), self.ckpt)
+        if man is not None and not any(
+            k.split("/")[0] == "overflow" for k in man["leaves"]
+        ):
+            like.pop("overflow", None)   # pre-PR3 checkpoint: counter at 0
         step, tree = self.ckpt.restore_latest(like)
         if step is None:
             return False
@@ -453,4 +692,14 @@ class HybridTrainer:
             v_local=tree["v_local"], v_hat=tree["v_hat"],
             ef=tree.get("ef", self.opt_state.ef),
         )
+        # restore the cumulative overflow counter and re-baseline the
+        # interval snapshot so the first post-resume window reports only
+        # post-resume deltas (totals keep the whole-run baseline, matching
+        # the cache counters restored inside bstate)
+        self._overflow = jnp.asarray(tree.get("overflow", 0), jnp.int32)
+        self._metrics_prev = {
+            "overflow": int(self._overflow),
+            **self.engine.cache_counters(self.backend_state),
+        }
+        self._metrics_base_step = step
         return True

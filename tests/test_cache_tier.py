@@ -175,19 +175,33 @@ def test_factory_rejects_undersized_cache():
 
 
 def test_cached_trainer_history_metrics():
-    """fit() surfaces cache_hit_rate/evictions next to overflow_dropped."""
+    """fit() surfaces cache_hit_rate/evictions next to overflow_dropped —
+    PER LOGGING INTERVAL (so history shows the current window, not a
+    whole-run blend), with cumulative values under ``*_total`` keys."""
     tr = build_trainer("baidu-ctr", _cached_tcfg())
     hist = tr.fit(_ctr_gen(), 10)
     assert tr.step_num == 10
     for rec in hist:
         assert np.isfinite(rec["loss"])
         assert 0.0 <= rec["cache_hit_rate"] <= 1.0
+        assert 0.0 <= rec["cache_hit_rate_total"] <= 1.0
         assert rec["evictions"] >= 0
         assert rec["overflow_dropped"] == 0
+        assert rec["overflow_dropped_total"] == 0
     # a 4096-row cache over a 20k-row Zipf table must evict and still hit
     assert hist[-1]["evictions"] > 0
     assert hist[-1]["cache_hit_rate"] > 0.5
     assert hist[-1]["cache_bytes_h2d"] > 0
+    # the interval deltas tile the run exactly: their sums equal the totals
+    assert sum(r["evictions"] for r in hist) == hist[-1]["evictions_total"]
+    assert sum(r["cache_bytes_h2d"] for r in hist) == \
+        hist[-1]["cache_bytes_h2d_total"]
+    # warm-up is visible only in the per-interval view: the last window's
+    # hit rate beats the whole-run blend (which drags the cold start along)
+    assert hist[-1]["cache_hit_rate"] >= hist[-1]["cache_hit_rate_total"]
+    # sparse_metrics is a pure read unless the fit logger advances it:
+    # polling twice returns the same window, and fit's records stay whole
+    assert tr.sparse_metrics() == tr.sparse_metrics()
 
 
 def test_cached_checkpoint_resume_bitexact(tmp_path):

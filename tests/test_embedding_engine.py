@@ -4,6 +4,7 @@ property tested (these are the paper's Algorithm 1 lines 3/11/13)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # container without hypothesis: deterministic replay
@@ -24,7 +25,7 @@ from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
     dim=st.integers(1, 32),
     nnz=st.integers(1, 100),
     bags=st.integers(1, 40),
-    combiner=st.sampled_from(["sum", "mean"]),
+    combiner=st.sampled_from(["sum", "mean", "sqrtn"]),
     seed=st.integers(0, 999),
 )
 def test_bag_matches_dense_onehot(rows, dim, nnz, bags, combiner, seed):
@@ -38,11 +39,56 @@ def test_bag_matches_dense_onehot(rows, dim, nnz, bags, combiner, seed):
     onehot = np.zeros((bags, nnz), np.float32)
     onehot[np.asarray(seg), np.arange(nnz)] = np.asarray(w)
     expect = onehot @ (np.asarray(table)[np.asarray(ids)])
-    if combiner == "mean":
+    if combiner in ("mean", "sqrtn"):
         cnt = np.zeros(bags, np.float32)
         np.add.at(cnt, np.asarray(seg), 1.0)
-        expect = expect / np.maximum(cnt, 1.0)[:, None]
+        denom = np.maximum(cnt, 1.0)
+        if combiner == "sqrtn":
+            denom = np.sqrt(denom)
+        expect = expect / denom[:, None]
     np.testing.assert_allclose(np.asarray(out), expect, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(4, 100),
+    dim=st.integers(1, 16),
+    nnz=st.integers(1, 80),
+    bags=st.integers(1, 20),
+    combiner=st.sampled_from(["sum", "mean", "sqrtn"]),
+    seed=st.integers(0, 999),
+)
+def test_bag_from_working_matches_embedding_bag(rows, dim, nnz, bags,
+                                                combiner, seed):
+    """The working-set bag lookup must agree with ``embedding_bag`` for ALL
+    supported combiners (the sqrtn branch used to silently fall through to
+    sum)."""
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((rows, dim)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, rows, nnz), jnp.int32)
+    seg = jnp.asarray(rng.integers(0, bags, nnz), jnp.int32)
+    w = jnp.asarray(rng.random(nnz), jnp.float32)
+    uids, inv = pull_working_set(ids, capacity=nnz)
+    working = jnp.take(table, uids, axis=0)
+    out_ws = EmbeddingEngine.bag_from_working(
+        working, inv, seg, bags, weights=w, combiner=combiner
+    )
+    out_ref = embedding_bag(table, ids, seg, bags, weights=w,
+                            combiner=combiner)
+    np.testing.assert_allclose(np.asarray(out_ws), np.asarray(out_ref),
+                               atol=1e-6)
+
+
+def test_unknown_combiner_raises():
+    """Unknown combiners are an error in BOTH lookup paths — never a silent
+    fall-through to sum."""
+    table = jnp.zeros((4, 2), jnp.float32)
+    ids = jnp.zeros((3,), jnp.int32)
+    seg = jnp.zeros((3,), jnp.int32)
+    with pytest.raises(ValueError, match="combiner"):
+        embedding_bag(table, ids, seg, 2, combiner="max")
+    with pytest.raises(ValueError, match="combiner"):
+        EmbeddingEngine.bag_from_working(table, ids, seg, 2, combiner="max")
 
 
 @settings(max_examples=30, deadline=None)

@@ -1,0 +1,161 @@
+"""Double-buffered pull prefetch (paper Fig. 5 pipeline).
+
+Acceptance properties:
+  - prefetched ``fit`` is BIT-identical to synchronous ``fit`` for all three
+    placements (dense params, tables, accumulator, backend state, and every
+    logged history record except wall time),
+  - checkpoints taken during a prefetched run resume bit-exactly (and never
+    capture an in-flight pull — ``save`` mid-flight is a loud error),
+  - the one-deep pipeline is loud about misuse: prefetching or training a
+    different batch than the one in flight raises,
+  - online predict-then-train works mid-flight with identical predictions,
+  - DenseTrainer rejects ``prefetch=True`` (no pull stage to overlap).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.kstep import KStepConfig
+from repro.core.sparse_optim import SparseAdagradConfig
+from repro.data import synthetic as S
+from repro.runtime.factory import build_trainer
+from repro.runtime.trainer import TrainerConfig
+
+ROWS = 20_000
+
+
+def _tcfg(placement, prefetch, ckpt_dir=None):
+    return TrainerConfig(
+        n_pod=2, kstep=KStepConfig(lr=1e-3, k=5, b1=0.0),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        placement=placement, capacity=4096,
+        cache_rows=4096 if placement == "cached" else None,
+        prefetch=prefetch, log_every=3,
+        ckpt_dir=ckpt_dir, ckpt_every=6, ckpt_async=False,
+    )
+
+
+def _batches(n, seed=9):
+    gen = S.ctr_batches(seed=seed, batch=256, rows=ROWS, n_fields=8, nnz=20,
+                        zipf_a=1.05)
+    return [next(gen) for _ in range(n)]
+
+
+def _state_leaves(tr):
+    return [np.asarray(x) for x in jax.tree.leaves(
+        (tr.dense, tr.tables, tr.sparse_state.accum, tr.backend_state)
+    )]
+
+
+@pytest.mark.parametrize("placement", ["gather", "routed", "cached"])
+def test_prefetched_fit_bit_identical(placement):
+    """Prefetch changes WHEN the pull is dispatched, never WHAT it computes:
+    the pull of batch t+1 commutes with the push of batch t except through
+    the table/accum/state hand-off, which the commit protocol serializes."""
+    batches = _batches(12)
+    t_sync = build_trainer("baidu-ctr", _tcfg(placement, prefetch=False))
+    h_sync = t_sync.fit(iter(batches), 12)
+    t_pre = build_trainer("baidu-ctr", _tcfg(placement, prefetch=True))
+    h_pre = t_pre.fit(iter(batches), 12)
+
+    for a, b in zip(_state_leaves(t_sync), _state_leaves(t_pre)):
+        np.testing.assert_array_equal(a, b)
+    assert len(h_sync) == len(h_pre) > 0
+    for ra, rb in zip(h_sync, h_pre):
+        assert {k: v for k, v in ra.items() if k != "sec"} == \
+               {k: v for k, v in rb.items() if k != "sec"}
+
+
+def test_prefetch_checkpoint_resume_bitexact(tmp_path):
+    """Crash/resume mid-way through a prefetched cached-placement run:
+    checkpoints land at commit boundaries (never capturing the speculative
+    pull), so the resumed prefetched run matches an uninterrupted
+    SYNCHRONOUS run bit-for-bit."""
+    batches = _batches(18)
+    ref = build_trainer("baidu-ctr", _tcfg("cached", prefetch=False))
+    for b in batches:
+        ref.train_step(b)
+
+    d = str(tmp_path)
+    t_a = build_trainer("baidu-ctr", _tcfg("cached", prefetch=True, ckpt_dir=d))
+    t_a.fit(iter(batches[:12]), 12)    # ckpt_every=6 -> ckpts at 6 and 12
+    del t_a  # crash after step 12
+
+    t_b = build_trainer("baidu-ctr", _tcfg("cached", prefetch=True, ckpt_dir=d))
+    assert t_b.resume() and t_b.step_num == 12
+    t_b.fit(iter(batches[12:]), 6)
+
+    for a, b_ in zip(_state_leaves(ref), _state_leaves(t_b)):
+        np.testing.assert_array_equal(a, b_)
+
+
+def test_prefetch_pipeline_misuse_is_loud():
+    """The one-deep pipeline never silently trains on the wrong batch, and
+    never checkpoints a speculative pull."""
+    tr = build_trainer("baidu-ctr", _tcfg("gather", prefetch=True))
+    b1, b2 = _batches(2)
+    assert tr.prefetch(b1) is True
+    assert tr.prefetch(b1) is True          # idempotent for the same batch
+    with pytest.raises(RuntimeError, match="different batch"):
+        tr.prefetch(b2)
+    with pytest.raises(RuntimeError, match="in flight"):
+        tr.save()
+    with pytest.raises(RuntimeError, match="different batch"):
+        tr.train_step(b2)
+    # a caught misuse error must not shift the step/merge/ckpt cadence
+    assert tr.step_num == 0
+    tr.train_step(b1)                       # the right batch commits the pull
+    assert tr._prefetcher.pending is None
+    tr.train_step(b2)                       # cold start: pulls synchronously
+    assert tr.step_num == 2
+
+
+def test_predict_mid_flight_matches_sync():
+    """The launcher's online predict-then-train protocol: predictions read
+    the in-flight pull's pass-through state and must match the synchronous
+    run exactly (a pull moves rows coherently; only push changes values)."""
+    batches = _batches(6)
+    t_sync = build_trainer("baidu-ctr", _tcfg("cached", prefetch=False))
+    t_pre = build_trainer("baidu-ctr", _tcfg("cached", prefetch=True))
+    for b in batches:
+        p_sync = t_sync.predict(b)
+        t_sync.train_step(b)
+        t_pre.prefetch(b)
+        p_pre = t_pre.predict(b)            # pull for b is in flight here
+        t_pre.train_step(b)
+        np.testing.assert_array_equal(p_sync, p_pre)
+
+
+def test_train_step_prefetched_manual_loop():
+    """The manual-loop convenience wrapper pipelines like fit does."""
+    batches = _batches(6)
+    t_sync = build_trainer("baidu-ctr", _tcfg("gather", prefetch=False))
+    for b in batches:
+        t_sync.train_step(b)
+    t_pre = build_trainer("baidu-ctr", _tcfg("gather", prefetch=True))
+    for i, b in enumerate(batches):
+        nxt = batches[i + 1] if i + 1 < len(batches) else None
+        t_pre.train_step_prefetched(b, nxt)
+    assert t_pre._prefetcher.pending is None
+    for a, b_ in zip(_state_leaves(t_sync), _state_leaves(t_pre)):
+        np.testing.assert_array_equal(a, b_)
+
+
+def test_hot_path_returns_device_values():
+    """The sync-stall fix: train_step must not block the host — loss comes
+    back as a device array, the overflow counter accumulates on-device and
+    materializes only through the property/metrics accessors."""
+    tr = build_trainer("baidu-ctr", _tcfg("gather", prefetch=False))
+    (b,) = _batches(1)
+    loss = tr.train_step(b)
+    assert isinstance(loss, jax.Array)
+    assert isinstance(tr._overflow, jax.Array)
+    assert isinstance(tr.overflow_dropped, int) and tr.overflow_dropped == 0
+
+
+def test_dense_trainer_rejects_prefetch():
+    with pytest.raises(ValueError, match="prefetch"):
+        build_trainer("qwen3-14b", TrainerConfig(
+            n_pod=2, kstep=KStepConfig(lr=1e-3, k=2, b1=0.9), prefetch=True,
+        ))

@@ -166,7 +166,8 @@ def test_suggest_capacity_from_overflow():
     assert clean.overflow_dropped == 0
     assert clean.suggest_capacity() == clean.engine.capacity
 
-    # synthetic history: 300 drops over 2 steps at capacity 8192
+    # synthetic history (PER-INTERVAL records, as sparse_metrics emits):
+    # 300 drops in the 2-step window -> 150/step
     # -> needs >= 8192 + 1.25 * 150 -> next pow2 = 16384
     hist = [{"step": 2, "overflow_dropped": 300}]
     assert clean.suggest_capacity(history=hist) == 16384
@@ -197,6 +198,105 @@ def test_dense_trainer_lm_learns_and_resumes(tmp_path):
     assert losses[-1] < losses[0] - 1.0
     tr2 = DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p, tc)
     assert tr2.resume() and tr2.step_num == 40
+
+
+def test_overflow_counter_survives_resume(tmp_path):
+    """The cumulative overflow counter is training state: it rides the
+    checkpoint so post-resume ``*_total`` metrics share one baseline with
+    the cache counters (which live inside the checkpointed bstate)."""
+    from repro.runtime.factory import build_trainer
+    tcfg = TrainerConfig(
+        n_pod=1, kstep=KStepConfig(lr=1e-3, k=1, b1=0.0),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        capacity=64, ckpt_dir=str(tmp_path), ckpt_every=4, ckpt_async=False,
+    )
+    tr = build_trainer("baidu-ctr", tcfg)
+    gen = S.ctr_batches(seed=1, batch=256, rows=20000, n_fields=8, nnz=20)
+    for _ in range(4):
+        tr.train_step(next(gen))
+    assert tr.overflow_dropped > 0
+    tr2 = build_trainer("baidu-ctr", tcfg)
+    assert tr2.resume() and tr2.step_num == 4
+    assert tr2.overflow_dropped == tr.overflow_dropped
+    # the first post-resume interval reports only post-resume drops
+    m = tr2.sparse_metrics()
+    assert m["overflow_dropped"] == 0
+    assert m["overflow_dropped_total"] == tr.overflow_dropped
+
+
+def _lm_cfg():
+    return T.TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                               d_ff=128, vocab=64, dtype=jnp.float32,
+                               moe_group_size=64)
+
+
+def test_dense_merge_delay_converges():
+    """merge_delay>0 (async DCN-hiding merges): the delayed application
+    x <- merged + (x_now - x_snapshot) must still learn on the
+    quickstart-scale smoke config and track the synchronous-merge loss."""
+    cfg = _lm_cfg()
+    p = T.init_params(jax.random.key(1), cfg)
+
+    def run(delay):
+        tc = TrainerConfig(n_pod=4, kstep=KStepConfig(lr=2e-3, k=10, b1=0.9),
+                           merge_delay=delay)
+        tr = DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p, tc)
+        gen = S.lm_batches(seed=0, batch=16, seq_len=32, vocab=64)
+        return tr, [float(tr.train_step(next(gen))) for _ in range(60)]
+
+    tr0, l0 = run(0)
+    tr2, l2 = run(2)
+    assert l2[-1] < l2[0] - 1.0, "delayed merges must still converge"
+    assert abs(l2[-1] - l0[-1]) < 0.5, (l0[-1], l2[-1])
+    # the pipeline reached steady state: exactly `delay` merges in flight
+    assert len(tr2._pending_merges) == 2
+    assert len(tr0._pending_merges) == 0
+
+
+def test_dense_merge_delay_resumes(tmp_path):
+    """The in-flight delayed-merge queue is not checkpointed; resume starts
+    with an empty queue and keeps training."""
+    cfg = _lm_cfg()
+    p = T.init_params(jax.random.key(1), cfg)
+    tc = TrainerConfig(n_pod=2, kstep=KStepConfig(lr=2e-3, k=5, b1=0.9),
+                       merge_delay=1, ckpt_dir=str(tmp_path), ckpt_every=20,
+                       ckpt_async=False)
+    tr = DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p, tc)
+    gen = S.lm_batches(seed=0, batch=16, seq_len=32, vocab=64)
+    for _ in range(20):
+        tr.train_step(next(gen))
+    tr2 = DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p, tc)
+    assert tr2.resume() and tr2.step_num == 20
+    assert len(tr2._pending_merges) == 0
+    assert np.isfinite(float(tr2.train_step(next(gen))))
+
+
+def test_dead_knobs_rejected_loudly():
+    """The no-silent-config contract: documented knobs a trainer cannot
+    honor raise at construction instead of being ignored."""
+    from repro.runtime.factory import build_trainer
+
+    # HybridTrainer has no delayed dense merge (sparse syncs every step)
+    with pytest.raises(ValueError, match="merge_delay"):
+        build_trainer("baidu-ctr", TrainerConfig(n_pod=1, merge_delay=1))
+    # merge_quorum < 1.0 has no failure detector behind it anywhere yet
+    with pytest.raises(NotImplementedError, match="merge_quorum"):
+        build_trainer("baidu-ctr", TrainerConfig(n_pod=1, merge_quorum=0.5))
+    cfg = _lm_cfg()
+    p = T.init_params(jax.random.key(1), cfg)
+    with pytest.raises(NotImplementedError, match="merge_quorum"):
+        DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p,
+                     TrainerConfig(n_pod=2, merge_quorum=0.75))
+    # int8_ef's error feedback requires the fused merge path
+    with pytest.raises(NotImplementedError, match="int8_ef"):
+        DenseTrainer(
+            lambda pp, bb: T.loss_fn(pp, bb, cfg), p,
+            TrainerConfig(n_pod=2, merge_delay=1,
+                          kstep=KStepConfig(merge="int8_ef")),
+        )
+    with pytest.raises(ValueError, match="merge_delay"):
+        DenseTrainer(lambda pp, bb: T.loss_fn(pp, bb, cfg), p,
+                     TrainerConfig(n_pod=2, merge_delay=-1))
 
 
 def test_merge_quorum_subset_average():
