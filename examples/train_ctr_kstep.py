@@ -8,13 +8,17 @@ input pipeline, checkpoint/restart.
 ~100M params: 1.5M-row x 64-d table (96M) + field-attention tower (~4M).
 Reports the paper's Fig. 9/10 quantities at laptop scale: online AUC and
 the cross-pod communication amortization.  ``--placement routed`` swaps the
-gather path for the explicit all-to-all PS exchange.
+gather path for the explicit all-to-all PS exchange, ``--placement cached``
+runs the hierarchical host/device cache tier (``--cache-rows`` sizes it),
+and ``--prefetch`` overlaps each batch's working-set pull with the previous
+step.  The training loop itself is the shared online predict-then-train
+loop (``repro.runtime.online.fit_online``) — the same one the launcher
+runs for every recsys arch.
 """
 
 import argparse
 import os
 import tempfile
-import time
 
 import numpy as np
 
@@ -24,7 +28,7 @@ from repro.data import synthetic as S
 from repro.data.pipeline import PrefetchPipeline
 from repro.models import recsys as R
 from repro.runtime.factory import build_trainer
-from repro.runtime.metrics import StreamingAUC
+from repro.runtime.online import fit_online
 from repro.runtime.trainer import TrainerConfig
 
 
@@ -37,7 +41,10 @@ def main():
     ap.add_argument("--k", type=int, default=20)
     ap.add_argument("--merge", default="two_phase",
                     choices=["flat", "two_phase", "bf16", "int8_ef"])
-    ap.add_argument("--placement", default="gather", choices=["gather", "routed"])
+    ap.add_argument("--placement", default="gather",
+                    choices=["gather", "routed", "cached"])
+    ap.add_argument("--cache-rows", type=int, default=0)
+    ap.add_argument("--prefetch", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--resume", action="store_true")
     args = ap.parse_args()
@@ -56,6 +63,7 @@ def main():
             kstep=KStepConfig(lr=1e-3, k=args.k, b1=0.0, merge=args.merge),
             sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
             placement=args.placement, capacity=1 << 16,
+            cache_rows=args.cache_rows or None, prefetch=args.prefetch,
             ckpt_dir=ckpt_dir, ckpt_every=100, ckpt_async=True,
         ),
         model_cfg=cfg,
@@ -66,24 +74,13 @@ def main():
     src = S.ctr_batches(seed=1, batch=args.batch, rows=cfg.rows,
                         n_fields=cfg.n_fields, nnz=cfg.nnz_per_instance)
     pipe = PrefetchPipeline(src, depth=2)
-    meter = StreamingAUC(window=30)
-    t0 = time.perf_counter()
-    for i, b in enumerate(pipe):
-        if tr.step_num + 1 >= args.steps and i >= args.steps:
-            break
-        meter.update(b["label"], tr.predict(b))
-        l = tr.train_step(b)
-        if tr.step_num % 50 == 0:
-            dt = time.perf_counter() - t0
-            print(f"step {tr.step_num:5d}  loss {l:.4f}  AUC {meter.value():.4f}  "
-                  f"{tr.step_num / max(dt, 1e-9):.1f} steps/s  "
-                  f"(merges every {args.k} steps over {args.n_pod} pods)")
-        if tr.step_num >= args.steps:
-            break
+    # the one canonical online predict-then-train loop (shared with the
+    # launcher and the other recsys archs) — no hand-rolled step loop here
+    steps = max(args.steps - tr.step_num, 0)
+    _, online_auc = fit_online(tr, iter(pipe), steps, window=30, log=print)
     pipe.close()
-    if tr.ckpt:
-        tr.ckpt.wait()
-    print(f"\ndone: step {tr.step_num}, online AUC {meter.value():.4f}, "
+    auc_s = f"{online_auc:.4f}" if online_auc is not None else "n/a"
+    print(f"\ndone: step {tr.step_num}, online AUC {auc_s}, "
           f"overflow_dropped {tr.overflow_dropped}, "
           f"input stall {pipe.wait_seconds:.1f}s vs staging {pipe.read_seconds:.1f}s")
 

@@ -12,7 +12,9 @@ Design (1000-node deployment notes):
 - Retention: keep-last-N GC; ``latest_step`` scans for the newest complete
   manifest, skipping torn ``.tmp`` dirs (crash-consistent resume).
 - Async: ``CheckpointManager(async_save=True)`` snapshots to host then writes
-  in a background thread so the device step is never blocked on disk.
+  in a background thread so the device step is never blocked on disk; a
+  failed background write is never silent — it re-raises from ``wait()`` or
+  from the next ``save()``.
 """
 
 from __future__ import annotations
@@ -42,17 +44,39 @@ def _flatten_with_names(tree: Pytree):
     return out, treedef
 
 
+def _fsync_path(path: str):
+    """fsync a file or directory by path (directory fsync persists the
+    entry names — the other half of the rename-atomicity recipe)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_tree(directory: str, step: int, tree: Pytree, meta: Optional[Dict] = None):
-    """Atomically persist ``tree`` for ``step``. Returns the final dir."""
+    """Atomically persist ``tree`` for ``step``. Returns the final dir.
+
+    Crash-atomicity recipe: write arrays + manifest into ``step_X.tmp/``,
+    fsync BOTH files and the tmp directory, then rename into place and
+    fsync the parent.  Overwriting an existing ``step_X`` renames it aside
+    (``step_X.old`` — invisible to ``latest_step``) instead of rmtree'ing
+    it first, so a kill between the two renames still leaves every earlier
+    checkpoint complete and restorable; the aside copy is deleted only
+    after the replacement is in place.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    tmp, aside = final + ".tmp", final + ".old"
+    for stale in (tmp, aside):   # leftovers of a previously crashed save
+        if os.path.exists(stale):
+            shutil.rmtree(stale)
     os.makedirs(tmp)
     named, _ = _flatten_with_names(tree)
     arrays = {k: np.asarray(v) for k, v in named.items()}
-    np.savez(os.path.join(tmp, "arrays_proc0.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays_proc0.npz")
+    np.savez(arrays_path, **arrays)
+    _fsync_path(arrays_path)   # array data durable BEFORE the manifest
     manifest = {
         "step": int(step),
         "time": time.time(),
@@ -63,9 +87,13 @@ def save_tree(directory: str, step: int, tree: Pytree, meta: Optional[Dict] = No
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_path(tmp)           # both directory entries durable
     if os.path.exists(final):
-        shutil.rmtree(final)
+        os.rename(final, aside)
     os.rename(tmp, final)
+    _fsync_path(directory)     # the renames durable
+    if os.path.exists(aside):
+        shutil.rmtree(aside)
     return final
 
 
@@ -133,6 +161,7 @@ class CheckpointManager:
         self.save_every = save_every
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     def should_save(self, step: int) -> bool:
@@ -142,31 +171,55 @@ class CheckpointManager:
         save_tree(self.directory, step, host_tree, meta)
         self._gc()
 
+    def _write_async(self, step: int, host_tree, meta):
+        # A failed background save must not be silent: capture the
+        # exception so wait() / the next save() re-raises it on the caller.
+        try:
+            self._write(step, host_tree, meta)
+        except BaseException as e:   # noqa: BLE001 — re-raised from wait()
+            self._exc = e
+
     def save(self, step: int, tree: Pytree, meta: Optional[Dict] = None, block: bool = False):
         # Snapshot to host memory first so devices are released immediately.
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        # drain the in-flight background writer first — EVERY path: a
+        # blocking save must not race the previous async one, and a pending
+        # failure is raised here instead of being deferred
+        self.wait()
         if self.async_save and not block:
-            self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, meta), daemon=True
+                target=self._write_async, args=(step, host_tree, meta), daemon=True
             )
             self._thread.start()
         else:
             self._write(step, host_tree, meta)
 
     def wait(self):
+        """Block until the in-flight background save lands; re-raise its
+        failure (once) — a crashed writer never fails silently."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def _gc(self):
+        names = os.listdir(self.directory)
         steps = sorted(
             int(m.group(1))
-            for name in os.listdir(self.directory)
+            for name in names
             if (m := re.fullmatch(r"step_(\d+)", name))
         )
         for s in steps[: -self.keep_last] if self.keep_last > 0 else []:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"), ignore_errors=True)
+        # wreckage of crashed/failed saves: this manager's writes are
+        # serialized (save() drains the writer first), so any .tmp/.old
+        # dir still present when _gc runs is dead — sweep it, or a failed
+        # async save leaks a checkpoint-sized directory forever
+        for name in names:
+            if re.fullmatch(r"step_\d+\.(tmp|old)", name):
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
 
     def restore_latest(self, like: Pytree, shardings=None):
         s = latest_step(self.directory)

@@ -47,7 +47,7 @@ path in ``repro.kernels.embedding_bag``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -98,13 +98,27 @@ def embedding_bag(
 # ---------------------------------------------------------------- the engine
 @dataclasses.dataclass(frozen=True)
 class TableSpec:
+    """Shape + batch wiring of one embedding table.
+
+    ``id_field`` names the batch key(s) holding this table's ids:
+      - ``None``: the table name itself is the batch key,
+      - a string: that batch key (any trailing shape, flattened),
+      - a tuple of strings: several batch keys feeding ONE table (e.g. DIN's
+        history + target item ids).  Each field is flattened per instance
+        and the fields are concatenated along the per-instance axis, so the
+        flat id vector stays instance-major — the trainer relies on that to
+        slice the pull's inverse map into per-pod batch shards.
+    ``id_col`` selects one column of the (batch, n) id tensor — the DLRM
+    regime where 26 single-hot tables share one ``sparse_ids`` field.
+    """
+
     name: str
     rows: int
     dim: int
     combiner: str = "sum"
     dtype: jnp.dtype = jnp.float32
-    id_field: Optional[str] = None   # batch key holding this table's ids
-                                     # (None -> the table name itself)
+    id_field: Optional[Union[str, Sequence[str]]] = None
+    id_col: Optional[int] = None
 
 
 class EmbeddingEngine:
@@ -179,11 +193,28 @@ class EmbeddingEngine:
 
     # ------------------------------------------------------------ pull/push
     def ids_from_batch(self, batch) -> Dict[str, jnp.ndarray]:
-        """Extract each table's flattened id tensor from a batch dict."""
-        return {
-            name: batch[spec.id_field or name].reshape(-1)
-            for name, spec in self.specs.items()
-        }
+        """Extract each table's flattened id tensor from a batch dict.
+
+        Multi-field tables (``id_field`` is a tuple) concatenate their
+        fields along the per-instance axis before flattening, so the flat
+        ids — and therefore the pull's inverse map — stay instance-major
+        and remain sliceable into per-pod shards.
+        """
+        out = {}
+        for name, spec in self.specs.items():
+            field = spec.id_field or name
+            if isinstance(field, (tuple, list)):
+                parts = [
+                    jnp.reshape(batch[f], (batch[f].shape[0], -1))
+                    for f in field
+                ]
+                ids = jnp.concatenate(parts, axis=1)
+            else:
+                ids = batch[field]
+                if spec.id_col is not None:
+                    ids = ids[..., spec.id_col]
+            out[name] = ids.reshape(-1)
+        return out
 
     def pull(self, tables, accum, states, flat_ids: Dict[str, jnp.ndarray]):
         """Algorithm 1 line 3: one working-set pull per table.
@@ -276,12 +307,19 @@ class EmbeddingEngine:
 
     @staticmethod
     def derive_cache_stats(counters: Dict[str, float]) -> Dict[str, float]:
-        """Counter totals/deltas -> the reported stat dict ({} for {})."""
+        """Counter totals/deltas -> the reported stat dict ({} for {}).
+
+        An interval with zero lookups (idle / predict-only window) reports
+        ``cache_hit_rate = 0.0`` — not the fake perfect 1.0 that
+        ``1 - 0/max(0, 1)`` would produce in fit history."""
         if not counters:
             return {}
+        lookups = counters["lookups"]
+        hit_rate = (
+            0.0 if lookups <= 0.0 else 1.0 - counters["fetched"] / lookups
+        )
         return {
-            "cache_hit_rate": 1.0
-            - counters["fetched"] / max(counters["lookups"], 1.0),
+            "cache_hit_rate": hit_rate,
             "evictions": int(counters["evictions"]),
             "cache_bytes_h2d": counters["bytes_h2d"],
             "cache_bytes_d2h": counters["bytes_d2h"],

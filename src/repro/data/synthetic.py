@@ -135,6 +135,31 @@ def two_tower_batches(
         }
 
 
+def recsys_batches(
+    model_cfg, batch: int, seed: int = 1, worker: int = 0,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """The right synthetic stream for a recsys model config (dispatched on
+    config type — the launcher/factory counterpart of ``_recsys_wiring``)."""
+    from repro.models import recsys as R
+
+    if isinstance(model_cfg, R.CTRConfig):
+        return ctr_batches(seed=seed, batch=batch, rows=model_cfg.rows,
+                           n_fields=model_cfg.n_fields,
+                           nnz=model_cfg.nnz_per_instance, worker=worker)
+    if isinstance(model_cfg, R.DLRMConfig):
+        return dlrm_batches(seed=seed, batch=batch, rows=model_cfg.rows,
+                            n_dense=model_cfg.n_dense, worker=worker)
+    if isinstance(model_cfg, R.DINConfig):
+        return din_batches(seed=seed, batch=batch, vocab=model_cfg.item_vocab,
+                           seq_len=model_cfg.seq_len, worker=worker)
+    if isinstance(model_cfg, R.TwoTowerConfig):
+        return two_tower_batches(seed=seed, batch=batch,
+                                 vocab=model_cfg.item_vocab,
+                                 hist_len=model_cfg.user_hist_len,
+                                 worker=worker)
+    raise TypeError(f"no synthetic stream for {type(model_cfg).__name__}")
+
+
 # -------------------------------------------------------------------- LM
 def lm_batches(
     seed: int, batch: int, seq_len: int, vocab: int, worker: int = 0,

@@ -5,7 +5,11 @@
 
 Model construction is delegated to ``repro.runtime.factory.build_trainer``
 (driven by the ``repro.configs`` registry); the launcher only wires flags,
-data streams, and fault tolerance.
+data streams, and fault tolerance.  Every registered arch trains here —
+lm and gnn families under ``DenseTrainer``, and ALL recsys archs
+(``baidu-ctr``, ``dlrm-mlperf``, ``din``, ``dien``,
+``two-tower-retrieval``) under ``HybridTrainer`` through the shared online
+predict-then-train loop (``repro.runtime.online.fit_online``).
 
 Sparse placement (``--placement``): how embedding rows move per batch,
 behind the ``EmbeddingBackend`` contract
@@ -53,7 +57,6 @@ same command line (elastic: the mesh may differ across restarts).
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -112,7 +115,7 @@ def main():
     from repro.core.sparse_optim import SparseAdagradConfig
     from repro.data import synthetic as S
     from repro.runtime.factory import build_trainer
-    from repro.runtime.metrics import StreamingAUC
+    from repro.runtime.online import fit_online
     from repro.runtime.trainer import TrainerConfig
 
     spec = configs.get(args.arch)
@@ -160,40 +163,28 @@ def main():
               f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
         return
 
-    # recsys family — hybrid trainer through the factory
-    if args.arch == "baidu-ctr":
-        tr = build_trainer(args.arch, tcfg, smoke=args.smoke)
-        if args.ckpt_dir and tr.resume():
-            print(f"resumed at step {tr.step_num}")
-        gen = S.ctr_batches(seed=1, batch=args.batch, rows=cfg.rows,
-                            n_fields=cfg.n_fields, nnz=cfg.nnz_per_instance)
-        meter = StreamingAUC(window=20)
-        loss = 0.0
-        for _ in range(args.steps):
-            b = next(gen)
-            # --prefetch: dispatch b's pull now (no-op otherwise) so it
-            # overlaps the previous step still executing on the device;
-            # predict reads the pull's pass-through state mid-flight.
-            tr.prefetch(b)
-            meter.update(b["label"], tr.predict(b))
-            loss = tr.train_step(b)
-        if tr.ckpt:
-            tr.ckpt.wait()   # async writer must land the final checkpoint
-        stats = tr.sparse_metrics()
-        cache = (
-            f"cache_hit_rate {stats['cache_hit_rate_total']:.3f} "
-            f"evictions {stats['evictions_total']} "
-            if "cache_hit_rate_total" in stats else ""
-        )
-        print(f"final loss {float(loss):.6f} online AUC {meter.value():.4f} "
-              f"placement {args.placement} prefetch {args.prefetch} "
-              f"overflow_dropped {tr.overflow_dropped} {cache}"
-              f"({tr.step_num / (time.perf_counter() - t0):.2f} steps/s)")
-        return
-
-    print(f"launcher training loop for {args.arch}: use examples/ drivers "
-          f"(dlrm/din/dien/two-tower smoke training is covered by tests)")
-    sys.exit(0)
+    # recsys family — hybrid trainer through the factory, every arch
+    # (baidu-ctr, dlrm-mlperf, din, dien, two-tower-retrieval): online
+    # predict-then-train where the stream carries labels, train-only where
+    # it doesn't (two-tower).  --prefetch dispatches each batch's pull
+    # before the predict/train pair so it overlaps the previous step.
+    tr = build_trainer(args.arch, tcfg, smoke=args.smoke)
+    if args.ckpt_dir and tr.resume():
+        print(f"resumed at step {tr.step_num}")
+    gen = S.recsys_batches(cfg, batch=args.batch, seed=1)
+    hist, online_auc = fit_online(tr, gen, args.steps, window=20, log=print)
+    loss = hist[-1]["loss"] if hist else float("nan")
+    stats = tr.sparse_metrics()
+    cache = (
+        f"cache_hit_rate {stats['cache_hit_rate_total']:.3f} "
+        f"evictions {stats['evictions_total']} "
+        if "cache_hit_rate_total" in stats else ""
+    )
+    auc_s = f"online AUC {online_auc:.4f} " if online_auc is not None else ""
+    print(f"final loss {float(loss):.6f} {auc_s}"
+          f"placement {args.placement} prefetch {args.prefetch} "
+          f"overflow_dropped {tr.overflow_dropped} {cache}"
+          f"({args.steps / (time.perf_counter() - t0):.2f} steps/s)")
 
 
 if __name__ == "__main__":

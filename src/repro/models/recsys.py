@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.embedding_engine import TableSpec, embedding_bag
+from repro.core.embedding_engine import EmbeddingEngine, TableSpec, embedding_bag
 from repro.models.common import (
     bce_with_logits,
     he_init,
@@ -57,8 +57,13 @@ class DLRMConfig:
 
 
 def dlrm_table_specs(cfg: DLRMConfig) -> Dict[str, TableSpec]:
+    # 26 single-hot tables share one (B, 26) ``sparse_ids`` batch field:
+    # table i reads column i (TableSpec.id_col).
     return {
-        f"emb_{i:02d}": TableSpec(f"emb_{i:02d}", rows=cfg.rows[i], dim=cfg.embed_dim)
+        f"emb_{i:02d}": TableSpec(
+            f"emb_{i:02d}", rows=cfg.rows[i], dim=cfg.embed_dim,
+            id_field="sparse_ids", id_col=i,
+        )
         for i in range(cfg.n_sparse)
     }
 
@@ -95,6 +100,34 @@ def dlrm_forward_from_emb(dense, emb, batch, cfg: DLRMConfig) -> jnp.ndarray:
     return mlp_apply(dense["top"], top_in, act=jax.nn.relu)[:, 0]
 
 
+def dlrm_embed_from_workings(cfg: DLRMConfig):
+    """HybridTrainer embed adapter: the 26 single-hot lookups routed through
+    each table's pulled working set (``invs["emb_XX"]`` has shape (B,) — one
+    row per instance), so grads land on the compact pulled rows only."""
+
+    def embed(workings, invs, batch):
+        embs = [
+            jnp.take(workings[f"emb_{i:02d}"], invs[f"emb_{i:02d}"], axis=0)
+            for i in range(cfg.n_sparse)
+        ]
+        return jnp.stack(embs, axis=1)                      # (B, 26, D)
+
+    return embed
+
+
+def dlrm_hybrid_loss(cfg: DLRMConfig):
+    """HybridTrainer loss adapter: BCE over the dot-interaction tower
+    (``predict=True`` returns sigmoid click scores)."""
+
+    def loss(dense, emb, batch, predict=False):
+        logits = dlrm_forward_from_emb(dense, emb, batch, cfg)
+        if predict:
+            return jax.nn.sigmoid(logits)
+        return pointwise_loss(logits, batch["label"])
+
+    return loss
+
+
 # ==================================================================== DIN/DIEN
 @dataclasses.dataclass(frozen=True)
 class DINConfig:
@@ -109,7 +142,14 @@ class DINConfig:
 
 
 def din_table_specs(cfg: DINConfig) -> Dict[str, TableSpec]:
-    return {"items": TableSpec("items", rows=cfg.item_vocab, dim=cfg.embed_dim)}
+    # history + target ids feed ONE item table: the pull concatenates the
+    # fields per instance into (B, seq_len + 1) before deduplicating.
+    return {
+        "items": TableSpec(
+            "items", rows=cfg.item_vocab, dim=cfg.embed_dim,
+            id_field=("hist_ids", "target_id"),
+        )
+    }
 
 
 def din_init_dense(rng: jax.Array, cfg: DINConfig):
@@ -209,6 +249,36 @@ def din_forward_from_emb(dense, emb, batch, cfg: DINConfig) -> jnp.ndarray:
     return mlp_apply(dense["mlp"], rep, act=jax.nn.relu)[:, 0]
 
 
+def din_embed_from_workings(cfg: DINConfig):
+    """HybridTrainer embed adapter for DIN/DIEN: history + target ids feed
+    one item table (``din_table_specs`` concatenates the two fields per
+    instance), so ``invs["items"]`` reshapes to (B, seq_len + 1) — the first
+    ``seq_len`` columns are the history lookups, the last is the target."""
+    T = cfg.seq_len
+
+    def embed(workings, invs, batch):
+        B = batch["hist_ids"].shape[0]
+        inv = invs["items"].reshape(B, T + 1)
+        hist = jnp.take(workings["items"], inv[:, :T], axis=0)    # (B,T,d)
+        target = jnp.take(workings["items"], inv[:, T], axis=0)   # (B,d)
+        return {"hist": hist, "target": target}
+
+    return embed
+
+
+def din_hybrid_loss(cfg: DINConfig):
+    """HybridTrainer loss adapter: BCE over the (AU)GRU/attention tower
+    (``predict=True`` returns sigmoid click scores)."""
+
+    def loss(dense, emb, batch, predict=False):
+        logits = din_forward_from_emb(dense, emb, batch, cfg)
+        if predict:
+            return jax.nn.sigmoid(logits)
+        return pointwise_loss(logits, batch["label"])
+
+    return loss
+
+
 # ================================================================== two-tower
 @dataclasses.dataclass(frozen=True)
 class TwoTowerConfig:
@@ -225,7 +295,13 @@ class TwoTowerConfig:
 
 
 def two_tower_table_specs(cfg: TwoTowerConfig) -> Dict[str, TableSpec]:
-    return {"items": TableSpec("items", rows=cfg.item_vocab, dim=cfg.embed_dim)}
+    # user history + positive item share the item table, (B, hist_len + 1)
+    return {
+        "items": TableSpec(
+            "items", rows=cfg.item_vocab, dim=cfg.embed_dim,
+            id_field=("user_ids", "item_id"),
+        )
+    }
 
 
 def two_tower_init_dense(rng: jax.Array, cfg: TwoTowerConfig):
@@ -247,7 +323,11 @@ def two_tower_embed_batch(tables, batch, cfg: TwoTowerConfig):
 
 def _tower(params, x, dtype):
     y = mlp_apply(params, x.astype(dtype), act=jax.nn.relu)
-    return y / jnp.maximum(jnp.linalg.norm(y, axis=-1, keepdims=True), 1e-6)
+    # sqrt(max(|y|^2, eps^2)) == max(|y|, eps), but with a well-defined
+    # gradient at y == 0: jnp.linalg.norm's 0/0 grad would NaN-poison the
+    # push whenever a capacity-dropped id reads the all-zero drop row.
+    sq = jnp.sum(jnp.square(y), axis=-1, keepdims=True)
+    return y / jnp.sqrt(jnp.maximum(sq, 1e-12))
 
 
 def two_tower_forward_from_emb(dense, emb, batch, cfg: TwoTowerConfig):
@@ -290,6 +370,41 @@ def two_tower_score_candidates(dense, tables, user_emb_pooled, cand_ids, cfg: Tw
     return u @ v.T                                                   # (B, C)
 
 
+def two_tower_embed_from_workings(cfg: TwoTowerConfig):
+    """HybridTrainer embed adapter: user-history mean bag + positive item,
+    both served from the pulled item working set (``invs["items"]`` reshapes
+    to (B, hist_len + 1); see ``two_tower_table_specs``)."""
+    H = cfg.user_hist_len
+
+    def embed(workings, invs, batch):
+        B = batch["user_ids"].shape[0]
+        inv = invs["items"].reshape(B, H + 1)
+        seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), H)
+        user = EmbeddingEngine.bag_from_working(
+            workings["items"], inv[:, :H].reshape(-1), seg, num_bags=B,
+            weights=batch["user_mask"].reshape(-1), combiner="mean",
+        )
+        item = jnp.take(workings["items"], inv[:, H], axis=0)
+        return {"user": user, "item": item}
+
+    return embed
+
+
+def two_tower_hybrid_loss(cfg: TwoTowerConfig):
+    """HybridTrainer loss adapter: in-batch sampled softmax with logQ
+    correction; ``predict=True`` returns each instance's positive-item
+    retrieval score u·v (towers are L2-normalized, so scores are in
+    [-1, 1])."""
+
+    def loss(dense, emb, batch, predict=False):
+        if predict:
+            u, v = two_tower_forward_from_emb(dense, emb, batch, cfg)
+            return jnp.sum(u * v, axis=-1)
+        return two_tower_loss(dense, emb, batch, cfg)
+
+    return loss
+
+
 # ============================================================ paper CTR model
 @dataclasses.dataclass(frozen=True)
 class CTRConfig:
@@ -306,7 +421,11 @@ class CTRConfig:
 
 
 def ctr_table_specs(cfg: CTRConfig) -> Dict[str, TableSpec]:
-    return {"sparse": TableSpec("sparse", rows=cfg.rows, dim=cfg.embed_dim)}
+    return {
+        "sparse": TableSpec(
+            "sparse", rows=cfg.rows, dim=cfg.embed_dim, id_field="ids"
+        )
+    }
 
 
 def ctr_init_dense(rng: jax.Array, cfg: CTRConfig):

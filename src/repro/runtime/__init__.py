@@ -6,3 +6,4 @@ from repro.runtime.trainer import (  # noqa: F401
 )
 from repro.runtime.factory import build_trainer  # noqa: F401
 from repro.runtime.metrics import auc  # noqa: F401
+from repro.runtime.online import fit_online  # noqa: F401

@@ -11,51 +11,59 @@ construction:
 Family wiring:
   - ``lm``  -> DenseTrainer over ``repro.models.transformer``
   - ``gnn`` -> DenseTrainer over ``repro.models.gin``
-  - ``recsys`` (baidu-ctr) -> HybridTrainer: an ``EmbeddingEngine`` built
-    from ``ctr_table_specs`` with the backend selected by
-    ``TrainerConfig.placement`` ("gather" | "routed" | "cached" — the
-    cache tier sizes its device cache from ``TrainerConfig.cache_rows``),
-    and the canonical embed/loss adapters from ``repro.models.recsys``.
-    ``TrainerConfig.prefetch`` turns on the double-buffered pull prefetch
-    (any placement, bit-identical results); dense families reject it.
+  - ``recsys`` -> HybridTrainer for EVERY registered recsys arch —
+    ``baidu-ctr``, ``dlrm-mlperf``, ``din``, ``dien``, and
+    ``two-tower-retrieval``: an ``EmbeddingEngine`` built from the arch's
+    ``*_table_specs`` (single giant table, DLRM's 26 per-feature tables, or
+    the DIN/two-tower history+target split — see ``TableSpec.id_field``/
+    ``id_col``) with the backend selected by ``TrainerConfig.placement``
+    ("gather" | "routed" | "cached" — the cache tier sizes its device cache
+    from ``TrainerConfig.cache_rows``), plus the arch's canonical
+    ``*_embed_from_workings``/``*_hybrid_loss`` adapters from
+    ``repro.models.recsys``.  ``TrainerConfig.prefetch`` turns on the
+    double-buffered pull prefetch (any placement, bit-identical results);
+    dense families reject it.
 
 ``model_cfg`` overrides the registry's smoke/full config (used by examples
-that scale the table up or down); other recsys archs (dlrm/din/dien/
-two-tower) keep their example drivers until their working-set adapters are
-added (ROADMAP open item).
+that scale the table up or down).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional
 
 import jax
 
 from repro import configs
 from repro.core.embedding_backend import make_backend
-from repro.core.embedding_engine import EmbeddingEngine, TableSpec
+from repro.core.embedding_engine import EmbeddingEngine
 from repro.core.sparse_optim import SparseAdagrad
-from repro.runtime.trainer import DenseTrainer, HybridTrainer, TrainerConfig
+from repro.runtime.trainer import (
+    DenseTrainer,
+    HybridTrainer,
+    TrainerConfig,
+    next_pow2,
+)
 
-# Bounds the deduplicated ids of one global batch for CTR smoke shapes
-# (batch 1k x nnz 100 Zipf draws stay well under this).
+# Bounds the deduplicated ids of one global batch at smoke/example scales
+# (batch 1k x nnz 100 Zipf draws stay well under this); per-arch defaults
+# clamp it to the table size (a 200-row smoke table never needs a 16k pull).
 DEFAULT_CTR_CAPACITY = 1 << 14
 
 
-def build_ctr_engine(
-    model_cfg,
-    cfg: TrainerConfig,
-    mesh: Optional[jax.sharding.Mesh] = None,
-) -> EmbeddingEngine:
-    """EmbeddingEngine for the paper's CTR model, placement-selected."""
-    from repro.models import recsys as R
+def _default_capacity(max_rows: int) -> int:
+    return next_pow2(min(DEFAULT_CTR_CAPACITY, max_rows))
 
-    specs = {
-        name: dataclasses.replace(s, id_field="ids")
-        for name, s in R.ctr_table_specs(model_cfg).items()
-    }
-    capacity = cfg.capacity or DEFAULT_CTR_CAPACITY
+
+def _build_engine(
+    specs,
+    cfg: TrainerConfig,
+    mesh: Optional[jax.sharding.Mesh],
+) -> EmbeddingEngine:
+    """Placement-selected engine over ``specs`` (shared by all recsys archs)."""
+    capacity = cfg.capacity or _default_capacity(
+        max(s.rows for s in specs.values())
+    )
     kwargs = {}
     if cfg.placement == "cached":
         # default to the minimum feasible cache (one batch's working set);
@@ -73,6 +81,60 @@ def build_ctr_engine(
         capacity=capacity,
         optimizer=SparseAdagrad(cfg.sparse),
         backend=make_backend(cfg.placement, mesh=mesh, **kwargs),
+    )
+
+
+def build_ctr_engine(model_cfg, cfg, mesh=None) -> EmbeddingEngine:
+    """EmbeddingEngine for the paper's CTR model, placement-selected."""
+    from repro.models import recsys as R
+
+    return _build_engine(R.ctr_table_specs(model_cfg), cfg, mesh)
+
+
+def build_dlrm_engine(model_cfg, cfg, mesh=None) -> EmbeddingEngine:
+    """DLRM: 26 per-feature tables sharing the (B, 26) ``sparse_ids`` field."""
+    from repro.models import recsys as R
+
+    return _build_engine(R.dlrm_table_specs(model_cfg), cfg, mesh)
+
+
+def build_din_engine(model_cfg, cfg, mesh=None) -> EmbeddingEngine:
+    """DIN/DIEN: one item table fed by history + target ids."""
+    from repro.models import recsys as R
+
+    return _build_engine(R.din_table_specs(model_cfg), cfg, mesh)
+
+
+def build_two_tower_engine(model_cfg, cfg, mesh=None) -> EmbeddingEngine:
+    """Two-tower retrieval: one item table fed by user history + item ids."""
+    from repro.models import recsys as R
+
+    return _build_engine(R.two_tower_table_specs(model_cfg), cfg, mesh)
+
+
+def _recsys_wiring(mcfg):
+    """(init_dense, build_engine, embed_adapter, loss_adapter) for a recsys
+    model config — dispatched on the config type so ``model_cfg`` overrides
+    and dien (a DINConfig with ``gru_dim > 0``) route correctly."""
+    from repro.models import recsys as R
+
+    wiring = {
+        R.CTRConfig: (R.ctr_init_dense, build_ctr_engine,
+                      R.ctr_embed_from_workings, R.ctr_hybrid_loss),
+        R.DLRMConfig: (R.dlrm_init_dense, build_dlrm_engine,
+                       R.dlrm_embed_from_workings, R.dlrm_hybrid_loss),
+        R.DINConfig: (R.din_init_dense, build_din_engine,
+                      R.din_embed_from_workings, R.din_hybrid_loss),
+        R.TwoTowerConfig: (R.two_tower_init_dense, build_two_tower_engine,
+                           R.two_tower_embed_from_workings,
+                           R.two_tower_hybrid_loss),
+    }
+    for cls, w in wiring.items():
+        if isinstance(mcfg, cls):
+            return w
+    raise TypeError(
+        f"build_trainer: unknown recsys model config {type(mcfg).__name__} "
+        f"(expected one of {sorted(c.__name__ for c in wiring)})"
     )
 
 
@@ -105,20 +167,14 @@ def build_trainer(
         params = G.init_params(rng, mcfg)
         return DenseTrainer(lambda p, b: G.loss_fn(p, b, mcfg), params, cfg, mesh=mesh)
 
-    if arch == "baidu-ctr":
-        from repro.models import recsys as R
-
-        dense = R.ctr_init_dense(rng, mcfg)
-        engine = build_ctr_engine(mcfg, cfg, mesh=mesh)
+    if spec.family == "recsys":
+        init_dense, build_engine, embed_of, loss_of = _recsys_wiring(mcfg)
+        dense = init_dense(rng, mcfg)
+        engine = build_engine(mcfg, cfg, mesh=mesh)
         tables = engine.init(rng, scale=table_scale)
         return HybridTrainer(
-            dense, engine,
-            R.ctr_embed_from_workings(mcfg), R.ctr_hybrid_loss(mcfg),
+            dense, engine, embed_of(mcfg), loss_of(mcfg),
             cfg, mesh=mesh, tables=tables,
         )
 
-    raise NotImplementedError(
-        f"build_trainer: no working-set adapter for {arch!r} yet "
-        f"(supported: all lm/gnn archs + baidu-ctr; dlrm/din/dien/two-tower "
-        f"run through their example drivers)"
-    )
+    raise ValueError(f"build_trainer: unknown family {spec.family!r} for {arch!r}")

@@ -106,6 +106,15 @@ def _reject_dead_knobs(cfg: TrainerConfig, trainer: str, merge_delay_ok: bool):
         )
 
 
+def next_pow2(n) -> int:
+    """Smallest power of two >= n (powers of two keep routed shard
+    divisibility — shared by capacity defaults and autoscaling)."""
+    cap = 1
+    while cap < n:
+        cap <<= 1
+    return cap
+
+
 def pod_batch(batch: Dict[str, np.ndarray], n_pod: int) -> Dict[str, jnp.ndarray]:
     """Split a global batch into per-pod shards (leading pod dim)."""
     def f(x):
@@ -131,6 +140,19 @@ def _drop_ef_if_absent(like: dict, ckpt: CheckpointManager) -> dict:
     return like
 
 
+def history_record(trainer, loss, t0: float) -> dict:
+    """One fit-history record at a logging boundary — the single copy of
+    the record schema shared by ``fit`` and ``repro.runtime.online``:
+    step/loss/sec plus the trainer's PER-INTERVAL sparse metrics
+    (``advance=True``: recording moves the interval baseline forward)."""
+    rec = {"step": trainer.step_num, "loss": float(loss),
+           "sec": time.perf_counter() - t0}
+    sparse_metrics = getattr(trainer, "sparse_metrics", None)
+    if sparse_metrics is not None:
+        rec.update(sparse_metrics(advance=True))
+    return rec
+
+
 def _fit_loop(trainer, batches: Iterator, steps: int, eval_fn=None) -> list:
     """Shared fit(): train ``steps`` batches, log every ``log_every``.
 
@@ -153,14 +175,9 @@ def _fit_loop(trainer, batches: Iterator, steps: int, eval_fn=None) -> list:
         loss = trainer.train_step(b)
         b = next(batches) if i + 1 < steps else None
         if trainer.step_num % trainer.cfg.log_every == 0:
-            rec = {"step": trainer.step_num, "loss": float(loss),
-                   "sec": time.perf_counter() - t0}
-            # sparse-path health: per-interval overflow + cache-tier hit
-            # rate/evictions (HybridTrainer; cached placement only).
-            # advance=True: only the logger moves the interval baseline.
-            sparse_metrics = getattr(trainer, "sparse_metrics", None)
-            if sparse_metrics is not None:
-                rec.update(sparse_metrics(advance=True))
+            # sparse-path health (per-interval overflow + cache hit rate/
+            # evictions) rides along; only the logger moves the baseline.
+            rec = history_record(trainer, loss, t0)
             if eval_fn:
                 rec["eval"] = eval_fn(trainer)
             trainer.history.append(rec)
@@ -597,11 +614,7 @@ class HybridTrainer:
             worst = self.overflow_dropped / self.step_num
         if worst <= 0:
             return self.engine.capacity
-        need = self.engine.capacity + safety * worst
-        cap = 1
-        while cap < need:
-            cap <<= 1
-        return cap
+        return next_pow2(self.engine.capacity + safety * worst)
 
     def fit(self, batches: Iterator, steps: int, eval_fn=None) -> list:
         return _fit_loop(self, batches, steps, eval_fn)

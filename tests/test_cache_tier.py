@@ -204,6 +204,31 @@ def test_cached_trainer_history_metrics():
     assert tr.sparse_metrics() == tr.sparse_metrics()
 
 
+def test_zero_lookup_interval_reports_zero_hit_rate():
+    """An idle logging window (no train steps, or predict-only traffic —
+    predict discards its cache side effects) must report cache_hit_rate
+    0.0, not the fake perfect 1.0 that ``1 - 0/max(0, 1)`` produced."""
+    from repro.core.embedding_engine import EmbeddingEngine
+
+    zero = {"lookups": 0.0, "fetched": 0.0, "evictions": 0.0,
+            "bytes_h2d": 0.0, "bytes_d2h": 0.0}
+    assert EmbeddingEngine.derive_cache_stats(zero)["cache_hit_rate"] == 0.0
+    assert EmbeddingEngine.derive_cache_stats({}) == {}
+
+    tr = build_trainer("baidu-ctr", _cached_tcfg())
+    m = tr.sparse_metrics()                    # nothing trained yet: idle
+    assert m["cache_hit_rate"] == 0.0
+    assert m["cache_hit_rate_total"] == 0.0
+    gen = _ctr_gen()
+    for _ in range(2):
+        tr.predict(next(gen))                  # predict-only stays idle
+    m = tr.sparse_metrics()
+    assert m["cache_hit_rate"] == 0.0
+    # a real training window reports a real (nonzero-lookup) rate again
+    tr.train_step(next(gen))
+    assert 0.0 <= tr.sparse_metrics()["cache_hit_rate"] <= 1.0
+
+
 def test_cached_checkpoint_resume_bitexact(tmp_path):
     """Crash/resume with the cache tier: host tables + device-cache state
     roundtrip so the resumed run is bit-identical to an uninterrupted one."""

@@ -75,3 +75,70 @@ def test_restore_latest_none(tmp_path):
     mgr = CheckpointManager(str(tmp_path), save_every=1)
     step, t = mgr.restore_latest(tree())
     assert step is None and t is None
+
+
+def test_async_save_failure_raises_on_wait(tmp_path):
+    """A failed background save must surface, not vanish: wait() re-raises
+    the writer's exception (once), and the manager recovers afterwards."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, save_every=1, async_save=True)
+    # a json-unserializable meta poisons the writer thread mid-save
+    mgr.save(1, tree(), meta={"bad": object()})
+    with pytest.raises(TypeError):
+        mgr.wait()
+    mgr.wait()   # the failure is reported once, then cleared
+    assert latest_step(d) is None   # the poisoned step never became visible
+    mgr.save(2, tree())
+    mgr.wait()
+    assert latest_step(d) == 2
+
+
+def test_async_save_failure_raises_on_next_save(tmp_path):
+    """The next save() re-raises a pending background failure instead of
+    silently dropping it and dispatching a new write — including a
+    ``block=True`` save, which must also drain the in-flight writer."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, save_every=1, async_save=True)
+    mgr.save(1, tree(), meta={"bad": object()})
+    with pytest.raises(TypeError):
+        mgr.save(2, tree(), block=True)
+    assert latest_step(d) is None
+
+
+def test_gc_sweeps_stale_tmp_and_aside_dirs(tmp_path):
+    """Wreckage of crashed/failed saves (.tmp/.old dirs) must not leak
+    forever: the manager's retention GC sweeps them on the next save."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep_last=2, save_every=1, async_save=False)
+    os.makedirs(os.path.join(d, "step_0000000001.tmp"))   # crashed save 1
+    os.makedirs(os.path.join(d, "step_0000000002.old"))   # killed overwrite
+    mgr.save(3, tree())
+    left = sorted(os.listdir(d))
+    assert left == ["step_0000000003"], left
+
+
+def test_overwrite_crash_between_renames_keeps_previous(tmp_path):
+    """Overwriting an existing step renames it aside rather than rmtree'ing
+    it: a kill between the two renames leaves the previous checkpoint step
+    complete and restorable, and a rerun of the save cleans up."""
+    d = str(tmp_path)
+    save_tree(d, 4, tree())
+    save_tree(d, 5, tree())
+    final = os.path.join(d, "step_0000000005")
+    # simulate save_tree(d, 5, ...) killed after rename(final -> aside) but
+    # before rename(tmp -> final)
+    os.rename(final, final + ".old")
+    os.makedirs(final + ".tmp")
+    assert latest_step(d) == 4               # aside/tmp dirs are invisible
+    out = restore_tree(d, 4, tree())
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # rerunning the interrupted save clears the wreckage and completes
+    t2 = jax.tree.map(lambda x: x * 2, tree())
+    save_tree(d, 5, t2)
+    assert latest_step(d) == 5
+    assert not os.path.exists(final + ".old")
+    assert not os.path.exists(final + ".tmp")
+    out = restore_tree(d, 5, tree())
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,6 +1,9 @@
 """Per-architecture smoke tests: every assigned arch instantiates its
-REDUCED config and runs one forward/train step on CPU — output shapes and
-finiteness asserted.  (Full configs are exercised only via the dry-run.)"""
+REDUCED config and trains on CPU — lm/gnn via model-level steps, every
+recsys arch through ``build_trainer`` (the factory is the only supported
+recsys training path: fit under all three placements, fit-parity against a
+hand-rolled full-table driver, and gather-vs-cached bit-identity at a
+full-size cache).  Full configs are exercised only via the dry-run."""
 
 import dataclasses
 
@@ -10,12 +13,19 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.core.kstep import KStepAdam, KStepConfig, pod_replicate
+from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
+from repro.data import synthetic as S
 from repro.models import gin as G
 from repro.models import recsys as R
 from repro.models import transformer as T
+from repro.runtime.factory import build_trainer
+from repro.runtime.trainer import TrainerConfig
 
 LM_ARCHS = ["qwen3-14b", "qwen2-7b", "granite-8b", "mixtral-8x7b",
             "llama4-scout-17b-16e"]
+RECSYS_ARCHS = ["dlrm-mlperf", "din", "dien", "two-tower-retrieval",
+                "baidu-ctr"]
 
 
 @pytest.mark.parametrize("name", LM_ARCHS)
@@ -75,84 +85,207 @@ def test_gin_smoke_all_shapes():
     assert np.isfinite(float(lm))
 
 
-def test_dlrm_smoke():
-    spec = configs.get("dlrm-mlperf")
-    cfg = spec.smoke_cfg
-    rng = np.random.default_rng(0)
-    dense = R.dlrm_init_dense(jax.random.key(0), cfg)
-    tables = {f"emb_{i:02d}": jnp.asarray(
-        rng.standard_normal((cfg.rows[i], cfg.embed_dim)) * 0.1, jnp.float32)
-        for i in range(cfg.n_sparse)}
-    batch = {
-        "dense": jnp.asarray(rng.standard_normal((8, cfg.n_dense)), jnp.float32),
-        "sparse_ids": jnp.asarray(rng.integers(0, 200, (8, 26)), jnp.int32),
-        "label": jnp.ones(8, jnp.float32),
-    }
-    emb = R.dlrm_embed_batch(tables, batch, cfg)
-    logits = R.dlrm_forward_from_emb(dense, emb, batch, cfg)
-    assert logits.shape == (8,)
-    assert np.all(np.isfinite(np.asarray(logits)))
+# ------------------------------------------------------------ recsys family
+# Every recsys arch trains through the factory — the smoke tests ride the
+# same ``build_trainer`` path the launcher, examples, and CI use.
+
+def _recsys_tcfg(placement, prefetch=False, n_pod=1, k=1, cache_rows=None,
+                 log_every=1, capacity=None):
+    return TrainerConfig(
+        n_pod=n_pod, kstep=KStepConfig(lr=1e-3, k=k, b1=0.0),
+        sparse=SparseAdagradConfig(lr=0.1, initial_accumulator=0.01),
+        placement=placement, capacity=capacity, cache_rows=cache_rows,
+        prefetch=prefetch, log_every=log_every,
+    )
 
 
-@pytest.mark.parametrize("name", ["din", "dien"])
-def test_din_dien_smoke(name):
-    spec = configs.get(name)
-    cfg = spec.smoke_cfg
-    rng = np.random.default_rng(0)
-    dense = R.din_init_dense(jax.random.key(0), cfg)
-    tables = {"items": jnp.asarray(
-        rng.standard_normal((cfg.item_vocab, cfg.embed_dim)) * 0.1, jnp.float32)}
-    batch = {
-        "hist_ids": jnp.asarray(rng.integers(0, cfg.item_vocab, (8, cfg.seq_len)), jnp.int32),
-        "hist_mask": jnp.ones((8, cfg.seq_len), jnp.float32),
-        "target_id": jnp.asarray(rng.integers(0, cfg.item_vocab, 8), jnp.int32),
-        "label": jnp.ones(8, jnp.float32),
-    }
-    emb = R.din_embed_batch(tables, batch, cfg)
-    logits = R.din_forward_from_emb(dense, emb, batch, cfg)
-    assert logits.shape == (8,)
-    assert np.all(np.isfinite(np.asarray(logits)))
-    if name == "dien":
-        assert cfg.gru_dim > 0
+def _recsys_batches(arch, n, batch=64, seed=3):
+    gen = S.recsys_batches(configs.get(arch).smoke_cfg, batch=batch, seed=seed)
+    return [next(gen) for _ in range(n)]
 
 
-def test_two_tower_smoke():
-    spec = configs.get("two-tower-retrieval")
-    cfg = spec.smoke_cfg
-    rng = np.random.default_rng(0)
-    dense = R.two_tower_init_dense(jax.random.key(0), cfg)
-    tables = {"items": jnp.asarray(
-        rng.standard_normal((cfg.item_vocab, cfg.embed_dim)) * 0.1, jnp.float32)}
-    batch = {
-        "user_ids": jnp.asarray(rng.integers(0, cfg.item_vocab, (8, cfg.user_hist_len)), jnp.int32),
-        "user_mask": jnp.ones((8, cfg.user_hist_len), jnp.float32),
-        "item_id": jnp.asarray(rng.integers(0, cfg.item_vocab, 8), jnp.int32),
-    }
-    emb = R.two_tower_embed_batch(tables, batch, cfg)
-    loss = R.two_tower_loss(dense, emb, batch, cfg)
-    assert np.isfinite(float(loss))
-    scores = R.two_tower_score_candidates(dense, tables, emb["user"][:1],
-                                          jnp.arange(64), cfg)
-    assert scores.shape == (1, 64)
+def _full_mirror_cache_rows(tr) -> int:
+    """cache_rows covering every table AND the pull capacity — the cache
+    degenerates to a full mirror (bit-identical to gather)."""
+    max_rows = max(s.rows for s in tr.engine.specs.values())
+    return max(max_rows, tr.engine.capacity)
 
 
-def test_baidu_ctr_smoke():
-    spec = configs.get("baidu-ctr")
-    cfg = spec.smoke_cfg
-    rng = np.random.default_rng(0)
-    dense = R.ctr_init_dense(jax.random.key(0), cfg)
-    tables = {"sparse": jnp.asarray(
-        rng.standard_normal((cfg.rows, cfg.embed_dim)) * 0.1, jnp.float32)}
-    batch = {
-        "ids": jnp.asarray(rng.integers(0, cfg.rows, (8, cfg.nnz_per_instance)), jnp.int32),
-        "field_ids": jnp.asarray(rng.integers(0, cfg.n_fields, (8, cfg.nnz_per_instance)), jnp.int32),
-        "mask": jnp.ones((8, cfg.nnz_per_instance), jnp.float32),
-        "label": jnp.ones(8, jnp.float32),
-    }
-    emb = R.ctr_embed_batch(tables, batch, cfg)
-    logits = R.ctr_forward_from_emb(dense, emb, batch, cfg)
-    assert logits.shape == (8,)
-    assert np.all(np.isfinite(np.asarray(logits)))
+def _logical_state(tr):
+    """(tables, accum) in logical row layout, flushed + exported — the
+    placement-independent view used for cross-placement parity."""
+    tables, accum, _ = tr.engine.flush(
+        tr.tables, tr.sparse_state.accum, tr.backend_state
+    )
+    return (
+        {n: np.asarray(v) for n, v in tr.engine.export(tables).items()},
+        {n: np.asarray(v) for n, v in accum.items()},
+    )
+
+
+@pytest.mark.parametrize("placement", ["gather", "routed", "cached"])
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_factory_fit_all_placements(arch, placement):
+    """Acceptance: ``build_trainer(arch, cfg).fit(...)`` runs for every
+    recsys arch under every placement (prefetch on for the non-gather
+    placements, so the placement x prefetch grid is covered across the
+    matrix), and online ``predict`` serves scores."""
+    prefetch = placement != "gather"
+    tr = build_trainer(arch, _recsys_tcfg(placement, prefetch=prefetch,
+                                          n_pod=2, k=2, log_every=2))
+    batches = _recsys_batches(arch, 4)
+    hist = tr.fit(iter(batches), 4)
+    assert tr.step_num == 4 and len(hist) == 2
+    assert all(np.isfinite(r["loss"]) for r in hist)
+    assert tr.overflow_dropped == 0, (arch, placement)
+    scores = tr.predict(batches[0])
+    assert scores.shape == (64,)
+    assert np.all(np.isfinite(scores))
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_undersized_capacity_degrades_gracefully(arch):
+    """Capacity overflow is counted, never NaN: dropped ids read the zero
+    drop row, whose gradient is discarded at push — for every arch
+    (two-tower's L2-normalize used to NaN-poison the push through
+    ``jnp.linalg.norm``'s 0/0 gradient at the zero row)."""
+    # capacity 32 << the per-batch distinct ids of every arch (including
+    # DLRM's per-table single-hot draws at batch 128)
+    tr = build_trainer(arch, _recsys_tcfg("gather", capacity=32))
+    hist = tr.fit(iter(_recsys_batches(arch, 4, batch=128)), 4)
+    assert tr.overflow_dropped > 0, arch
+    assert all(np.isfinite(r["loss"]) for r in hist), (arch, hist)
+    for leaf in jax.tree.leaves((tr.tables, tr.sparse_state.accum, tr.dense)):
+        assert np.all(np.isfinite(np.asarray(leaf))), arch
+
+
+def test_fit_online_stops_on_exhausted_stream():
+    """The shared online loop ends cleanly when a finite stream runs out
+    before ``steps`` — final history record and checkpoint flush included
+    (the hand-rolled loops it replaced also terminated gracefully)."""
+    from repro.runtime.online import fit_online
+
+    tr = build_trainer("din", _recsys_tcfg("gather", log_every=10))
+    hist, online_auc = fit_online(tr, iter(_recsys_batches("din", 3)), 10)
+    assert tr.step_num == 3
+    assert hist and hist[-1]["step"] == 3
+    assert online_auc is not None
+
+
+# hand-rolled full-table drivers (what the example drivers used to do):
+# dense-side grads through ``*_embed_batch`` on the WHOLE table + dense
+# AdaGrad — the oracle the factory's pull/push path must reproduce.
+_HANDROLLED = {
+    "dlrm-mlperf": (R.dlrm_init_dense, R.dlrm_embed_batch, R.dlrm_hybrid_loss),
+    "din": (R.din_init_dense, R.din_embed_batch, R.din_hybrid_loss),
+    "dien": (R.din_init_dense, R.din_embed_batch, R.din_hybrid_loss),
+    "two-tower-retrieval": (R.two_tower_init_dense, R.two_tower_embed_batch,
+                            R.two_tower_hybrid_loss),
+    "baidu-ctr": (R.ctr_init_dense, R.ctr_embed_batch, R.ctr_hybrid_loss),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(_HANDROLLED))
+def test_recsys_factory_fit_parity_with_handrolled(arch):
+    """The factory's working-set path must train exactly like a hand-rolled
+    full-table driver: same dense k-step Adam, same AdaGrad arithmetic —
+    the only difference is pull/push vs whole-table gradients."""
+    mcfg = configs.get(arch).smoke_cfg
+    batches = _recsys_batches(arch, 3)
+    tcfg = _recsys_tcfg("gather")
+    tr = build_trainer(arch, tcfg)
+    tables0 = {n: np.array(v) for n, v in tr.engine.export(tr.tables).items()}
+    hist = tr.fit(iter(batches), 3)
+    factory_losses = [r["loss"] for r in hist]
+
+    init_dense, embed_batch, loss_of = _HANDROLLED[arch]
+    loss_ad = loss_of(mcfg)
+    dense = init_dense(jax.random.key(0), mcfg)   # factory's seed=0 default
+    dense_p = pod_replicate(dense, 1)
+    opt = KStepAdam(tcfg.kstep, 1)
+    opt_state = opt.init(dense_p)
+    sa = SparseAdagrad(tcfg.sparse)
+    tables = {n: jnp.asarray(v) for n, v in tables0.items()}
+    accum = {n: jnp.full(v.shape, tcfg.sparse.initial_accumulator, jnp.float32)
+             for n, v in tables.items()}
+    ref_losses = []
+    for step, b in enumerate(batches, start=1):
+        b = jax.tree.map(jnp.asarray, b)
+
+        def lf(dp, tbs):
+            return loss_ad(dp, embed_batch(tbs, b, mcfg), b)
+
+        loss, (dg, tg) = jax.value_and_grad(lf, argnums=(0, 1))(dense, tables)
+        dense_p, opt_state = opt.step(
+            dense_p, jax.tree.map(lambda g: g[None], dg), opt_state,
+            merge=(step % tcfg.kstep.k == 0),
+        )
+        dense = jax.tree.map(lambda x: x[0], dense_p)
+        for n in tables:
+            tables[n], accum[n] = sa.dense_reference(tables[n], accum[n], tg[n])
+        ref_losses.append(float(loss))
+
+    np.testing.assert_allclose(factory_losses, ref_losses, rtol=1e-5, atol=1e-6)
+    final_tables, final_accum = _logical_state(tr)
+    # rtol absorbs summation-order noise on hot rows (autodiff's duplicate
+    # reduction vs the push's scatter-add accumulate in different orders)
+    for n in final_tables:
+        np.testing.assert_allclose(final_tables[n], np.asarray(tables[n]),
+                                   rtol=1e-4, atol=1e-5, err_msg=n)
+        np.testing.assert_allclose(final_accum[n], np.asarray(accum[n]),
+                                   rtol=1e-4, atol=1e-5, err_msg=n)
+    for a, b_ in zip(jax.tree.leaves(tr.dense), jax.tree.leaves(dense_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_factory_placement_parity(arch):
+    """gather vs cached BIT-identity at ``cache_rows >= rows`` (the cache
+    degenerates to a full mirror; same AdaGrad arithmetic by construction),
+    with and without prefetch.  routed (one shard on this container) runs
+    the same math through the shard-local fused push, which reorders the
+    update arithmetic — identical to ULP level, asserted via allclose."""
+    batches = _recsys_batches(arch, 6)
+    tr_g = build_trainer(arch, _recsys_tcfg("gather", n_pod=2, k=2))
+    hist_g = tr_g.fit(iter(batches), 6)
+    losses_g = [r["loss"] for r in hist_g]
+    tables_g, accum_g = _logical_state(tr_g)
+    mirror = _full_mirror_cache_rows(tr_g)
+
+    variants = [("cached", False), ("cached", True), ("routed", False)]
+    for placement, prefetch in variants:
+        cache_rows = mirror if placement == "cached" else None
+        tr = build_trainer(arch, _recsys_tcfg(
+            placement, prefetch=prefetch, n_pod=2, k=2, cache_rows=cache_rows
+        ))
+        hist = tr.fit(iter(batches), 6)
+        losses = [r["loss"] for r in hist]
+        tables_p, accum_p = _logical_state(tr)
+        tag = f"{arch}/{placement}/prefetch={prefetch}"
+        if placement == "cached":
+            assert losses == losses_g, tag
+            for n in tables_g:
+                np.testing.assert_array_equal(tables_g[n], tables_p[n],
+                                              err_msg=f"{tag}/{n}")
+                np.testing.assert_array_equal(accum_g[n], accum_p[n],
+                                              err_msg=f"{tag}/{n}")
+            for a, b_ in zip(jax.tree.leaves(tr_g.dense),
+                             jax.tree.leaves(tr.dense)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+        else:
+            np.testing.assert_allclose(losses, losses_g, rtol=1e-5,
+                                       atol=1e-6, err_msg=tag)
+            for n in tables_g:
+                np.testing.assert_allclose(tables_g[n], tables_p[n],
+                                           rtol=1e-4, atol=1e-6,
+                                           err_msg=f"{tag}/{n}")
+                np.testing.assert_allclose(accum_g[n], accum_p[n],
+                                           rtol=1e-4, atol=1e-6,
+                                           err_msg=f"{tag}/{n}")
+            for a, b_ in zip(jax.tree.leaves(tr_g.dense),
+                             jax.tree.leaves(tr.dense)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                           rtol=1e-4, atol=1e-6)
 
 
 def test_registry_complete():
