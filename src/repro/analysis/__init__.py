@@ -1,0 +1,42 @@
+"""Hot-path correctness tooling — the machine checker for the invariants the
+paper's pipeline depends on.
+
+The whole thesis of the framework is that the GPU<->CPU<->SSD hot path stays
+communication-clean: no per-step host syncs, no silent retraces, donated
+buffers actually donated, config knobs actually wired.  The last several PRs
+each re-discovered violations of these invariants by hand (per-step
+``float(loss)`` syncs, dead ``merge_delay``/``merge_quorum`` knobs, a
+donate-twice XLA error, a silent sqrtn fallback).  This package turns them
+into enforced checks, in two layers:
+
+Layer 1 — AST lint (``repro.analysis.lint`` + ``repro.analysis.rules``):
+  repo-specific static rules over the source tree.
+
+  - R1 ``host-sync-in-jit``: host-synchronizing calls (``float()``,
+    ``.item()``, ``np.asarray``, ``jax.device_get``,
+    ``.block_until_ready()``) reachable from traced functions (anything
+    passed to ``jax.jit`` or defined inside a ``_make_*`` step factory).
+  - R2 ``dead-config-knob``: dataclass config/spec fields never read
+    anywhere outside their definition.
+  - R3 ``nondeterminism-in-trace``: wall clock / host RNG
+    (``time.time``, ``np.random.*``, ``random.*``) inside traced functions.
+  - R4 ``undonated-hot-jit``: ``jax.jit`` call sites in the designated
+    hot-path modules with no explicit donation decision
+    (``donate_argnums``/``donate_argnames``).
+
+Layer 2 — trace audit (``repro.analysis.trace_audit``):
+  build each registered recsys arch x placement trainer at smoke scale,
+  trace one real step, and assert on the jaxpr / lowered HLO: no
+  ``pure_callback``/``io_callback`` primitives, no f64 widening, donation
+  actually marked in the lowered module, the jit caches stop growing after
+  the warm-up step (retrace guard), and the hot path survives
+  ``jax.transfer_guard("disallow")`` (runtime sync check).
+
+Findings are gated against a checked-in baseline (``analysis-baseline.json``
+at the repo root): pre-existing accepted cases carry a justification and do
+not fail the gate; anything new does.  CLI: ``python -m repro.analysis --all``
+(see ``docs/analysis.md``).
+"""
+
+from repro.analysis.lint import Finding, Project, run_lint  # noqa: F401
+from repro.analysis.baseline import Baseline  # noqa: F401

@@ -1,0 +1,127 @@
+"""CLI: ``python -m repro.analysis`` — the hot-path correctness gate.
+
+    python -m repro.analysis --lint                # layer 1 only (fast)
+    python -m repro.analysis --trace-audit         # layer 2 only
+    python -m repro.analysis --all                 # both (the CI gate)
+    python -m repro.analysis --all --report analysis-report.json
+    python -m repro.analysis --lint --update-baseline
+
+Exit code 0 iff every finding is covered by the checked-in baseline
+(``analysis-baseline.json`` at the repo root).  New findings print with
+file:line and fail the gate; stale baseline entries are reported but don't
+fail (run ``--update-baseline`` to drop them — it preserves the
+justifications of surviving entries and marks new ones to fill in).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _default_paths():
+    import repro
+
+    pkg = Path(repro.__file__).resolve().parent        # .../src/repro
+    repo = pkg.parent.parent if pkg.parent.name == "src" else Path.cwd()
+    return pkg, repo
+
+
+def main(argv=None) -> int:
+    pkg_root, repo_root = _default_paths()
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="hot-path static analysis + trace audit gate",
+    )
+    ap.add_argument("--lint", action="store_true", help="run the AST lint")
+    ap.add_argument("--trace-audit", action="store_true",
+                    help="run the trace audit (builds smoke trainers)")
+    ap.add_argument("--all", action="store_true", help="lint + trace audit")
+    ap.add_argument("--src", type=Path, default=pkg_root,
+                    help="source root to lint (default: the repro package)")
+    ap.add_argument("--baseline", type=Path,
+                    default=repo_root / "analysis-baseline.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings "
+                         "(keeps existing justifications)")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write a JSON findings/check report here")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="trace-audit arch filter (default: all recsys)")
+    ap.add_argument("--placements", nargs="*",
+                    default=["gather", "routed", "cached"])
+    ap.add_argument("--no-transfer-check", action="store_true",
+                    help="skip the runtime transfer_guard step check")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.all or not (args.lint or args.trace_audit):
+        args.lint = args.trace_audit = True
+
+    log = (lambda *a: None) if args.quiet else (
+        lambda *a: print(*a, file=sys.stderr))
+
+    findings = []
+    trace_report = []
+    if args.lint:
+        from repro.analysis.lint import Project, run_lint, summarize
+
+        log(f"lint: {args.src}")
+        lint_findings = run_lint(Project(args.src))
+        log(f"lint: {len(lint_findings)} finding(s) {summarize(lint_findings)}")
+        findings.extend(lint_findings)
+    if args.trace_audit:
+        from repro.analysis.trace_audit import run_trace_audit
+
+        audit_findings, trace_report = run_trace_audit(
+            archs=args.archs, placements=tuple(args.placements),
+            check_transfers=not args.no_transfer_check, log=log,
+        )
+        n_checks = len(trace_report)
+        log(f"trace-audit: {n_checks} check(s), "
+            f"{len(audit_findings)} failure(s)")
+        findings.extend(audit_findings)
+
+    from repro.analysis.baseline import Baseline
+
+    baseline = Baseline.load(args.baseline)
+    if args.update_baseline:
+        missing = baseline.update(findings)
+        print(f"baseline updated: {len(findings)} entr(ies) -> "
+              f"{args.baseline}"
+              + (f" ({missing} justification(s) to fill in)" if missing
+                 else ""))
+        return 0
+
+    new, old, stale = baseline.split(findings)
+    if args.report:
+        args.report.write_text(json.dumps({
+            "new": [f.__dict__ for f in new],
+            "baselined": [f.__dict__ for f in old],
+            "stale_baseline": [list(k) for k in stale],
+            "trace_checks": trace_report,
+        }, indent=2) + "\n")
+        log(f"report: {args.report}")
+
+    for f in old:
+        log(f"baselined: {f}")
+    for k in stale:
+        print(f"stale baseline entry (matched nothing): {k}",
+              file=sys.stderr)
+    for f in new:
+        print(f"FAIL {f}")
+    if new:
+        print(f"\n{len(new)} new finding(s) not covered by "
+              f"{args.baseline.name} — fix them, or baseline WITH a "
+              "justification (--update-baseline, then edit the "
+              "justification fields).")
+        return 1
+    print(f"analysis clean: {len(findings)} finding(s), all baselined"
+          if findings else "analysis clean: no findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,261 @@
+"""Shared AST infrastructure for the lint rules.
+
+Everything here is pure ``ast`` — modules are parsed, never imported, so the
+linter can run over fixture files with deliberate violations (and over this
+repo) without executing anything.
+
+The central abstractions:
+
+- ``ModuleInfo``: one parsed file with parent links, import-alias resolution
+  (``np`` -> ``numpy``, ``jnp`` -> ``jax.numpy``), and a table of every
+  function-like node (def / async def / lambda) with stable qualnames.
+- ``traced_functions(mod)``: the set of functions whose bodies end up inside
+  a ``jax.jit`` trace — jit call arguments, ``@jax.jit``-decorated defs
+  (including ``functools.partial(jax.jit, ...)``), functions defined inside
+  ``_make_*`` step factories, plus everything reachable from those through
+  the module-local call graph (plain calls and ``self.method`` calls).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+FUNC_TYPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# step-factory naming convention: functions defined inside a `_make_*`
+# function are jit-traced by construction (the factory's return value is
+# handed to jax.jit)
+MAKE_FACTORY_RE = re.compile(r"^_make_")
+
+
+def add_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_parent", None)
+
+
+def enclosing(node: ast.AST, types) -> Optional[ast.AST]:
+    """Nearest ancestor of one of ``types`` (excluding ``node`` itself)."""
+    p = parent(node)
+    while p is not None:
+        if isinstance(p, types):
+            return p
+        p = parent(p)
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """`a.b.c` attribute/name chain -> "a.b.c" (None for anything else)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    node: FuncNode
+    qualname: str               # e.g. "HybridTrainer._make_train.<locals>.train"
+    name: str                   # bare name ("<lambda>" for lambdas)
+    cls: Optional[str]          # enclosing class name, if a method
+
+
+class ModuleInfo:
+    """One parsed source file, with the lookup tables the rules share."""
+
+    def __init__(self, path: Path, rel: str, tree: ast.Module):
+        self.path = path
+        self.rel = rel            # repo-relative path used in findings
+        self.tree = tree
+        add_parents(tree)
+        self.aliases = self._import_aliases(tree)
+        self.functions: List[FuncInfo] = self._collect_functions(tree)
+        self._by_node: Dict[int, FuncInfo] = {
+            id(f.node): f for f in self.functions
+        }
+
+    # ------------------------------------------------------------ imports
+    @staticmethod
+    def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+        """local name -> canonical dotted module/object path."""
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        return aliases
+
+    def canonical(self, name: Optional[str]) -> Optional[str]:
+        """Resolve the leading segment of a dotted name through the module's
+        import aliases: ``np.random.seed`` -> ``numpy.random.seed``."""
+        if name is None:
+            return None
+        head, _, rest = name.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+    def canonical_call(self, call: ast.Call) -> Optional[str]:
+        return self.canonical(dotted_name(call.func))
+
+    # ---------------------------------------------------------- functions
+    def _collect_functions(self, tree: ast.Module) -> List[FuncInfo]:
+        out: List[FuncInfo] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, FUNC_TYPES):
+                continue
+            name = getattr(node, "name", "<lambda>")
+            parts: List[str] = [name]
+            cls = None
+            p = parent(node)
+            while p is not None:
+                if isinstance(p, FUNC_TYPES):
+                    parts.append("<locals>")
+                    parts.append(getattr(p, "name", "<lambda>"))
+                elif isinstance(p, ast.ClassDef):
+                    if cls is None:
+                        cls = p.name
+                    parts.append(p.name)
+                p = parent(p)
+            out.append(FuncInfo(node, ".".join(reversed(parts)), name, cls))
+        return out
+
+    def info_for(self, node: FuncNode) -> FuncInfo:
+        return self._by_node[id(node)]
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FuncInfo]:
+        f = enclosing(node, FUNC_TYPES)
+        return self._by_node[id(f)] if f is not None else None
+
+
+def is_jit_call(mod: ModuleInfo, call: ast.Call) -> bool:
+    """True for ``jax.jit(...)`` / ``jit(...)`` call expressions and for
+    ``functools.partial(jax.jit, ...)`` (the decorator spelling)."""
+    name = mod.canonical_call(call)
+    if name in ("jax.jit", "jax.jit.jit", "jit"):
+        return True
+    if name in ("functools.partial", "partial") and call.args:
+        return mod.canonical(dotted_name(call.args[0])) in ("jax.jit", "jit")
+    return False
+
+
+def jit_traced_args(call: ast.Call) -> Iterable[ast.AST]:
+    """The positional arguments of a jit call that name the traced function
+    (for ``functools.partial(jax.jit, ...)`` there is none at the call)."""
+    if not call.args:
+        return []
+    first = call.args[0]
+    if dotted_name(first) in ("jax.jit", "jit"):
+        return call.args[1:2]   # partial(jax.jit, fn?) — rarely carries fn
+    return call.args[:1]
+
+
+def _local_defs(mod: ModuleInfo) -> Dict[str, List[FuncInfo]]:
+    """bare name -> defs in this module (used for call-graph resolution)."""
+    table: Dict[str, List[FuncInfo]] = {}
+    for f in mod.functions:
+        table.setdefault(f.name, []).append(f)
+    return table
+
+
+def _called_names(func: FuncNode) -> Set[str]:
+    """Bare names this function calls: ``foo(...)`` -> foo,
+    ``self.bar(...)`` / ``obj.bar(...)`` -> bar.  Also names merely
+    *referenced* (passed to vmap/grad/scan) so higher-order wrappers keep
+    the callee reachable."""
+    names: Set[str] = set()
+    for node in ast.walk(func):
+        if node is func:
+            continue
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name):
+                names.add(fn.id)
+            elif isinstance(fn, ast.Attribute):
+                names.add(fn.attr)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            names.add(node.id)
+    return names
+
+
+def traced_functions(mod: ModuleInfo) -> Dict[int, FuncInfo]:
+    """id(node) -> FuncInfo for every function whose body is jit-traced.
+
+    Roots:
+      * lambdas / local function names passed to ``jax.jit(...)``,
+      * defs decorated with ``@jax.jit`` or
+        ``@functools.partial(jax.jit, ...)``,
+      * functions *defined inside* a ``_make_*`` factory (the repo's step
+        construction convention — their return value is always jitted).
+
+    Closure: module-local call-graph reachability (a helper called from a
+    traced function is traced too).  Resolution is by bare name within the
+    module — deliberately conservative; cross-module flow is the trace
+    audit's job (layer 2), not the linter's.
+    """
+    roots: List[FuncInfo] = []
+    defs = _local_defs(mod)
+
+    for f in mod.functions:
+        node = f.node
+        # nested inside a _make_* factory
+        p = enclosing(node, FUNC_TYPES)
+        if p is not None and MAKE_FACTORY_RE.match(getattr(p, "name", "")):
+            roots.append(f)
+        # decorated with jax.jit / partial(jax.jit, ...)
+        for dec in getattr(node, "decorator_list", []):
+            dn = mod.canonical(dotted_name(dec))
+            if dn in ("jax.jit", "jit"):
+                roots.append(f)
+            elif isinstance(dec, ast.Call) and is_jit_call(mod, dec):
+                roots.append(f)
+
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and is_jit_call(mod, node)):
+            continue
+        for arg in jit_traced_args(node):
+            if isinstance(arg, ast.Lambda):
+                roots.append(mod.info_for(arg))
+            else:
+                name = dotted_name(arg)
+                if name is None and isinstance(arg, ast.Call):
+                    # jax.jit(self._make_step(...)): the factory's nested
+                    # defs are already roots via the _make_* convention
+                    continue
+                if name is not None:
+                    bare = name.split(".")[-1]
+                    roots.extend(defs.get(bare, []))
+
+    reach: Dict[int, FuncInfo] = {}
+    stack = list(roots)
+    while stack:
+        f = stack.pop()
+        if id(f.node) in reach:
+            continue
+        reach[id(f.node)] = f
+        # nested defs (inner closures) of a traced function are traced
+        for g in mod.functions:
+            if enclosing(g.node, FUNC_TYPES) is f.node:
+                stack.append(g)
+        for name in _called_names(f.node):
+            for g in defs.get(name, []):
+                if id(g.node) not in reach:
+                    stack.append(g)
+    return reach

@@ -1,0 +1,77 @@
+"""Checked-in findings baseline — pre-existing accepted cases don't fail CI.
+
+The baseline file (``analysis-baseline.json`` at the repo root) holds one
+entry per accepted finding, keyed by ``(rule, file, symbol, detail)`` — NO
+line numbers, so unrelated edits that shift lines don't invalidate entries.
+Every entry carries a human ``justification``; ``--update-baseline`` writes
+the current findings (preserving justifications of entries that survive) and
+prints the ones that need a justification filled in.
+
+A baseline entry that matches nothing is *stale* and reported (exit stays 0
+— stale entries are cleanup debt, not a gate failure; ``--update-baseline``
+drops them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Tuple
+
+Key = Tuple[str, str, str, str]
+
+FILL_ME = "TODO: justify or fix"
+
+
+def finding_key(f) -> Key:
+    return (f.rule, f.path, f.symbol, f.detail)
+
+
+@dataclasses.dataclass
+class Baseline:
+    entries: Dict[Key, str]          # key -> justification
+    path: Path
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        entries: Dict[Key, str] = {}
+        if path.exists():
+            data = json.loads(path.read_text())
+            for e in data.get("entries", []):
+                key = (e["rule"], e["file"], e["symbol"], e["detail"])
+                entries[key] = e.get("justification", "")
+        return cls(entries=entries, path=path)
+
+    def split(self, findings: Iterable) -> Tuple[List, List, List[Key]]:
+        """-> (new_findings, baselined_findings, stale_keys)."""
+        findings = list(findings)
+        seen = {finding_key(f) for f in findings}
+        new = [f for f in findings if finding_key(f) not in self.entries]
+        old = [f for f in findings if finding_key(f) in self.entries]
+        stale = [k for k in self.entries if k not in seen]
+        return new, old, stale
+
+    def update(self, findings: Iterable) -> int:
+        """Rewrite the baseline to exactly the current findings, keeping
+        existing justifications.  Returns the number of entries still
+        needing a justification."""
+        entries = []
+        missing = 0
+        for f in sorted(findings, key=finding_key):
+            key = finding_key(f)
+            just = self.entries.get(key, FILL_ME)
+            if just == FILL_ME:
+                missing += 1
+            entries.append({
+                "rule": key[0], "file": key[1], "symbol": key[2],
+                "detail": key[3], "justification": just,
+            })
+        self.path.write_text(json.dumps(
+            {"version": 1, "entries": entries}, indent=2) + "\n")
+        self.entries = {
+            (e["rule"], e["file"], e["symbol"], e["detail"]):
+                e["justification"]
+            for e in entries
+        }
+        return missing

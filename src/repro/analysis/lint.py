@@ -1,0 +1,98 @@
+"""Layer 1 — the AST lint driver.
+
+``Project`` parses every ``*.py`` under a source root (never imports them);
+``run_lint`` applies the registered rules (``repro.analysis.rules.ALL_RULES``)
+and returns ``Finding``s.  Findings are plain data — the CLI handles baseline
+gating and reporting.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.analysis.astutil import ModuleInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str          # rule id, e.g. "host-sync-in-jit"
+    path: str          # repo-relative file path
+    line: int          # 1-based line of the offending node
+    symbol: str        # qualname of the enclosing function/class ("" at module level)
+    detail: str        # stable short form, e.g. the offending call name
+    message: str       # human explanation
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def __str__(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.location()}: {self.rule}{sym}: {self.message}"
+
+
+class Project:
+    """All parsed modules under a source root.
+
+    ``rel_root`` anchors the repo-relative paths used in findings and the
+    baseline (default: the parent of ``root``'s ``src`` directory when the
+    root lives under one, else ``root`` itself) — so findings read
+    ``src/repro/runtime/serve.py`` regardless of where the tool runs.
+    """
+
+    def __init__(self, root: Path, rel_root: Optional[Path] = None):
+        self.root = Path(root).resolve()
+        if rel_root is None:
+            rel_root = self.root
+            for p in self.root.parents:
+                if p.name == "src":
+                    rel_root = p.parent
+                    break
+        self.rel_root = Path(rel_root).resolve()
+        self.modules: List[ModuleInfo] = []
+        self.errors: List[str] = []
+        for path in sorted(self.root.rglob("*.py")):
+            try:
+                tree = ast.parse(path.read_text(), filename=str(path))
+            except SyntaxError as e:  # a broken file is itself a finding
+                self.errors.append(f"{path}: {e}")
+                continue
+            try:
+                rel = str(path.relative_to(self.rel_root))
+            except ValueError:
+                rel = str(path)
+            self.modules.append(ModuleInfo(path, rel, tree))
+
+    def __iter__(self) -> Iterator[ModuleInfo]:
+        return iter(self.modules)
+
+
+def run_lint(
+    project: Project, rules: Optional[Sequence] = None
+) -> List[Finding]:
+    if rules is None:
+        from repro.analysis.rules import ALL_RULES
+        rules = ALL_RULES
+    findings: List[Finding] = []
+    for rule in rules:
+        findings.extend(rule.run(project))
+    for err in project.errors:
+        findings.append(Finding(
+            rule="parse-error", path=err.split(":")[0], line=0,
+            symbol="", detail="syntax", message=err,
+        ))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_paths(root: Path, rules=None) -> List[Finding]:
+    return run_lint(Project(root), rules=rules)
+
+
+def summarize(findings: List[Finding]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return out

@@ -1,0 +1,27 @@
+"""Lint rule registry.
+
+Each rule exposes ``name``, ``description``, and ``run(project) ->
+Iterable[Finding]``.  Rules only *report* — gating against the checked-in
+baseline happens in the CLI, so a rule never needs to know which findings
+are accepted.
+"""
+
+from repro.analysis.rules.host_sync import HostSyncInJitRule
+from repro.analysis.rules.dead_knob import DeadConfigKnobRule
+from repro.analysis.rules.nondeterminism import NondeterminismInTraceRule
+from repro.analysis.rules.donation import UndonatedHotJitRule
+
+ALL_RULES = [
+    HostSyncInJitRule(),
+    DeadConfigKnobRule(),
+    NondeterminismInTraceRule(),
+    UndonatedHotJitRule(),
+]
+
+__all__ = [
+    "ALL_RULES",
+    "HostSyncInJitRule",
+    "DeadConfigKnobRule",
+    "NondeterminismInTraceRule",
+    "UndonatedHotJitRule",
+]

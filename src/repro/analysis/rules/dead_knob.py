@@ -1,0 +1,96 @@
+"""R2 ``dead-config-knob`` — dataclass config fields nothing ever reads.
+
+PR 3 found ``merge_delay`` and ``merge_quorum`` silently accepted and
+ignored; this rule makes the class of bug structural.  A field of any
+``@dataclass`` whose class name ends in ``Config`` or ``Spec`` must be READ
+somewhere — an ``obj.field`` attribute load or a literal
+``getattr(obj, "field")`` — anywhere in the tree outside the class
+definition's own field declarations.  Constructor keywords and
+``dataclasses.replace`` keywords are *writes*, not reads: a knob that is
+only ever set is exactly the bug.
+
+Matching is by attribute name project-wide (any ``.field`` load anywhere
+counts), so a generic name like ``rows`` never false-positives; the rule
+errs toward silence — what it DOES flag is truly read nowhere.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Set, Tuple
+
+from repro.analysis.astutil import dotted_name
+from repro.analysis import lint
+
+CONFIG_CLASS_RE = re.compile(r"(Config|Spec)$")
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted_name(target)
+        if name and name.split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+class DeadConfigKnobRule:
+    name = "dead-config-knob"
+    description = (
+        "dataclass *Config/*Spec field never read (attribute load or "
+        "getattr) anywhere in the project"
+    )
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        # pass 1: declared fields of every config dataclass
+        fields: List[Tuple] = []   # (mod, class_node, field, line)
+        for mod in project:
+            for node in ast.walk(mod.tree):
+                if not (isinstance(node, ast.ClassDef)
+                        and CONFIG_CLASS_RE.search(node.name)
+                        and _is_dataclass(node)):
+                    continue
+                for stmt in node.body:
+                    if (isinstance(stmt, ast.AnnAssign)
+                            and isinstance(stmt.target, ast.Name)
+                            and not stmt.target.id.startswith("_")):
+                        fields.append(
+                            (mod, node, stmt.target.id, stmt.lineno)
+                        )
+
+        if not fields:
+            return []
+
+        # pass 2: every attribute-load / literal-getattr name in the project
+        # (outside class bodies' own declarations — a field's default or
+        # annotation referencing a sibling name is not a read of the knob)
+        read: Set[str] = set()
+        for mod in project:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Attribute) and isinstance(
+                        node.ctx, ast.Load):
+                    read.add(node.attr)
+                elif isinstance(node, ast.Call):
+                    name = dotted_name(node.func)
+                    if (name and name.split(".")[-1] == "getattr"
+                            and len(node.args) >= 2
+                            and isinstance(node.args[1], ast.Constant)
+                            and isinstance(node.args[1].value, str)):
+                        read.add(node.args[1].value)
+
+        findings: List[lint.Finding] = []
+        for mod, cls, field, line in fields:
+            if field in read:
+                continue
+            findings.append(lint.Finding(
+                rule=self.name, path=mod.rel, line=line,
+                symbol=f"{cls.name}.{field}", detail=field,
+                message=(
+                    f"config knob `{cls.name}.{field}` is never read "
+                    "anywhere — wire it, delete it, or make its "
+                    "constructor reject non-default values (the "
+                    "no-silent-config contract)"
+                ),
+            ))
+        return findings

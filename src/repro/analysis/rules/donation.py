@@ -1,0 +1,85 @@
+"""R4 ``undonated-hot-jit`` — hot-path jit call sites with no donation
+decision.
+
+The step/pull/decode executables run every iteration over buffers the
+caller immediately replaces (tables, accumulators, KV cache, optimizer
+state).  A ``jax.jit`` with no ``donate_argnums``/``donate_argnames`` there
+doubles the peak working set — XLA must materialize the outputs next to the
+still-live inputs (exactly the bug fixed for the decode KV cache in
+``runtime/serve.py``).
+
+The rule flags every jit call in the designated hot-path modules that makes
+NO donation decision at all.  ``donate_argnums=()`` (explicitly donating
+nothing) passes: the contract is that donation was *considered*, not that
+every jit must donate — merge-boundary or setup jits legitimately keep
+their inputs alive, and say so explicitly (or carry a baseline entry with
+the justification).
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterable, List, Sequence
+
+from repro.analysis.astutil import dotted_name, is_jit_call
+from repro.analysis import lint
+
+# modules whose jits ARE the hot path: one executable per train/pull/decode
+# step.  Glob-matched against the repo-relative path.
+DEFAULT_HOT_MODULES = (
+    "*/runtime/trainer.py",
+    "*/runtime/serve.py",
+    "*/core/embedding_engine.py",
+    "*/core/prefetch.py",
+    "*/core/cache_tier.py",
+)
+
+_DONATE_KWARGS = {"donate_argnums", "donate_argnames"}
+
+
+class UndonatedHotJitRule:
+    name = "undonated-hot-jit"
+    description = (
+        "jax.jit call in a hot-path module with no donate_argnums/"
+        "donate_argnames decision"
+    )
+
+    def __init__(self, hot_modules: Sequence[str] = DEFAULT_HOT_MODULES):
+        self.hot_modules = tuple(hot_modules)
+
+    def _is_hot(self, rel: str) -> bool:
+        return any(fnmatch.fnmatch(rel, pat) for pat in self.hot_modules)
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            if not self._is_hot(mod.rel):
+                continue
+            for node in ast.walk(mod.tree):
+                if not (isinstance(node, ast.Call)
+                        and is_jit_call(mod, node)):
+                    continue
+                kwargs = {kw.arg for kw in node.keywords}
+                if kwargs & _DONATE_KWARGS:
+                    continue
+                encl = mod.enclosing_function(node)
+                symbol = encl.qualname if encl is not None else mod.rel
+                if node.args:
+                    target = dotted_name(node.args[0]) or (
+                        "<lambda>" if isinstance(node.args[0], ast.Lambda)
+                        else "<expr>"
+                    )
+                else:
+                    target = "<partial>"
+                findings.append(lint.Finding(
+                    rule=self.name, path=mod.rel, line=node.lineno,
+                    symbol=symbol, detail=f"jit({target})",
+                    message=(
+                        "hot-path jax.jit makes no donation decision — "
+                        "donate the per-step buffers the caller replaces "
+                        "(donate_argnums=...), or state donate_argnums=() "
+                        "explicitly / baseline with a justification"
+                    ),
+                ))
+        return findings

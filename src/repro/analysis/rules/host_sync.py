@@ -1,0 +1,89 @@
+"""R1 ``host-sync-in-jit`` — host-synchronizing calls inside traced code.
+
+A ``float()``/``.item()``/``np.asarray``/``jax.device_get``/
+``.block_until_ready()`` on a traced value either fails at trace time or —
+worse — silently forces a device->host round trip per step when the value is
+a constant being folded.  Any of them appearing in a function that jit
+traces (directly jitted, passed to ``jax.jit``, defined inside a ``_make_*``
+step factory, or called from one of those) is a finding.
+
+The materialization points the hot path is *allowed* to use live outside
+traced functions (logging/checkpoint boundaries) and use explicit
+``jax.device_get`` — which this rule only flags INSIDE traces, where it is
+always a bug.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.astutil import ModuleInfo, dotted_name, traced_functions
+from repro.analysis import lint
+
+# builtin conversions that force a scalar materialization
+_SYNC_BUILTINS = {"float", "int", "bool"}
+# canonical (alias-resolved) dotted calls that move device values to host
+_SYNC_CALLS = {
+    "numpy.asarray", "numpy.array", "numpy.float32", "numpy.float64",
+    "jax.device_get",
+}
+# method calls that synchronize regardless of receiver typing
+_SYNC_METHODS = {"item", "block_until_ready"}
+
+
+class HostSyncInJitRule:
+    name = "host-sync-in-jit"
+    description = (
+        "host-synchronizing call (float/.item/np.asarray/jax.device_get/"
+        ".block_until_ready) reachable from a jit-traced function"
+    )
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            traced = traced_functions(mod)
+            for info in traced.values():
+                findings.extend(self._scan(mod, info, traced))
+        return findings
+
+    def _scan(self, mod: ModuleInfo, info, traced) -> List["lint.Finding"]:
+        out = []
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            # skip calls that lexically belong to a NESTED function — it is
+            # scanned under its own FuncInfo (keeps symbol names exact)
+            encl = mod.enclosing_function(node)
+            if encl is None or encl.node is not info.node:
+                continue
+            detail = self._offending(mod, node)
+            if detail is None:
+                continue
+            out.append(lint.Finding(
+                rule=self.name, path=mod.rel, line=node.lineno,
+                symbol=info.qualname, detail=detail,
+                message=(
+                    f"`{detail}` inside jit-traced `{info.qualname}` forces "
+                    "a host sync (or fails at trace time) — keep the hot "
+                    "path on device; materialize at logging/checkpoint "
+                    "boundaries with jax.device_get"
+                ),
+            ))
+        return out
+
+    @staticmethod
+    def _offending(mod: ModuleInfo, call: ast.Call):
+        fn = call.func
+        if isinstance(fn, ast.Name) and fn.id in _SYNC_BUILTINS:
+            # float(...) on a literal/shape constant is fine; on anything
+            # else it is a sync.  Only suppress the obviously-static cases.
+            if call.args and isinstance(call.args[0], ast.Constant):
+                return None
+            return f"{fn.id}()"
+        name = mod.canonical(dotted_name(fn))
+        if name in _SYNC_CALLS:
+            return name
+        if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_METHODS:
+            return f".{fn.attr}()"
+        return None

@@ -1,0 +1,63 @@
+"""R3 ``nondeterminism-in-trace`` — wall clock / host RNG inside traces.
+
+``time.time()`` or ``np.random.*`` inside a traced function doesn't do what
+it looks like: the value is captured ONCE at trace time and baked into the
+executable as a constant, so every subsequent step reuses the first step's
+"random" draw / timestamp — silently.  Reproducible sparse training (and the
+bit-identity contract between the prefetched and synchronous paths) requires
+all randomness to flow through ``jax.random`` keys and all timing to stay on
+the host side of the step boundary.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.astutil import ModuleInfo, dotted_name, traced_functions
+from repro.analysis import lint
+
+# canonical (alias-resolved) prefixes that are nondeterministic on the host
+_NONDET_EXACT = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "datetime.datetime.now",
+    "uuid.uuid4",
+}
+_NONDET_PREFIXES = ("numpy.random.", "random.")
+
+
+class NondeterminismInTraceRule:
+    name = "nondeterminism-in-trace"
+    description = (
+        "host wall clock or host RNG (time.*, np.random.*, random.*) inside "
+        "a jit-traced function — baked in as a trace-time constant"
+    )
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            traced = traced_functions(mod)
+            for info in traced.values():
+                for node in ast.walk(info.node):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    encl = mod.enclosing_function(node)
+                    if encl is None or encl.node is not info.node:
+                        continue
+                    name = mod.canonical(dotted_name(node.func))
+                    if name is None:
+                        continue
+                    if not (name in _NONDET_EXACT or any(
+                            name.startswith(p) for p in _NONDET_PREFIXES)):
+                        continue
+                    findings.append(lint.Finding(
+                        rule=self.name, path=mod.rel, line=node.lineno,
+                        symbol=info.qualname, detail=name,
+                        message=(
+                            f"`{name}` inside jit-traced `{info.qualname}` "
+                            "is evaluated once at trace time and baked into "
+                            "the executable — use jax.random keys / pass "
+                            "host values in as arguments"
+                        ),
+                    ))
+        return findings

@@ -1,0 +1,335 @@
+"""Layer 2 — trace audit: build real trainers, trace real steps, assert the
+hot path is clean.
+
+The AST lint (layer 1) sees what the source *says*; this layer checks what
+the compiler actually *gets*.  For every registered recsys arch x placement
+{gather, routed, cached} (and the LM serving decode step), a trainer is
+built at smoke scale, one real step is traced, and the jaxpr / lowered
+module is audited:
+
+- ``callback``:   no ``pure_callback``/``io_callback``/``debug_callback``
+                  primitives anywhere in the step jaxpr — a callback in the
+                  hot path is a per-step host round trip.
+- ``f64``:        no float64/complex128 intermediates (silent widening
+                  doubles every wire byte the paper counts).
+- ``donation``:   the pull/train/decode executables that promise donation
+                  really mark donors in the lowered module
+                  (``tf.aliasing_output`` / ``jax.buffer_donor``).
+- ``retrace``:    after the warm-up step(s), running more steps must not
+                  grow any jit cache — a growing cache is a silent
+                  recompile-per-step bug.
+- ``transfer-sync``: the inner loop survives
+                  ``jax.transfer_guard("disallow")`` — no implicit
+                  host<->device transfer per step at runtime (explicit
+                  ``jax.device_put``/``device_get`` at staging/logging
+                  boundaries are allowed by the guard).
+
+Each failed check is reported as a ``Finding`` (same baseline gating as the
+lint).  ``fit_online(..., strict_transfers=True)`` / the launcher's
+``--strict-transfers`` run the same transfer guard in production loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import traceback
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.lint import Finding
+
+PLACEMENTS = ("gather", "routed", "cached")
+
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback"}
+
+# source anchors used as Finding paths (the audit is cross-module; these
+# name the module that owns the audited executable)
+_TRAINER_PATH = "src/repro/runtime/trainer.py"
+_SERVE_PATH = "src/repro/runtime/serve.py"
+
+
+# ------------------------------------------------------------ jaxpr walking
+def iter_eqns(jaxpr) -> Iterable[Any]:
+    """All equations of a (Closed)Jaxpr, recursing into sub-jaxprs."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(v) -> Iterable[Any]:
+    if hasattr(v, "jaxpr"):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for vi in v:
+            if hasattr(vi, "jaxpr"):
+                yield vi
+
+
+def callback_primitives(jaxpr) -> List[str]:
+    return sorted({
+        e.primitive.name for e in iter_eqns(jaxpr)
+        if e.primitive.name in _CALLBACK_PRIMS
+        or "callback" in e.primitive.name
+    })
+
+
+def f64_leaks(jaxpr) -> List[str]:
+    """Primitives producing float64/complex128 outputs."""
+    import numpy as np
+    bad = set()
+    for e in iter_eqns(jaxpr):
+        for v in e.outvars:
+            aval = getattr(v, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is not None and np.dtype(dt) in (
+                    np.dtype("float64"), np.dtype("complex128")):
+                bad.add(e.primitive.name)
+    return sorted(bad)
+
+
+def donation_marked(lowered_text: str) -> bool:
+    """Donated arguments appear in the lowered module as aliased/donor
+    parameters (StableHLO spells it ``tf.aliasing_output``; newer jaxlibs
+    also emit ``jax.buffer_donor``)."""
+    return ("tf.aliasing_output" in lowered_text
+            or "jax.buffer_donor" in lowered_text)
+
+
+# ------------------------------------------------------------- audit result
+@dataclasses.dataclass
+class CheckResult:
+    target: str      # e.g. "baidu-ctr/cached" or "serve-decode"
+    check: str       # callback | f64 | donation | retrace | transfer-sync
+    ok: bool
+    detail: str = ""
+
+
+def _finding(path: str, res: CheckResult) -> Finding:
+    return Finding(
+        rule=f"trace-{res.check}", path=path, line=0,
+        symbol=res.target, detail=res.check,
+        message=f"trace audit [{res.target}] {res.check}: {res.detail}",
+    )
+
+
+# --------------------------------------------------------------- the audits
+def _build_recsys(arch: str, placement: str, prefetch: bool, n_pod: int = 2):
+    from repro.core.kstep import KStepConfig
+    from repro.runtime.factory import build_trainer
+    from repro.runtime.trainer import TrainerConfig
+
+    tcfg = TrainerConfig(
+        n_pod=n_pod, kstep=KStepConfig(k=2), placement=placement,
+        prefetch=prefetch, log_every=10_000,
+    )
+    return build_trainer(arch, tcfg, smoke=True)
+
+
+def audit_recsys(
+    arch: str, placement: str, prefetch: bool = False,
+    batch: int = 32, check_transfers: bool = True,
+) -> List[CheckResult]:
+    """Trace-audit one arch x placement trainer: jaxpr hygiene + donation on
+    the pull and train executables, then run 2k steps for the retrace guard
+    and (optionally) the transfer-guard runtime sync check."""
+    import jax
+    from repro import configs
+    from repro.data import synthetic as S
+
+    target = f"{arch}/{placement}" + ("/prefetch" if prefetch else "")
+    results: List[CheckResult] = []
+    tr = _build_recsys(arch, placement, prefetch)
+    mcfg = configs.get(arch).smoke_cfg
+    gen = S.recsys_batches(mcfg, batch=batch, seed=0)
+    b0 = next(gen)
+
+    # ---- static: jaxpr + lowered-module audits on the real step functions
+    staged = tr._stage(b0)
+    flat_ids = tr.engine.ids_from_batch(staged)
+    accum = tr.sparse_state.accum
+    pull_jaxpr = jax.make_jaxpr(
+        lambda t, a, s, ids: tr.engine.pull(t, a, s, ids)
+    )(tr.tables, accum, tr.backend_state, flat_ids)
+    wss, t2, a2, s2 = tr.engine.pull(
+        tr.tables, accum, tr.backend_state, flat_ids
+    )
+    train_args = (tr.dense, t2, a2, s2, wss, tr.pod_batch(staged),
+                  tr.opt_state, tr._overflow)
+    train_jaxpr = jax.make_jaxpr(tr._make_train(False))(*train_args)
+
+    for name, jx in (("pull", pull_jaxpr), ("train", train_jaxpr)):
+        cbs = callback_primitives(jx)
+        results.append(CheckResult(
+            target, "callback", not cbs,
+            f"{name} stage callbacks: {cbs}" if cbs else ""))
+        wides = f64_leaks(jx)
+        results.append(CheckResult(
+            target, "f64", not wides,
+            f"{name} stage f64 outputs from: {wides}" if wides else ""))
+
+    pull_txt = tr._pull.lower(
+        tr.tables, accum, tr.backend_state, flat_ids).as_text()
+    train_txt = tr._train_local.lower(*train_args).as_text()
+    for name, txt in (("pull", pull_txt), ("train", train_txt)):
+        ok = donation_marked(txt)
+        results.append(CheckResult(
+            target, "donation", ok,
+            "" if ok else (
+                f"{name} stage promises buffer donation but the lowered "
+                "module marks no donor parameters"),
+        ))
+
+    # ---- dynamic: retrace guard + runtime transfer-sync over 2k steps
+    # (the online loop is predict-then-train, so predict rides along: it
+    # must neither recompile per step nor sync implicitly)
+    k = tr.cfg.kstep.k
+    jits = {"pull": tr._pull, "train_local": tr._train_local,
+            "train_merge": tr._train_merge, "predict": tr._predict_jit}
+    b = b0
+    transfer_err: Optional[str] = None
+    for i in range(2 * k):
+        if i == k:   # warm-up done: local + merge both compiled
+            sizes = {n: j._cache_size() for n, j in jits.items()}
+        if check_transfers and i >= k and transfer_err is None:
+            try:
+                with jax.transfer_guard("disallow"):
+                    if tr._prefetcher is not None:
+                        tr.prefetch(b)
+                    tr.predict(b)
+                    tr.train_step(b)
+            except Exception as e:   # guard trip = per-step implicit sync
+                transfer_err = f"{type(e).__name__}: {e}"
+                break
+        else:
+            if tr._prefetcher is not None:
+                tr.prefetch(b)
+            tr.predict(b)
+            tr.train_step(b)
+        b = next(gen)
+    growth = {n: j._cache_size() - sizes[n] for n, j in jits.items()
+              if j._cache_size() != sizes[n]}
+    results.append(CheckResult(
+        target, "retrace", not growth,
+        f"jit caches grew after warm-up: {growth}" if growth else ""))
+    if check_transfers:
+        results.append(CheckResult(
+            target, "transfer-sync", transfer_err is None,
+            ("implicit host<->device transfer in the inner loop under "
+             f"jax.transfer_guard('disallow'): {transfer_err}")
+            if transfer_err else ""))
+    return results
+
+
+def audit_serve_decode() -> List[CheckResult]:
+    """The LM serving decode step: KV-cache donation + jaxpr hygiene +
+    retrace stability across slot refills."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import transformer as tfm
+    from repro.runtime.serve import BatchedServer, Request
+
+    target = "serve-decode"
+    results: List[CheckResult] = []
+    cfg = tfm.TransformerConfig(
+        n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+        vocab=50, dtype=jnp.float32, moe_group_size=32,
+    )
+    params = tfm.init_params(jax.random.key(0), cfg)
+    srv = BatchedServer(params, cfg, slots=2, max_len=16)
+
+    jx = jax.make_jaxpr(
+        lambda p, c, t: tfm.decode_step(p, c, t, cfg)
+    )(params, srv.cache, jnp.zeros(2, jnp.int32))
+    cbs = callback_primitives(jx)
+    results.append(CheckResult(
+        target, "callback", not cbs,
+        f"decode callbacks: {cbs}" if cbs else ""))
+    wides = f64_leaks(jx)
+    results.append(CheckResult(
+        target, "f64", not wides,
+        f"decode f64 outputs from: {wides}" if wides else ""))
+
+    txt = srv._decode.lower(
+        params, srv.cache, jnp.zeros(2, jnp.int32)).as_text()
+    ok = donation_marked(txt)
+    results.append(CheckResult(
+        target, "donation", ok,
+        "" if ok else (
+            "decode_step jit donates nothing — the KV cache is rewritten "
+            "every step and must be donated (doubles peak cache memory "
+            "otherwise)"),
+    ))
+
+    for i in range(4):
+        srv.submit(Request(prompt=np.asarray([1 + i, 2]), max_new_tokens=3))
+    srv.step()
+    size0 = srv._decode._cache_size()
+    srv.run_to_completion()
+    grew = srv._decode._cache_size() - size0
+    results.append(CheckResult(
+        target, "retrace", grew == 0,
+        f"decode jit cache grew by {grew} across slot refills" if grew
+        else ""))
+    return results
+
+
+# ----------------------------------------------------------------- the gate
+def run_trace_audit(
+    archs: Optional[Sequence[str]] = None,
+    placements: Sequence[str] = PLACEMENTS,
+    include_serve: bool = True,
+    check_transfers: bool = True,
+    log=None,
+) -> Tuple[List[Finding], List[Dict]]:
+    """Audit the full matrix; returns ``(findings, report)`` where findings
+    are the FAILED checks (baseline-gated by the CLI) and report records
+    every check for the CI artifact.
+
+    The prefetch axis shares the placement executables by construction
+    (same jits), so it is audited on one arch rather than the full matrix.
+    """
+    from repro import configs
+
+    if archs is None:
+        archs = [a for a in configs.list_archs()
+                 if configs.get(a).family == "recsys"]
+    findings: List[Finding] = []
+    report: List[Dict] = []
+
+    combos = [(a, p, False) for a in archs for p in placements]
+    if archs:
+        combos.append((archs[0], "cached", True))   # prefetch representative
+    for arch, placement, prefetch in combos:
+        target = f"{arch}/{placement}" + ("/prefetch" if prefetch else "")
+        if log:
+            log(f"trace-audit: {target}")
+        try:
+            results = audit_recsys(
+                arch, placement, prefetch, check_transfers=check_transfers)
+        except Exception:
+            results = [CheckResult(
+                target, "audit-error", False,
+                traceback.format_exc(limit=3).strip())]
+        for r in results:
+            report.append(dataclasses.asdict(r))
+            if not r.ok:
+                findings.append(_finding(_TRAINER_PATH, r))
+
+    if include_serve:
+        if log:
+            log("trace-audit: serve-decode")
+        try:
+            results = audit_serve_decode()
+        except Exception:
+            results = [CheckResult(
+                "serve-decode", "audit-error", False,
+                traceback.format_exc(limit=3).strip())]
+        for r in results:
+            report.append(dataclasses.asdict(r))
+            if not r.ok:
+                findings.append(_finding(_SERVE_PATH, r))
+    return findings, report

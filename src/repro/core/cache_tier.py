@@ -239,11 +239,16 @@ class CachedBackend:
         return new_table, new_accum, new_state
 
     def stats(self, state: CacheState) -> dict:
-        """Raw counters as python floats (call OUTSIDE jit)."""
-        return {
-            "lookups": float(state.lookups),
-            "fetched": float(state.fetched),
-            "evictions": float(state.evictions),
-            "bytes_h2d": float(state.bytes_h2d),
-            "bytes_d2h": float(state.bytes_d2h),
-        }
+        """Raw counters as python floats (call OUTSIDE jit).
+
+        One explicit ``jax.device_get`` materializes all five scalars in a
+        single deliberate d2h hop — strict-transfers-clean, where per-field
+        ``float()`` would be five implicit syncs."""
+        got = jax.device_get({
+            "lookups": state.lookups,
+            "fetched": state.fetched,
+            "evictions": state.evictions,
+            "bytes_h2d": state.bytes_h2d,
+            "bytes_d2h": state.bytes_d2h,
+        })
+        return {k: float(v) for k, v in got.items()}

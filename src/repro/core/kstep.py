@@ -73,7 +73,18 @@ def pod_replicate(tree: Pytree, n_pod: int) -> Pytree:
 
 
 def pod_slice(tree: Pytree, i: int = 0) -> Pytree:
-    """Extract one pod's replica (e.g. for eval / checkpoint export)."""
+    """Extract one pod's replica (e.g. for eval / checkpoint export).
+
+    Runs under jit: an eager ``x[i]`` dispatches dynamic_slice with its
+    start index shipped host->device on every call, which serializes the
+    per-step predict path (and trips ``transfer_guard('disallow')``).
+    Static ``i`` bakes the slice into the compiled executable instead.
+    """
+    return _pod_slice_jit(tree, i)
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=())
+def _pod_slice_jit(tree: Pytree, i: int) -> Pytree:
     return jax.tree.map(lambda x: x[i], tree)
 
 

@@ -86,6 +86,11 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--merge-delay", type=int, default=0,
                     help="apply k-step merges N boundaries late "
                          "(DenseTrainer archs; 0 = synchronous merges)")
+    ap.add_argument("--strict-transfers", action="store_true",
+                    help="fail fast on IMPLICIT host<->device transfers in "
+                         "the online hot path (jax.transfer_guard; recsys "
+                         "archs). Deliberate crossings stay explicit "
+                         "(device_put staging, device_get metrics).")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--smoke", action="store_true", default=True,
@@ -172,7 +177,8 @@ def main():
     if args.ckpt_dir and tr.resume():
         print(f"resumed at step {tr.step_num}")
     gen = S.recsys_batches(cfg, batch=args.batch, seed=1)
-    hist, online_auc = fit_online(tr, gen, args.steps, window=20, log=print)
+    hist, online_auc = fit_online(tr, gen, args.steps, window=20, log=print,
+                                  strict_transfers=args.strict_transfers)
     loss = hist[-1]["loss"] if hist else float("nan")
     stats = tr.sparse_metrics()
     cache = (

@@ -21,6 +21,14 @@ import jax.numpy as jnp
 from repro.models.common import he_init, shard_hint, softmax_cross_entropy
 
 
+def _eps(params, cfg: "GINConfig") -> jnp.ndarray:
+    """Per-layer eps vector; GIN-0 (``train_eps=False``) stops its gradient
+    so eps stays at init while the params pytree keeps a stable structure
+    (checkpoints/optimizer states are layout-identical either way)."""
+    eps = params["eps"]
+    return eps if cfg.train_eps else jax.lax.stop_gradient(eps)
+
+
 @dataclasses.dataclass(frozen=True)
 class GINConfig:
     name: str = "gin"
@@ -28,7 +36,9 @@ class GINConfig:
     d_in: int = 1433
     d_hidden: int = 64
     n_classes: int = 7
-    train_eps: bool = True        # eps=learnable
+    train_eps: bool = True        # eps=learnable; False freezes eps at its
+                                  # init (GIN-0): the forward stops the eps
+                                  # gradient so the optimizer never moves it
     readout: str = "node"         # node | graph (segment readout over graph_id)
     dtype: Any = jnp.float32
     # §Perf knobs: node_shard=False replicates the node state in-pod (edges
@@ -73,6 +83,7 @@ def forward(
     h = x.astype(cfg.dtype)
     node_spec = (("pod", "data"), None) if cfg.node_shard else (None, None)
     mdt = cfg.message_dtype or cfg.dtype
+    eps = _eps(params, cfg)
     for i, lp in enumerate(params["layers"]):
         pre = cfg.pre_project and h.shape[-1] > lp["w1"].shape[-1]
         src_feat = (h @ lp["w1"]).astype(mdt) if pre else h.astype(mdt)
@@ -83,11 +94,11 @@ def forward(
         agg = shard_hint(agg, *node_spec)
         if pre:
             # W1((1+eps)h + sum_j h_j) == (1+eps)(h W1) + sum_j (h_j W1)
-            z = ((1.0 + params["eps"][i]) * src_feat.astype(jnp.float32)
+            z = ((1.0 + eps[i]) * src_feat.astype(jnp.float32)
                  + agg.astype(jnp.float32)).astype(cfg.dtype)
             z = jax.nn.relu(z + lp["b1"])
         else:
-            z = ((1.0 + params["eps"][i]) * h.astype(jnp.float32)
+            z = ((1.0 + eps[i]) * h.astype(jnp.float32)
                  + agg.astype(jnp.float32)).astype(cfg.dtype)
             z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
         h = jax.nn.relu(z @ lp["w2"] + lp["b2"])
@@ -124,9 +135,10 @@ def loss_fn(params, batch, cfg: GINConfig) -> jnp.ndarray:
 def dense_reference_forward(params, x, adj: jnp.ndarray, cfg: GINConfig):
     """Oracle using a dense adjacency matrix — tests only."""
     h = x.astype(cfg.dtype)
+    eps = _eps(params, cfg)
     for i, lp in enumerate(params["layers"]):
         agg = adj.T.astype(jnp.float32) @ h.astype(jnp.float32)
-        z = ((1.0 + params["eps"][i]) * h.astype(jnp.float32) + agg).astype(cfg.dtype)
+        z = ((1.0 + eps[i]) * h.astype(jnp.float32) + agg).astype(cfg.dtype)
         z = jax.nn.relu(z @ lp["w1"] + lp["b1"])
         h = jax.nn.relu(z @ lp["w2"] + lp["b2"])
     return h @ params["out"]

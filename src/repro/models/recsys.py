@@ -295,11 +295,12 @@ class TwoTowerConfig:
 
 
 def two_tower_table_specs(cfg: TwoTowerConfig) -> Dict[str, TableSpec]:
-    # user history + positive item share the item table, (B, hist_len + 1)
+    # user history + positive item share the item table, (B, hist_len + 1);
+    # the user-history bag pools by the spec's combiner (mean over the mask)
     return {
         "items": TableSpec(
             "items", rows=cfg.item_vocab, dim=cfg.embed_dim,
-            id_field=("user_ids", "item_id"),
+            combiner="mean", id_field=("user_ids", "item_id"),
         )
     }
 
@@ -316,7 +317,9 @@ def two_tower_embed_batch(tables, batch, cfg: TwoTowerConfig):
     flat = batch["user_ids"].reshape(-1)
     seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), T)
     w = batch["user_mask"].reshape(-1)
-    user = embedding_bag(tables["items"], flat, seg, num_bags=B, weights=w, combiner="mean")
+    spec = two_tower_table_specs(cfg)["items"]
+    user = embedding_bag(tables["items"], flat, seg, num_bags=B, weights=w,
+                         combiner=spec.combiner)
     item = jnp.take(tables["items"], batch["item_id"], axis=0)
     return {"user": user, "item": item}
 
@@ -375,6 +378,7 @@ def two_tower_embed_from_workings(cfg: TwoTowerConfig):
     both served from the pulled item working set (``invs["items"]`` reshapes
     to (B, hist_len + 1); see ``two_tower_table_specs``)."""
     H = cfg.user_hist_len
+    combiner = two_tower_table_specs(cfg)["items"].combiner
 
     def embed(workings, invs, batch):
         B = batch["user_ids"].shape[0]
@@ -382,7 +386,7 @@ def two_tower_embed_from_workings(cfg: TwoTowerConfig):
         seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), H)
         user = EmbeddingEngine.bag_from_working(
             workings["items"], inv[:, :H].reshape(-1), seg, num_bags=B,
-            weights=batch["user_mask"].reshape(-1), combiner="mean",
+            weights=batch["user_mask"].reshape(-1), combiner=combiner,
         )
         item = jnp.take(workings["items"], inv[:, H], axis=0)
         return {"user": user, "item": item}
@@ -448,7 +452,8 @@ def ctr_embed_batch(tables, batch, cfg: CTRConfig) -> jnp.ndarray:
            + batch["field_ids"]).reshape(-1)
     w = batch["mask"].reshape(-1)
     bags = embedding_bag(
-        tables["sparse"], flat, seg, num_bags=B * cfg.n_fields, weights=w
+        tables["sparse"], flat, seg, num_bags=B * cfg.n_fields, weights=w,
+        combiner=ctr_table_specs(cfg)["sparse"].combiner,
     )
     return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
 
@@ -461,16 +466,20 @@ def ctr_embed_from_workings(cfg: CTRConfig):
     deduplicated rows, ``invs["sparse"]`` maps id slots to working rows), so
     autodiff lands gradients on the compact pulled rows — Algorithm 1's
     pull path.  This is the one canonical copy used by the trainer factory,
-    examples, and benchmarks.
+    examples, and benchmarks.  Pooling honors ``TableSpec.combiner`` (sum
+    for the paper's CTR model — masked rows contribute zero).
     """
+    combiner = ctr_table_specs(cfg)["sparse"].combiner
 
     def embed(workings, invs, batch):
         B, _ = batch["ids"].shape
         seg = (jnp.arange(B, dtype=jnp.int32)[:, None] * cfg.n_fields
                + batch["field_ids"]).reshape(-1)
-        emb = jnp.take(workings["sparse"], invs["sparse"], axis=0) \
-            * batch["mask"].reshape(-1)[:, None]
-        bags = jax.ops.segment_sum(emb, seg, num_segments=B * cfg.n_fields)
+        bags = EmbeddingEngine.bag_from_working(
+            workings["sparse"], invs["sparse"], seg,
+            num_bags=B * cfg.n_fields, weights=batch["mask"].reshape(-1),
+            combiner=combiner,
+        )
         return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
 
     return embed

@@ -9,7 +9,16 @@ learned from.  Works with any trainer the factory builds:
     the predict/train pair (a no-op unless ``TrainerConfig.prefetch``;
     predictions legally read the in-flight pull's pass-through state),
   - unlabeled streams (two-tower retrieval) skip the scoring side and train
-    only — ``fit_online`` then returns ``auc=None``.
+    only — ``fit_online`` then returns ``auc=None``,
+  - ``strict_transfers=True`` (launcher: ``--strict-transfers``) wraps each
+    predict/train pair in ``jax.transfer_guard("disallow")``: any IMPLICIT
+    host<->device transfer in the hot path raises immediately with the
+    offending op — the runtime arm of the ``repro.analysis`` sync audit.
+    Deliberate crossings stay legal because they are explicit: batch staging
+    uses ``jax.device_put``, score/loss materialization uses
+    ``jax.device_get``, and checkpoint writes run in a transfer-allowed
+    section.  Logging boundaries (``history_record``) run OUTSIDE the guard
+    — materializing the interval's metrics there is the contract.
 
 History records land in ``trainer.history`` exactly like ``fit``'s, plus an
 ``auc`` key for labeled streams.
@@ -17,8 +26,11 @@ History records land in ``trainer.history`` exactly like ``fit``'s, plus an
 
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Iterator, Optional, Tuple
+
+import jax
 
 from repro.runtime.metrics import StreamingAUC
 from repro.runtime.trainer import history_record
@@ -44,12 +56,15 @@ def fit_online(
     steps: int,
     window: int = 30,
     log=None,
+    strict_transfers: bool = False,
 ) -> Tuple[list, Optional[float]]:
     """Predict-then-train ``steps`` batches; returns ``(history, auc)``.
 
     ``auc`` is the streaming AUC over the last ``window`` scored batches
     (``None`` when the stream carries no labels).  ``log`` (e.g. ``print``)
     receives one formatted line per ``TrainerConfig.log_every`` boundary.
+    ``strict_transfers`` fails fast on any implicit host<->device transfer
+    inside the predict/train hot path (debug gate; see module docstring).
     """
     meter = StreamingAUC(window=window)
     scored = False
@@ -57,6 +72,8 @@ def fit_online(
     start_step = trainer.step_num
     t0 = time.perf_counter()
     prefetch = getattr(trainer, "prefetch", None)
+    guard = ((lambda: jax.transfer_guard("disallow")) if strict_transfers
+             else contextlib.nullcontext)
 
     def _record():
         rec = history_record(trainer, loss, t0)   # fit's record schema
@@ -71,12 +88,16 @@ def fit_online(
             b = next(batches)
         except StopIteration:
             break   # finite stream shorter than steps: finish cleanly
-        if prefetch is not None:
-            prefetch(b)
-        if "label" in b:
-            meter.update(b["label"], trainer.predict(b))
+        with guard():
+            if prefetch is not None:
+                prefetch(b)
+            scores = trainer.predict(b) if "label" in b else None
+            loss = trainer.train_step(b)
+        if scores is not None:
+            # meter update happens OUTSIDE the guard: predict() already
+            # materialized scores host-side via an explicit device_get
+            meter.update(b["label"], scores)
             scored = True
-        loss = trainer.train_step(b)
         if trainer.step_num % trainer.cfg.log_every == 0:
             _record()
     if loss is not None and (

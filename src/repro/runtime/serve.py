@@ -35,7 +35,13 @@ class BatchedServer:
         self.max_len = max_len
         self.eos_id = eos_id
         self.cache = tfm.init_cache(cfg, slots, max_len)
-        self._decode = jax.jit(lambda p, c, t: tfm.decode_step(p, c, t, cfg))
+        # The KV cache is rewritten every decode step and the old handle is
+        # dropped on reassignment — donate it, or every step materializes a
+        # second full cache next to the live one (2x peak KV memory).
+        self._decode = jax.jit(
+            lambda p, c, t: tfm.decode_step(p, c, t, cfg),
+            donate_argnums=(1,),
+        )
         self.active: List[Optional[Request]] = [None] * slots
         self.remaining = np.zeros(slots, np.int64)
         self.pending: List[Request] = []

@@ -116,9 +116,14 @@ def next_pow2(n) -> int:
 
 
 def pod_batch(batch: Dict[str, np.ndarray], n_pod: int) -> Dict[str, jnp.ndarray]:
-    """Split a global batch into per-pod shards (leading pod dim)."""
+    """Split a global batch into per-pod shards (leading pod dim).
+
+    Host batches are staged with EXPLICIT ``jax.device_put`` (a no-op for
+    already-device leaves) so the loop survives
+    ``jax.transfer_guard("disallow")`` — the strict-transfers contract:
+    every host->device crossing in the hot path is deliberate."""
     def f(x):
-        x = jnp.asarray(x)
+        x = jax.device_put(x)
         return x.reshape((n_pod, x.shape[0] // n_pod) + x.shape[1:])
     return jax.tree.map(f, batch)
 
@@ -145,7 +150,7 @@ def history_record(trainer, loss, t0: float) -> dict:
     the record schema shared by ``fit`` and ``repro.runtime.online``:
     step/loss/sec plus the trainer's PER-INTERVAL sparse metrics
     (``advance=True``: recording moves the interval baseline forward)."""
-    rec = {"step": trainer.step_num, "loss": float(loss),
+    rec = {"step": trainer.step_num, "loss": float(jax.device_get(loss)),
            "sec": time.perf_counter() - t0}
     sparse_metrics = getattr(trainer, "sparse_metrics", None)
     if sparse_metrics is not None:
@@ -231,8 +236,18 @@ class DenseTrainer:
         # merge_delay > 0: queue of (snapshot, in-flight merged average)
         self._pending_merges: collections.deque = collections.deque()
         if cfg.merge_delay > 0:
-            self._delayed_collective = jax.jit(self.opt.delayed_merge_collective)
-            self._delayed_apply = jax.jit(KStepAdam.apply_delayed_merge)
+            # donation decisions (undonated-hot-jit contract): the collective
+            # keeps params alive (snapshot + local steps still read them) but
+            # consumes the opt_state it replaces; the delayed apply consumes
+            # all three — params are reassigned from its output, and the
+            # snapshot/merged pair is popped from the queue (snapshot is a
+            # real copy, so no donate-twice aliasing with params).
+            self._delayed_collective = jax.jit(
+                self.opt.delayed_merge_collective, donate_argnums=(1,)
+            )
+            self._delayed_apply = jax.jit(
+                KStepAdam.apply_delayed_merge, donate_argnums=(0, 1, 2)
+            )
         self.history: list = []
 
     def _make_step(self, merge: bool):
@@ -293,10 +308,13 @@ class DenseTrainer:
         return tree
 
     def save(self):
-        self.ckpt.save(
-            self.step_num, self._ckpt_tree(),
-            meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k},
-        )
+        # checkpointing deliberately materializes device state host-side —
+        # an allow-listed section under strict-transfers runs
+        with jax.transfer_guard("allow"):
+            self.ckpt.save(
+                self.step_num, self._ckpt_tree(),
+                meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k},
+            )
 
     def resume(self) -> bool:
         if not self.ckpt:
@@ -377,6 +395,7 @@ class HybridTrainer:
         # device-resident cumulative overflow counter (materialized only at
         # logging/checkpoint boundaries — the hot path never syncs the host)
         self._overflow = jnp.zeros((), jnp.int32)
+        self._commit_to_mesh()
         self._metrics_prev: Dict[str, float] = {}  # counter snapshot at last log
         self._metrics_base_step = 0   # step the counters were last re-zeroed at
         self._embed = embed_fn
@@ -402,6 +421,11 @@ class HybridTrainer:
         self._prefetcher = (
             PrefetchingEngine(engine, donate=donate) if cfg.prefetch else None
         )
+        # inference path: pull + embed + score compiled as one stage so the
+        # per-request loop dispatches a single executable (an eager pull
+        # ships scalar operands host->device on every call).  Nothing is
+        # donated — predict must not consume the committed training state.
+        self._predict_jit = jax.jit(self._predict_traced, donate_argnums=())
         self.history: list = []
 
     def _make_train(self, merge: bool):
@@ -447,8 +471,36 @@ class HybridTrainer:
     def pod_batch(self, batch):
         return pod_batch(batch, self.n_pod)
 
+    def _commit_to_mesh(self):
+        """Commit the trainer state to the mesh's replicated sharding.
+
+        Mesh-backed steps (routed placement) emit every state leaf with
+        ``NamedSharding(mesh, P())``; eagerly-initialized (or freshly
+        restored) state is uncommitted ``SingleDeviceSharding``, so without
+        this the FIRST train executable is compiled for a signature no later
+        step ever uses again — a full silent double-compile of the largest
+        jit (caught by the trace audit's retrace check).
+
+        The backend's internal mesh counts too: ``RoutedBackend`` builds one
+        when none is passed, and its shard_maps stamp that mesh's sharding
+        on every output flowing through the train jit."""
+        mesh = self.mesh if self.mesh is not None else getattr(
+            self.engine.backend, "mesh", None)
+        if mesh is None:
+            return
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        put = lambda tree: jax.device_put(tree, rep)
+        self.dense = put(self.dense)
+        self.tables = put(self.tables)
+        self.opt_state = put(self.opt_state)
+        self.sparse_state = put(self.sparse_state)
+        self.backend_state = put(self.backend_state)
+        self._overflow = put(self._overflow)
+
     def _stage(self, batch):
-        return jax.tree.map(jnp.asarray, batch)
+        # explicit h2d staging: jax.device_put is transfer-guard-exempt
+        # (deliberate), where jnp.asarray would count as an implicit sync
+        return jax.device_put(batch)
 
     def prefetch(self, batch) -> bool:
         """Speculatively dispatch ``batch``'s working-set pull (the Fig. 5
@@ -536,8 +588,9 @@ class HybridTrainer:
     def overflow_dropped(self) -> int:
         """Cumulative unserved pull/push requests, across restarts (the
         counter is checkpointed) — materializes the device-resident scalar
-        (read at logging boundaries, not per step)."""
-        return int(self._overflow)
+        (read at logging boundaries, not per step; explicit device_get keeps
+        strict-transfers runs clean)."""
+        return int(jax.device_get(self._overflow))
 
     def predict(self, batch) -> np.ndarray:
         """Inference with pod-0's dense replica (online predict-then-train).
@@ -548,15 +601,21 @@ class HybridTrainer:
         the pull fetches from the authoritative host rows).  Valid while a
         prefetched pull is in flight: the pass-through trees it reads are
         logically identical to the committed state."""
-        batch = jax.tree.map(jnp.asarray, batch)
-        dense0 = pod_slice(self.dense, 0)
-        wss, _, _, _ = self.engine.pull_batch(
-            self.tables, self.sparse_state.accum, self.backend_state, batch
+        batch = self._stage(batch)
+        scores = self._predict_jit(
+            self.dense, self.tables, self.sparse_state.accum,
+            self.backend_state, batch,
         )
+        # scores are consumed host-side (streaming AUC): explicit d2h
+        return np.asarray(jax.device_get(scores))
+
+    def _predict_traced(self, dense, tables, accum, bstate, batch):
+        dense0 = pod_slice(dense, 0)
+        wss, _, _, _ = self.engine.pull_batch(tables, accum, bstate, batch)
         workings = {n: ws.rows for n, ws in wss.items()}
         invs = {n: ws.inverse for n, ws in wss.items()}
         emb = self._embed(workings, invs, batch)
-        return np.asarray(self._loss(dense0, emb, batch, predict=True))
+        return self._loss(dense0, emb, batch, predict=True)
 
     def sparse_metrics(self, advance: bool = False) -> Dict[str, float]:
         """Sparse-path health for trainer history/monitoring, PER INTERVAL
@@ -570,7 +629,7 @@ class HybridTrainer:
         ``advance=True`` (what ``fit``'s logger passes) moves the interval
         baseline forward, so external polls never eat a window's deltas out
         from under the history records."""
-        total = int(self._overflow)
+        total = int(jax.device_get(self._overflow))
         counters = self.engine.cache_counters(self.backend_state)
         prev = self._metrics_prev
         m: Dict[str, float] = {
@@ -658,11 +717,14 @@ class HybridTrainer:
                 "checkpoints capture committed state only; save at step "
                 "boundaries (as fit/train_step do) before prefetching"
             )
-        self.ckpt.save(
-            self.step_num, self._ckpt_tree(),
-            meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k,
-                  **self._backend_sig()},
-        )
+        # checkpointing deliberately materializes device state host-side —
+        # an allow-listed section under strict-transfers runs
+        with jax.transfer_guard("allow"):
+            self.ckpt.save(
+                self.step_num, self._ckpt_tree(),
+                meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k,
+                      **self._backend_sig()},
+            )
 
     def resume(self) -> bool:
         if not self.ckpt:
@@ -710,8 +772,9 @@ class HybridTrainer:
         # post-resume deltas (totals keep the whole-run baseline, matching
         # the cache counters restored inside bstate)
         self._overflow = jnp.asarray(tree.get("overflow", 0), jnp.int32)
+        self._commit_to_mesh()   # restored leaves are uncommitted host reads
         self._metrics_prev = {
-            "overflow": int(self._overflow),
+            "overflow": int(jax.device_get(self._overflow)),
             **self.engine.cache_counters(self.backend_state),
         }
         self._metrics_base_step = step

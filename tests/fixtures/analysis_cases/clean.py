@@ -1,0 +1,28 @@
+"""Clean fixture: NO rule may fire anywhere in this module (the
+false-positive guard for the whole rule set)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CleanConfig:
+    width: int = 4
+    depth: int = 2
+
+
+@jax.jit
+def traced(x):
+    # device-only math, jnp.asarray is a DEVICE placement (not numpy's)
+    return jnp.sum(jnp.asarray(x)) * 2.0
+
+
+def host_boundary(x, cfg: CleanConfig):
+    # host side: float()/device_get at the logging boundary are legal
+    return float(jax.device_get(traced(x))) + cfg.width + cfg.depth
+
+
+def make_scaled(fn):
+    # jit OUTSIDE a hot-path module: no donation decision required
+    return jax.jit(fn, static_argnums=(1,))

@@ -1,0 +1,15 @@
+"""R4 fixture: hot-path jit call sites (path matches */runtime/trainer.py).
+
+Undonated jits are findings; an explicit ``donate_argnums=(...)`` OR an
+explicit ``donate_argnums=()`` (a considered decision to donate nothing)
+passes.
+"""
+import jax
+
+
+def make_steps(fn):
+    undonated = jax.jit(fn)               # LINT: undonated-hot-jit
+    lam = jax.jit(lambda x: x + 1)        # LINT: undonated-hot-jit
+    donated = jax.jit(fn, donate_argnums=(0,))
+    explicit_none = jax.jit(fn, donate_argnums=())
+    return undonated, lam, donated, explicit_none

@@ -1,0 +1,20 @@
+"""R2 fixture: a *Config dataclass with one field nothing reads."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class WidgetConfig:
+    used_knob: int = 1
+    fetched_knob: str = "a"
+    dead_knob: float = 0.5                # LINT: dead-config-knob
+    _private_state: int = 0               # leading underscore: never checked
+
+
+def consume(cfg: WidgetConfig) -> int:
+    # attribute load and literal getattr both count as reads
+    return cfg.used_knob + len(getattr(cfg, "fetched_knob"))
+
+
+def construct_only() -> WidgetConfig:
+    # constructor keywords are WRITES — setting dead_knob is not reading it
+    return WidgetConfig(dead_knob=2.0)

@@ -1,0 +1,37 @@
+"""R1 fixture: host-synchronizing calls inside traced functions.
+
+Parsed by the lint tests, NEVER imported — the violations are deliberate.
+Each offending line carries a marker comment naming the rule; the test
+asserts the rule reports exactly the marked lines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decorated_step(x):
+    y = jnp.sum(x)
+    return float(y)                       # LINT: host-sync-in-jit
+
+
+def _make_step(scale):
+    def step(x):
+        v = x.item()                      # LINT: host-sync-in-jit
+        arr = np.asarray(x)               # LINT: host-sync-in-jit
+        return v * scale + arr.sum()
+
+    return step
+
+
+def helper(x):
+    jax.device_get(x)                     # LINT: host-sync-in-jit
+    return x.block_until_ready()          # LINT: host-sync-in-jit
+
+
+step_fn = jax.jit(helper)
+
+
+def host_side_is_fine(x):
+    # NOT traced: float()/device_get at a logging boundary must not fire
+    return float(jax.device_get(x))

@@ -1,0 +1,19 @@
+"""R3 fixture: wall clock / host RNG inside a traced function."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def noisy_step(x):
+    t = time.time()                       # LINT: nondeterminism-in-trace
+    noise = np.random.normal()            # LINT: nondeterminism-in-trace
+    jitter = random.random()              # LINT: nondeterminism-in-trace
+    return x * t + noise + jitter
+
+
+def host_loop(n):
+    # NOT traced: host-side timing/RNG is legal
+    return [time.time() + random.random() for _ in range(n)]

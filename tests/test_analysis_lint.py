@@ -1,0 +1,178 @@
+"""Layer-1 lint: each rule catches its seeded fixture violation at the exact
+file:line, stays silent on the clean fixture, and the baseline + CLI gate
+behave (new findings fail, baselined findings pass, stale entries report)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.baseline import FILL_ME, Baseline
+from repro.analysis.lint import Finding, Project, run_lint, summarize
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis_cases"
+
+
+@pytest.fixture(scope="module")
+def findings():
+    return run_lint(Project(FIXTURES))
+
+
+def marked_lines(rel: str, rule: str):
+    """1-based lines carrying a ``# LINT: <rule>`` marker in a fixture."""
+    text = (FIXTURES / rel).read_text()
+    return sorted(
+        i for i, line in enumerate(text.splitlines(), 1)
+        if f"LINT: {rule}" in line
+    )
+
+
+def lines_for(findings, rel: str, rule: str):
+    return sorted(f.line for f in findings if f.path == rel and f.rule == rule)
+
+
+# ------------------------------------------------------- rule-by-rule exact
+@pytest.mark.parametrize("rel,rule", [
+    ("viol_host_sync.py", "host-sync-in-jit"),
+    ("viol_dead_knob.py", "dead-config-knob"),
+    ("viol_nondet.py", "nondeterminism-in-trace"),
+    ("hot/runtime/trainer.py", "undonated-hot-jit"),
+])
+def test_rule_catches_exact_lines(findings, rel, rule):
+    expected = marked_lines(rel, rule)
+    assert expected, f"fixture {rel} lost its LINT markers"
+    assert lines_for(findings, rel, rule) == expected
+
+
+def test_host_sync_details_and_symbols(findings):
+    by_detail = {
+        f.detail: f for f in findings
+        if f.path == "viol_host_sync.py" and f.rule == "host-sync-in-jit"
+    }
+    assert set(by_detail) == {
+        "float()", ".item()", "numpy.asarray", "jax.device_get",
+        ".block_until_ready()",
+    }
+    # symbol is the qualname of the traced function owning the call
+    assert by_detail["float()"].symbol == "decorated_step"
+    assert by_detail[".item()"].symbol == "_make_step.<locals>.step"
+    assert by_detail["jax.device_get"].symbol == "helper"
+
+
+def test_host_side_float_not_flagged(findings):
+    # float()/device_get OUTSIDE traces (logging boundaries) must not fire
+    assert not [
+        f for f in findings
+        if f.path == "viol_host_sync.py" and f.symbol == "host_side_is_fine"
+    ]
+
+
+def test_dead_knob_names_field(findings):
+    (f,) = [f for f in findings if f.rule == "dead-config-knob"]
+    assert f.symbol == "WidgetConfig.dead_knob"
+    assert f.detail == "dead_knob"
+    # used/fetched knobs are read (attribute load / getattr) -> not flagged;
+    # the constructor keyword in construct_only() is a write, not a read
+
+
+def test_nondet_details(findings):
+    details = {
+        f.detail for f in findings
+        if f.path == "viol_nondet.py" and f.rule == "nondeterminism-in-trace"
+    }
+    assert details == {"time.time", "numpy.random.normal", "random.random"}
+
+
+def test_donation_rule_scoped_to_hot_modules(findings):
+    hot = [f for f in findings if f.rule == "undonated-hot-jit"]
+    # both undonated jits in the hot fixture, nothing elsewhere (clean.py's
+    # jit lives outside the hot-module globs)
+    assert {f.path for f in hot} == {"hot/runtime/trainer.py"}
+    assert sorted(f.detail for f in hot) == ["jit(<lambda>)", "jit(fn)"]
+
+
+def test_clean_fixture_no_false_positives(findings):
+    assert not [f for f in findings if f.path == "clean.py"]
+
+
+def test_summarize_counts(findings):
+    s = summarize(findings)
+    assert s["host-sync-in-jit"] == 5
+    assert s["dead-config-knob"] == 1
+    assert s["nondeterminism-in-trace"] == 3
+    assert s["undonated-hot-jit"] == 2
+
+
+# ------------------------------------------------------------------ baseline
+def _finding(rule="r", path="p.py", line=3, symbol="s", detail="d"):
+    return Finding(rule=rule, path=path, line=line, symbol=symbol,
+                   detail=detail, message="m")
+
+
+def test_baseline_split_and_line_drift(tmp_path):
+    bl = Baseline.load(tmp_path / "b.json")
+    bl.update([_finding(line=3)])
+    # same key at a DIFFERENT line still matches (keys carry no line)
+    new, old, stale = bl.split([_finding(line=99)])
+    assert not new and len(old) == 1 and not stale
+
+
+def test_baseline_new_and_stale(tmp_path):
+    bl = Baseline.load(tmp_path / "b.json")
+    bl.update([_finding(detail="old")])
+    new, old, stale = bl.split([_finding(detail="fresh")])
+    assert [f.detail for f in new] == ["fresh"]
+    assert not old
+    assert stale == [("r", "p.py", "s", "old")]
+
+
+def test_baseline_update_preserves_justifications(tmp_path):
+    path = tmp_path / "b.json"
+    bl = Baseline.load(path)
+    assert bl.update([_finding()]) == 1          # one justification missing
+    data = json.loads(path.read_text())
+    data["entries"][0]["justification"] = "accepted: frozen hot loop"
+    path.write_text(json.dumps(data))
+    bl = Baseline.load(path)
+    assert bl.update([_finding(), _finding(detail="d2")]) == 1
+    kept = {e["detail"]: e["justification"]
+            for e in json.loads(path.read_text())["entries"]}
+    assert kept["d"] == "accepted: frozen hot loop"
+    assert kept["d2"] == FILL_ME
+
+
+# ----------------------------------------------------------------- CLI gate
+def test_cli_gate_fail_then_baseline_then_pass(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    bl = tmp_path / "baseline.json"
+    argv = ["--lint", "--src", str(FIXTURES), "--baseline", str(bl), "-q"]
+    assert main(argv) == 1                       # unbaselined findings fail
+    assert "FAIL" in capsys.readouterr().out
+    assert main(argv + ["--update-baseline"]) == 0
+    assert bl.exists()
+    assert main(argv) == 0                       # fully baselined passes
+    assert "all baselined" in capsys.readouterr().out
+
+
+def test_cli_report_artifact(tmp_path):
+    from repro.analysis.__main__ import main
+
+    bl = tmp_path / "baseline.json"
+    rep = tmp_path / "report.json"
+    main(["--lint", "--src", str(FIXTURES), "--baseline", str(bl),
+          "--report", str(rep), "-q"])
+    data = json.loads(rep.read_text())
+    assert data["new"] and not data["baselined"]
+    assert {f["rule"] for f in data["new"]} == {
+        "host-sync-in-jit", "dead-config-knob", "nondeterminism-in-trace",
+        "undonated-hot-jit",
+    }
+
+
+def test_repo_src_is_lint_clean():
+    """The gate the CI job enforces: the real source tree has no findings
+    (everything previously flagged was fixed, not baselined)."""
+    import repro
+
+    src = Path(repro.__file__).resolve().parent
+    assert run_lint(Project(src)) == []

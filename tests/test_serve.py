@@ -47,6 +47,17 @@ def test_server_greedy_matches_manual_decode():
     assert r.out == outs
 
 
+def test_decode_donates_kv_cache():
+    """Regression (found by repro.analysis): the KV cache is rewritten every
+    decode step and the old handle dropped on reassignment, so the decode
+    jit must mark arg 1 as a donor — otherwise every step materializes a
+    second full cache and peak serving memory doubles."""
+    cfg, p = make_model()
+    srv = BatchedServer(p, cfg, slots=2, max_len=16)
+    txt = srv._decode.lower(p, srv.cache, jnp.zeros(2, jnp.int32)).as_text()
+    assert "tf.aliasing_output" in txt or "jax.buffer_donor" in txt
+
+
 def test_server_eos_frees_slot():
     cfg, p = make_model()
     # find the greedy first token for a given prompt, then use it as EOS
