@@ -27,6 +27,7 @@ def main() -> None:
         fig9_kstep_auc,
         fig10_comm_ratio,
         fig_cache_hier,
+        roofline,
         table1_hashing,
     )
 
@@ -39,6 +40,9 @@ def main() -> None:
         "fig9": lambda: fig9_kstep_auc.run(steps=steps),
         "fig10": lambda: fig10_comm_ratio.run(),
         "fig_cache": lambda: fig_cache_hier.run(steps=steps),
+        # sparse hot-path fused-vs-unfused referee; also writes
+        # BENCH_roofline.json (the perf baseline later PRs diff against)
+        "roofline_measure": lambda: roofline.measure_rows(quick=args.quick),
     }
 
     print("name,us_per_call,derived")

@@ -82,15 +82,24 @@ class CachedBackend:
         bit-identical to ``GatherBackend``.
     decay: multiplicative LFU frequency decay per pull (1.0 = plain LFU;
         lower values forget stale heat faster — drifting Zipf heads).
+    fused: serve the working-set row gather and the push through the fused
+        cache-tier Pallas kernels (``kernels.ops.gather_rows_cached`` /
+        ``sparse_adagrad_cached_apply``): the id→slot indirection is folded
+        into the kernel's index stream, so the (capacity, dim) data moves in
+        ONE indexed pass instead of slot-translate-then-gather — and the
+        push applies AdaGrad straight into the aliased cache buffers.
+        Bit-identical to the unfused path (same pinned row math).
     """
 
-    def __init__(self, cache_rows: int, decay: float = 0.95):
+    def __init__(self, cache_rows: int, decay: float = 0.95,
+                 fused: bool = False):
         if cache_rows <= 0:
             raise ValueError(f"cache_rows must be positive, got {cache_rows}")
         if not 0.0 < decay <= 1.0:
             raise ValueError(f"decay must be in (0, 1], got {decay}")
         self.cache_rows = int(cache_rows)
         self.decay = float(decay)
+        self.fused = bool(fused)
 
     # tables stay in logical row layout; the hierarchy lives in CacheState
     def prepare(self, table: jnp.ndarray) -> jnp.ndarray:
@@ -191,7 +200,13 @@ class CachedBackend:
         slot_now = id_slot[uids]
         freq = freq.at[slot_now].add(counts, mode="drop")
 
-        wrows = jnp.take(cache_rows, slot_now, axis=0)
+        if self.fused:
+            from repro.kernels import ops
+
+            # id→slot indirection folded into the kernel's index stream
+            wrows = ops.gather_rows_cached(cache_rows, id_slot, uids)
+        else:
+            wrows = jnp.take(cache_rows, slot_now, axis=0)
         rb = self._row_bytes(table)
         new_state = CacheState(
             slot_uid=slot_uid, id_slot=id_slot, rows=cache_rows,
@@ -214,9 +229,18 @@ class CachedBackend:
         bit-identical arithmetic by construction."""
         uids = ws.uids
         slot = state.id_slot[uids]          # all cached after the pull
-        new_rows, new_accum = opt.apply_rows(
-            state.rows, state.accum, slot, row_grads[: uids.shape[0]]
-        )
+        if self.fused:
+            from repro.kernels import ops
+
+            new_rows, new_accum = ops.sparse_adagrad_cached_apply(
+                state.rows, state.accum, state.id_slot, uids,
+                row_grads[: uids.shape[0]],
+                lr=opt.cfg.lr, eps=opt.cfg.eps,
+            )
+        else:
+            new_rows, new_accum = opt.apply_rows(
+                state.rows, state.accum, slot, row_grads[: uids.shape[0]]
+            )
         new_state = state._replace(
             rows=new_rows, accum=new_accum,
             dirty=state.dirty.at[slot].set(True),

@@ -158,7 +158,16 @@ class GatherBackend:
     compiler partitions the gather/scatter over a row-sharded table, at the
     cost of value-blind all-reduce traffic (see RoutedBackend).  Stateless:
     the backend-state pytree is an empty tuple.
+
+    ``fused=True`` routes the push through the fused Pallas scatter+AdaGrad
+    kernel (``kernels.ops.sparse_adagrad_apply``): the row update is applied
+    straight into the aliased table/accumulator buffers instead of
+    materializing the intermediate updated-rows arrays — bit-identical to
+    the unfused scatter (same pinned row math feeds both).
     """
+
+    def __init__(self, fused: bool = False):
+        self.fused = fused
 
     def init_state(self, table: jnp.ndarray):
         return ()
@@ -181,7 +190,8 @@ class GatherBackend:
              opt: SparseAdagrad):
         # row_grads[capacity] belongs to the drop row — discard it.
         new_table, new_accum = opt.apply_rows(
-            table, accum, ws.uids, row_grads[: ws.uids.shape[0]]
+            table, accum, ws.uids, row_grads[: ws.uids.shape[0]],
+            fused=self.fused,
         )
         return new_table, new_accum, state
 
@@ -281,6 +291,7 @@ class RoutedBackend:
 def make_backend(
     placement: str,
     mesh: Optional[jax.sharding.Mesh] = None,
+    fused: bool = False,
     **kwargs,
 ) -> EmbeddingBackend:
     """``placement`` in {"gather", "routed", "cached"} -> a backend instance.
@@ -291,6 +302,13 @@ def make_backend(
     tests and the ``--placement`` acceptance check rely on).  ``cached``
     takes ``cache_rows`` (device cache size, required) and ``decay``
     (LFU decay, optional) — see ``repro.core.cache_tier.CachedBackend``.
+
+    ``fused`` selects the fused Pallas pull/push kernels where a placement
+    has them (gather: fused push; cached: fused pull + push with the
+    id→slot indirection folded in).  The routed push computes AdaGrad
+    shard-locally inside its reverse all_to_all route (a different fusion
+    boundary already), so ``fused`` is accepted but a no-op there — routed
+    training still gets the fused embedding *bag* at the engine layer.
     """
     if placement == "gather":
         # mesh is legitimate shared context (GSPMD shards the gather);
@@ -301,7 +319,7 @@ def make_backend(
                 f"placement 'gather' does not accept {sorted(kwargs)} "
                 f"(routed/cached-only options)"
             )
-        return GatherBackend()
+        return GatherBackend(fused=fused)
     if placement == "routed":
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))
@@ -311,7 +329,7 @@ def make_backend(
 
         if "cache_rows" not in kwargs:
             raise TypeError("placement 'cached' requires cache_rows")
-        return CachedBackend(**kwargs)
+        return CachedBackend(fused=fused, **kwargs)
     raise ValueError(
         f"unknown placement {placement!r}; use 'gather', 'routed', or 'cached'"
     )

@@ -353,24 +353,25 @@ class EmbeddingEngine:
         num_bags: int,
         weights: Optional[jnp.ndarray] = None,
         combiner: str = "sum",
+        fused: bool = False,
     ) -> jnp.ndarray:
         """Bag lookup routed through the pulled working set (differentiable in
-        ``working`` — its gradient is exactly the row_grads to scatter back)."""
-        emb = jnp.take(working, inverse, axis=0)
-        if weights is not None:
-            emb = emb * weights[:, None].astype(emb.dtype)
-        out = jax.ops.segment_sum(emb, segment_ids, num_segments=num_bags)
-        if combiner == "sum":
-            return out
-        if combiner in ("mean", "sqrtn"):
-            cnt = jax.ops.segment_sum(
-                jnp.ones_like(segment_ids, emb.dtype), segment_ids, num_segments=num_bags
+        ``working`` — its gradient is exactly the row_grads to scatter back).
+
+        ``fused=True`` runs the gather+bag as ONE Pallas kernel pass over the
+        VMEM-resident working set (``kernels.ops.embedding_bag_working``);
+        both branches share the same reference expression, so the fused path
+        is bit-identical — forward and gradient — to the unfused one.
+        """
+        from repro.kernels import ops, ref
+
+        if fused:
+            return ops.embedding_bag_working(
+                working, inverse, segment_ids, weights, num_bags, combiner
             )
-            denom = jnp.maximum(cnt, 1.0)
-            if combiner == "sqrtn":
-                denom = jnp.sqrt(denom)
-            return out / denom[:, None]
-        raise ValueError(f"unknown combiner {combiner!r}")
+        return ref.embedding_bag_combiner_ref(
+            working, inverse, segment_ids, weights, num_bags, combiner
+        )
 
     def memory_bytes(self) -> int:
         return sum(

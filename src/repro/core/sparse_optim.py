@@ -58,16 +58,28 @@ class SparseAdagrad:
         accum: jnp.ndarray,          # (rows, dim) f32
         unique_ids: jnp.ndarray,     # (capacity,) int32 — deduplicated, padded
         row_grads: jnp.ndarray,      # (capacity, dim) — grads w.r.t. pulled rows
+        fused: bool = False,
     ):
-        """Scatter one working set back into its table (the PS "push")."""
-        g = row_grads.astype(jnp.float32)
-        g2 = jnp.square(g)
-        # Gather-side accumulator value *after* this step for the denominator.
-        # Padding slots repeat a real id with zero grads; the scatter-add of
-        # zeros and the zero g2 keep them inert.
-        a_new_rows = accum[unique_ids] + g2
-        delta = -self.cfg.lr * g / (jnp.sqrt(a_new_rows) + self.cfg.eps)
-        new_table = table.at[unique_ids].add(delta.astype(table.dtype))
+        """Scatter one working set back into its table (the PS "push").
+
+        The row arithmetic lives in ``kernels.sparse_adagrad.
+        adagrad_row_updates`` — the same pinned helper the fused Pallas
+        apply uses, so ``fused=True`` (one aliased kernel pass, no
+        intermediate updated-rows array) is bit-identical to this scatter.
+        Padding slots repeat a real id with zero grads; the scatter-add of
+        zeros and the zero g2 keep them inert.
+        """
+        from repro.kernels import ops
+        from repro.kernels.sparse_adagrad import adagrad_row_updates
+
+        if fused:
+            return ops.sparse_adagrad_apply(
+                table, accum, unique_ids, row_grads,
+                lr=self.cfg.lr, eps=self.cfg.eps)
+        delta, g2 = adagrad_row_updates(
+            accum[unique_ids], row_grads, table.dtype,
+            lr=self.cfg.lr, eps=self.cfg.eps)
+        new_table = table.at[unique_ids].add(delta)
         new_accum = accum.at[unique_ids].add(g2)
         return new_table, new_accum
 

@@ -2,14 +2,23 @@
 
 TPU adaptation of the FBGEMM-style table-batched embedding bag: the gather
 runs over the *pulled working set* (which fits VMEM — that is the point of
-the paper's working-set pull), and the segment reduction is expressed as a
-one-hot matmul so it runs on the MXU instead of as a scatter (TPU has no
-fast scatter; a (bags x nnz) @ (nnz x dim) matmul is the idiomatic
-segment-sum).
+the paper's working-set pull), fused with the segment reduction in one
+kernel pass.  Two formulations share the wrapper:
 
-Grid: (n_bag_blocks, n_nnz_blocks); the output block index depends only on
-the bag block, so nnz blocks accumulate into the same VMEM tile across the
-sequential TPU grid (standard Pallas accumulation pattern).
+- ``mxu`` (real-TPU default): the segment-sum is a one-hot matmul so it
+  runs on the MXU instead of as a scatter (TPU has no fast scatter; a
+  (bags x nnz) @ (nnz x dim) matmul is the idiomatic segment-sum).
+  Accumulates in f32 on the MXU — numerically equivalent to, but not
+  bit-identical with, the jnp segment-sum.
+- ``exact`` (interpret default): in-kernel gather + drop-safe scatter-add
+  into the bag block.  Adds values in exactly the order the XLA
+  ``segment_sum`` oracle does, so it is bit-identical to the unfused bag —
+  the formulation behind the fused-vs-unfused parity contract.
+
+Block geometry is auto-selected and never constrained: the bag grid uses
+``pl.cdiv`` (out-of-block segment ids are masked/dropped in-kernel), and
+the nnz stream is padded to the block size with weights=0 / seg=OOB, so
+arbitrary batch/capacity geometries work instead of tripping shape asserts.
 """
 
 from __future__ import annotations
@@ -21,7 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _bag_kernel(inv_ref, seg_ref, w_ref, working_ref, out_ref, *, bag_block: int):
+def _bag_kernel_mxu(inv_ref, seg_ref, w_ref, working_ref, out_ref, *,
+                    bag_block: int):
     i = pl.program_id(0)  # bag block
     j = pl.program_id(1)  # nnz block
 
@@ -45,27 +55,80 @@ def _bag_kernel(inv_ref, seg_ref, w_ref, working_ref, out_ref, *, bag_block: int
     )
 
 
+def _bag_kernel_exact(inv_ref, seg_ref, w_ref, working_ref, out_ref, *,
+                      bag_block: int, weighted: bool):
+    i = pl.program_id(0)  # bag block; the whole nnz stream is one block
+    emb = jnp.take(working_ref[...], inv_ref[...], axis=0)
+    if weighted:
+        emb = emb * w_ref[...][:, None].astype(emb.dtype)
+    local = seg_ref[...] - i * bag_block
+    # Out-of-block locals (either direction — negative indices would WRAP in
+    # jnp scatter) route to the OOB index bag_block and are dropped.
+    safe = jnp.where((local >= 0) & (local < bag_block), local, bag_block)
+    out_ref[...] = jnp.zeros_like(out_ref).at[safe].add(emb, mode="drop")
+
+
+def _auto_block(n: int, target: int) -> int:
+    return max(1, min(target, n))
+
+
 @functools.partial(
-    jax.jit, static_argnames=("num_bags", "bag_block", "nnz_block", "interpret")
+    jax.jit,
+    static_argnames=("num_bags", "bag_block", "nnz_block", "interpret", "exact"),
 )
 def embedding_bag_pallas(
     working: jnp.ndarray,   # (C, D) pulled rows
     inv: jnp.ndarray,       # (nnz,) row index into working
     seg: jnp.ndarray,       # (nnz,) bag index (any order)
-    weights: jnp.ndarray,   # (nnz,)
+    weights: jnp.ndarray,   # (nnz,) or None
     num_bags: int,
     bag_block: int = 256,
     nnz_block: int = 512,
     interpret: bool = False,
+    exact: bool | None = None,
 ) -> jnp.ndarray:
     C, D = working.shape
     nnz = inv.shape[0]
-    assert num_bags % bag_block == 0, (num_bags, bag_block)
-    assert nnz % nnz_block == 0, (nnz, nnz_block)
-    grid = (num_bags // bag_block, nnz // nnz_block)
-    return pl.pallas_call(
-        functools.partial(_bag_kernel, bag_block=bag_block),
-        grid=grid,
+    if exact is None:
+        exact = interpret  # bit-exact formulation wherever bits are checked
+    bag_block = _auto_block(num_bags, bag_block)
+    n_bag_blocks = pl.cdiv(num_bags, bag_block)
+    nbp = n_bag_blocks * bag_block
+    weighted = weights is not None
+    if weights is None:
+        weights = jnp.ones((nnz,), working.dtype)
+
+    if exact:
+        out = pl.pallas_call(
+            functools.partial(
+                _bag_kernel_exact, bag_block=bag_block, weighted=weighted
+            ),
+            grid=(n_bag_blocks,),
+            in_specs=[
+                pl.BlockSpec((nnz,), lambda i: (0,)),
+                pl.BlockSpec((nnz,), lambda i: (0,)),
+                pl.BlockSpec((nnz,), lambda i: (0,)),
+                pl.BlockSpec((C, D), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bag_block, D), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((nbp, D), working.dtype),
+            interpret=interpret,
+        )(inv, seg, weights, working)
+        return out[:num_bags]
+
+    # MXU formulation: pad the nnz stream so every block is full — padded
+    # entries carry seg=nbp (matches no block-local index → zero one-hot
+    # column) and weight 0.
+    nnz_block = _auto_block(nnz, nnz_block)
+    n_nnz_blocks = pl.cdiv(nnz, nnz_block)
+    pad = n_nnz_blocks * nnz_block - nnz
+    if pad:
+        inv = jnp.pad(inv, (0, pad))
+        seg = jnp.pad(seg, (0, pad), constant_values=nbp)
+        weights = jnp.pad(weights, (0, pad))
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel_mxu, bag_block=bag_block),
+        grid=(n_bag_blocks, n_nnz_blocks),
         in_specs=[
             pl.BlockSpec((nnz_block,), lambda i, j: (j,)),
             pl.BlockSpec((nnz_block,), lambda i, j: (j,)),
@@ -73,6 +136,7 @@ def embedding_bag_pallas(
             pl.BlockSpec((C, D), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bag_block, D), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((num_bags, D), working.dtype),
+        out_shape=jax.ShapeDtypeStruct((nbp, D), working.dtype),
         interpret=interpret,
     )(inv, seg, weights, working)
+    return out[:num_bags]

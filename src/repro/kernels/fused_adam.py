@@ -38,9 +38,8 @@ def fused_adam_pallas(
 ):
     """All inputs flat 1-D of equal length (callers ravel/unravel)."""
     n = p.shape[0]
-    block = min(block, n)
-    assert n % block == 0, (n, block)
-    grid = (n // block,)
+    block = max(1, min(block, n))
+    grid = (pl.cdiv(n, block),)  # uneven trailing block is masked by Pallas
     spec = pl.BlockSpec((block,), lambda i: (i,))
     return pl.pallas_call(
         functools.partial(_adam_kernel, lr=lr, b1=b1, b2=b2),

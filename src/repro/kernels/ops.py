@@ -5,6 +5,14 @@ container) the wrappers run the kernels in interpret mode when
 ``REPRO_KERNEL_INTERPRET=1`` (tests) or fall back to the jnp oracle —
 so the framework is runnable on any backend while keeping the TPU kernel
 as the deployment path.
+
+``kernel_mode()`` is the dispatch truth ("pallas" / "interpret" / "ref");
+``resolve_fused()`` maps the ``TrainerConfig.fused_kernels`` tri-state
+(None = auto) to a bool: fused defaults ON only on a real TPU backend.
+An *explicit* fused=True elsewhere still executes — through interpret
+under ``REPRO_KERNEL_INTERPRET=1`` (how the parity suite checks bits) or
+through the jnp reference otherwise (bit-identical by construction) — so
+the config axis is portable across backends.
 """
 
 from __future__ import annotations
@@ -12,20 +20,49 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.dot_interaction import dot_interaction_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fused_adam import fused_adam_pallas
-from repro.kernels.sparse_adagrad import sparse_adagrad_pallas
+from repro.kernels.sparse_adagrad import (
+    adagrad_row_updates,
+    gather_rows_cached_pallas,
+    sparse_adagrad_apply_pallas,
+    sparse_adagrad_cached_apply_pallas,
+    sparse_adagrad_pallas,
+)
+
+_COMBINERS = ("sum", "mean", "sqrtn")
 
 
-def _mode() -> str:
+def kernel_mode() -> str:
+    """How fused ops execute here: "pallas" | "interpret" | "ref"."""
     if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
         return "interpret"
     if jax.default_backend() == "tpu":
         return "pallas"
     return "ref"
+
+
+_mode = kernel_mode  # internal alias, kept for existing callers
+
+
+def fused_default() -> bool:
+    """Auto policy for ``fused_kernels=None``: on only for real Pallas.
+
+    Deliberately NOT keyed on REPRO_KERNEL_INTERPRET — the env var selects
+    how an *explicitly requested* fused op executes, it must not flip the
+    whole test suite onto emulated kernels.
+    """
+    return jax.default_backend() == "tpu"
+
+
+def resolve_fused(flag) -> bool:
+    """Map the TrainerConfig/--fused-kernels tri-state to a bool."""
+    return fused_default() if flag is None else bool(flag)
 
 
 def embedding_bag(working, inv, seg, weights, num_bags, **kw):
@@ -38,6 +75,55 @@ def embedding_bag(working, inv, seg, weights, num_bags, **kw):
     )
 
 
+def embedding_bag_working(working, inv, seg, weights, num_bags,
+                          combiner="sum"):
+    """Differentiable fused gather+bag over the pulled working set.
+
+    Forward: one kernel pass (gather + segment reduction); the combiner
+    division stays outside, as the identical expression the unfused
+    ``bag_from_working`` uses.  Backward: defined as the vjp of the
+    unfused reference expression, so gradients match the unfused path's
+    autodiff exactly — XLA DCEs the replayed forward, leaving only the
+    transpose ops (gather of the bag cotangent, scatter-add into working).
+    """
+    if combiner not in _COMBINERS:
+        raise ValueError(f"unknown combiner: {combiner!r}")
+    mode = _mode()
+    if mode == "ref":
+        return ref.embedding_bag_combiner_ref(
+            working, inv, seg, weights, num_bags, combiner)
+    interpret = mode == "interpret"
+
+    # inv/seg are primal args (NOT closed over — closures would leak tracers
+    # under vmap/grad) with float0 cotangents, as integer inputs require.
+    @jax.custom_vjp
+    def bag(wk, inv_, seg_, w):
+        out = embedding_bag_pallas(wk, inv_, seg_, w, num_bags,
+                                   interpret=interpret)
+        if combiner != "sum":
+            denom = ref.bag_combiner_denom_ref(seg_, num_bags, combiner,
+                                               wk.dtype)
+            out = out / denom[:, None]
+        return out
+
+    def fwd(wk, inv_, seg_, w):
+        return bag(wk, inv_, seg_, w), (wk, inv_, seg_, w)
+
+    def bwd(res, g):
+        wk, inv_, seg_, w = res
+        _, vjp = jax.vjp(
+            lambda wk_, w_: ref.embedding_bag_combiner_ref(
+                wk_, inv_, seg_, w_, num_bags, combiner),
+            wk, w,
+        )
+        g_wk, g_w = vjp(g)
+        f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+        return g_wk, f0(inv_), f0(seg_), g_w
+
+    bag.defvjp(fwd, bwd)
+    return bag(working, inv, seg, weights)
+
+
 def dot_interaction(feats, **kw):
     mode = _mode()
     if mode == "ref":
@@ -45,7 +131,20 @@ def dot_interaction(feats, **kw):
     return dot_interaction_pallas(feats, interpret=(mode == "interpret"), **kw)
 
 
-def fused_adam(p, g, m, v, v_hat, lr=1e-3, b1=0.0, b2=0.999, **kw):
+def adam_defaults() -> tuple:
+    """(b1, b2) single-sourced from the dense optimizer config (paper §5).
+
+    Lazy import: kernels must stay importable without repro.core.
+    """
+    from repro.core.kstep import KStepConfig
+    return (KStepConfig.b1, KStepConfig.b2)
+
+
+def fused_adam(p, g, m, v, v_hat, lr=1e-3, b1=None, b2=None, **kw):
+    if b1 is None or b2 is None:
+        db1, db2 = adam_defaults()
+        b1 = db1 if b1 is None else b1
+        b2 = db2 if b2 is None else b2
     mode = _mode()
     if mode == "ref":
         return ref.fused_adam_ref(p, g, m, v, v_hat, lr, b1, b2)
@@ -63,3 +162,44 @@ def sparse_adagrad(rows, accum, grads, lr=0.05, eps=1e-10, **kw):
         rows, accum, grads, lr=lr, eps=eps,
         interpret=(mode == "interpret"), **kw,
     )
+
+
+def sparse_adagrad_apply(table, accum, uids, grads, *, lr, eps):
+    """Fused push: AdaGrad row updates applied straight into the table.
+
+    The row math runs once, outside, via :func:`adagrad_row_updates` (the
+    same pinned helper the unfused ``SparseAdagrad.apply_rows`` uses), so
+    the scatter — Pallas or jnp — receives identical (delta, g2) bits.
+    """
+    delta, g2 = adagrad_row_updates(accum[uids], grads, table.dtype,
+                                    lr=lr, eps=eps)
+    mode = _mode()
+    if mode == "ref":
+        return ref.sparse_adagrad_apply_ref(table, accum, uids, delta, g2)
+    return sparse_adagrad_apply_pallas(
+        table, accum, uids, delta, g2, interpret=(mode == "interpret"))
+
+
+def gather_rows_cached(cache_rows, id_slot, uids):
+    """Fused cached pull: out[i] = cache_rows[id_slot[uids[i]]]."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.gather_rows_cached_ref(cache_rows, id_slot, uids)
+    return gather_rows_cached_pallas(
+        cache_rows, id_slot, uids, interpret=(mode == "interpret"))
+
+
+def sparse_adagrad_cached_apply(cache_rows, cache_accum, id_slot, uids,
+                                grads, *, lr, eps):
+    """Fused cached push: id→slot indirection folded into the index stream."""
+    accum_rows = gather_rows_cached(cache_accum, id_slot, uids)
+    delta, g2 = adagrad_row_updates(accum_rows, grads, cache_rows.dtype,
+                                    lr=lr, eps=eps)
+    mode = _mode()
+    if mode == "ref":
+        slot = jnp.take(id_slot, uids)
+        return ref.sparse_adagrad_apply_ref(
+            cache_rows, cache_accum, slot, delta, g2)
+    return sparse_adagrad_cached_apply_pallas(
+        cache_rows, cache_accum, id_slot, uids, delta, g2,
+        interpret=(mode == "interpret"))

@@ -8,8 +8,41 @@ import numpy as np
 
 
 def embedding_bag_ref(working, inv, seg, weights, num_bags):
-    emb = jnp.take(working, inv, axis=0) * weights[:, None].astype(working.dtype)
+    emb = jnp.take(working, inv, axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None].astype(working.dtype)
     return jax.ops.segment_sum(emb, seg, num_segments=num_bags)
+
+
+def bag_combiner_denom_ref(seg, num_bags, combiner, dtype):
+    """Per-bag divisor for mean/sqrtn — the SAME expression on the fused and
+    unfused paths (the division stays outside the kernel either way)."""
+    cnt = jax.ops.segment_sum(
+        jnp.ones_like(seg, dtype), seg, num_segments=num_bags
+    )
+    denom = jnp.maximum(cnt, 1.0)
+    if combiner == "sqrtn":
+        denom = jnp.sqrt(denom)
+    return denom
+
+
+def embedding_bag_combiner_ref(working, inv, seg, weights, num_bags, combiner):
+    out = embedding_bag_ref(working, inv, seg, weights, num_bags)
+    if combiner == "sum":
+        return out
+    if combiner not in ("mean", "sqrtn"):
+        raise ValueError(f"unknown combiner: {combiner!r}")
+    denom = bag_combiner_denom_ref(seg, num_bags, combiner, working.dtype)
+    return out / denom[:, None]
+
+
+def sparse_adagrad_apply_ref(table, accum, uids, delta, g2):
+    """Scatter the precomputed (delta, g2) row updates — the unfused push."""
+    return table.at[uids].add(delta), accum.at[uids].add(g2)
+
+
+def gather_rows_cached_ref(cache_rows, id_slot, uids):
+    return jnp.take(cache_rows, jnp.take(id_slot, uids), axis=0)
 
 
 def dot_interaction_ref(feats):

@@ -1,11 +1,37 @@
-"""Fused working-set sparse-AdaGrad kernel (the PS "push" math, paper §5).
+"""Fused working-set sparse-AdaGrad kernels (the PS "push" math, paper §5).
 
-Operates on the pulled row block: given (rows, accum, grads) of the working
-set, produces updated rows and accumulators in one fused pass —
-``a' = a + g^2;  w' = w - lr * g / (sqrt(a') + eps)``.  The scatter back
-into the sharded table stays outside (XLA's partitioned scatter); the
-kernel removes the 4-pass element-wise chain XLA would otherwise emit over
-the (capacity, dim) block.  Grid over row blocks.
+Two layers:
+
+``sparse_adagrad_pallas`` operates on a dense pulled row block: given
+(rows, accum, grads) of the working set it produces updated rows and
+accumulators in one fused element-wise pass —
+``a' = a + g^2;  w' = w - lr * g / (sqrt(a') + eps)``.  Grid over row
+blocks (uneven trailing blocks are masked by Pallas, so any (C, D)
+geometry works).
+
+``sparse_adagrad_apply_pallas`` is the *scatter* push used by the real
+hot path: it applies per-row (delta, g2) updates directly into the full
+(rows, dim) table/accumulator via scalar-prefetched row indices, aliasing
+the table and accumulator buffers so no intermediate updated-rows array is
+materialized.  The AdaGrad arithmetic itself is computed ONCE outside the
+kernel by :func:`adagrad_row_updates` (shared with the unfused
+``SparseAdagrad.apply_rows``) and the kernel body is pure data movement
+(``add`` of two loads) — that is what makes the fused push bit-identical
+to the unfused scatter on every backend: LLVM/XLA cannot re-contract a
+mul+add into an FMA when the kernel never sees the mul.
+
+The grid walks the working set in REVERSE: ``pull_working_set`` pads
+``uids`` with copies of the minimum real id at the END of the vector, so
+reversed order makes the pad rows (zero grads → bit-preserving writes)
+execute first and the single real visit to the duplicated row last —
+safe against stale-read/overwrite races when the TPU pipeline revisits
+the same table row.
+
+``sparse_adagrad_cached_apply_pallas`` / ``gather_rows_cached_pallas``
+are the cache-tier variants: the id→slot indirection is folded into the
+kernel's scalar-prefetch index stream (``row = id_slot[uids[i]]``), so the
+cached pull/push do one indexed pass over the (slots, dim) cache instead
+of materializing slot-translated row gathers around the kernel.
 """
 
 from __future__ import annotations
@@ -15,6 +41,25 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def adagrad_row_updates(accum_rows, grads, table_dtype, *, lr, eps):
+    """The AdaGrad row math, pinned against FMA re-association.
+
+    Returns ``(delta, g2)`` with ``delta = -lr * g / (sqrt(a + g^2) + eps)``
+    cast to the table dtype.  The two ``optimization_barrier``s force g2 and
+    delta to materialize exactly once, so the *same* bits feed both the
+    unfused ``.at[].add`` scatter and the fused Pallas apply — without them
+    XLA fuses the delta computation into the scatter and single-rounds it
+    (recip+FMA), breaking fused-vs-unfused bit identity.
+    """
+    g = grads.astype(jnp.float32)
+    g2 = jax.lax.optimization_barrier(jnp.square(g))
+    a_new = accum_rows + g2
+    delta = -lr * g / (jnp.sqrt(a_new) + eps)
+    delta = jax.lax.optimization_barrier(delta.astype(table_dtype))
+    return delta, g2
 
 
 def _adagrad_kernel(w_ref, a_ref, g_ref, nw_ref, na_ref, *, lr, eps):
@@ -36,12 +81,12 @@ def sparse_adagrad_pallas(
     row_block: int = 512, interpret: bool = False,
 ):
     C, D = rows.shape
-    row_block = min(row_block, C)
-    assert C % row_block == 0, (C, row_block)
+    # Any geometry: cdiv grid, Pallas masks the uneven trailing block.
+    row_block = max(1, min(row_block, C))
     spec = pl.BlockSpec((row_block, D), lambda i: (i, 0))
     return pl.pallas_call(
         functools.partial(_adagrad_kernel, lr=lr, eps=eps),
-        grid=(C // row_block,),
+        grid=(pl.cdiv(C, row_block),),
         in_specs=[spec] * 3,
         out_specs=[spec] * 2,
         out_shape=[
@@ -50,3 +95,102 @@ def sparse_adagrad_pallas(
         ],
         interpret=interpret,
     )(rows, accum, grads)
+
+
+def _apply_kernel(uids_ref, t_ref, a_ref, d_ref, g2_ref, nt_ref, na_ref):
+    # Pure data movement: both adds combine two LOADS (delta/g2 precomputed
+    # outside) — contraction-proof, hence bit-identical to the jnp scatter.
+    nt_ref[...] = t_ref[...] + d_ref[...]
+    na_ref[...] = a_ref[...] + g2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_adagrad_apply_pallas(
+    table: jnp.ndarray,   # (R, D) full table
+    accum: jnp.ndarray,   # (R, D) f32 accumulator
+    uids: jnp.ndarray,    # (cap,) row ids, pads (= min real id) at the END
+    delta: jnp.ndarray,   # (cap, D) table-dtype update, from adagrad_row_updates
+    g2: jnp.ndarray,      # (cap, D) f32 squared grads
+    interpret: bool = False,
+):
+    cap = uids.shape[0]
+    D = table.shape[1]
+    row = lambda i, uids: (uids[cap - 1 - i], 0)     # reversed: pads first
+    seq = lambda i, uids: (cap - 1 - i, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(cap,),
+        in_specs=[pl.BlockSpec((1, D), row), pl.BlockSpec((1, D), row),
+                  pl.BlockSpec((1, D), seq), pl.BlockSpec((1, D), seq)],
+        out_specs=[pl.BlockSpec((1, D), row), pl.BlockSpec((1, D), row)],
+    )
+    return pl.pallas_call(
+        _apply_kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(table.shape, table.dtype),
+                   jax.ShapeDtypeStruct(accum.shape, jnp.float32)],
+        # alias indices count the scalar-prefetch arg: uids=0, table=1, accum=2
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(uids, table, accum, delta, g2)
+
+
+def _cached_apply_kernel(idslot_ref, uids_ref, t_ref, a_ref, d_ref, g2_ref,
+                         nt_ref, na_ref):
+    nt_ref[...] = t_ref[...] + d_ref[...]
+    na_ref[...] = a_ref[...] + g2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sparse_adagrad_cached_apply_pallas(
+    cache_rows: jnp.ndarray,   # (slots, D) device cache
+    cache_accum: jnp.ndarray,  # (slots, D) f32
+    id_slot: jnp.ndarray,      # (R,) id -> slot map
+    uids: jnp.ndarray,         # (cap,) ids, pads at the END
+    delta: jnp.ndarray,        # (cap, D)
+    g2: jnp.ndarray,           # (cap, D)
+    interpret: bool = False,
+):
+    cap = uids.shape[0]
+    D = cache_rows.shape[1]
+    # The id->slot indirection folded into the index stream: one indexed
+    # pass over the cache, no slot-translated gather materialized.
+    row = lambda i, idslot, uids: (idslot[uids[cap - 1 - i]], 0)
+    seq = lambda i, idslot, uids: (cap - 1 - i, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=(cap,),
+        in_specs=[pl.BlockSpec((1, D), row), pl.BlockSpec((1, D), row),
+                  pl.BlockSpec((1, D), seq), pl.BlockSpec((1, D), seq)],
+        out_specs=[pl.BlockSpec((1, D), row), pl.BlockSpec((1, D), row)],
+    )
+    return pl.pallas_call(
+        _cached_apply_kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(cache_rows.shape, cache_rows.dtype),
+                   jax.ShapeDtypeStruct(cache_accum.shape, jnp.float32)],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(id_slot, uids, cache_rows, cache_accum, delta, g2)
+
+
+def _gather_cached_kernel(idslot_ref, uids_ref, rows_ref, out_ref):
+    out_ref[...] = rows_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_cached_pallas(
+    cache_rows: jnp.ndarray,  # (slots, D)
+    id_slot: jnp.ndarray,     # (R,)
+    uids: jnp.ndarray,        # (cap,)
+    interpret: bool = False,
+):
+    """out[i] = cache_rows[id_slot[uids[i]]] — the fused cached pull."""
+    cap = uids.shape[0]
+    D = cache_rows.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=(cap,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, idslot, uids: (idslot[uids[i]], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, idslot, uids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_cached_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap, D), cache_rows.dtype),
+        interpret=interpret,
+    )(id_slot, uids, cache_rows)

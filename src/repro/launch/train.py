@@ -42,6 +42,9 @@ the next batch's working-set pull is dispatched while the current step is
 still executing, for any placement — bit-identical results, overlapped
 pull latency.  ``--merge-delay N`` (DenseTrainer archs only) applies each
 k-step merge's cross-pod average N boundaries late (DCN latency hiding).
+``--fused-kernels {auto,on,off}`` selects the fused Pallas sparse kernels
+(gather+bag pull, scatter+AdaGrad push, cache-tier indirection variants —
+see docs/kernels.md); bit-identical to the unfused path on every backend.
 
 On a real TPU cluster each process calls ``jax.distributed.initialize()``
 (args: --coordinator/--num-processes/--process-id, or TPU auto-detection)
@@ -83,6 +86,13 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--prefetch", action="store_true",
                     help="double-buffered pull prefetch: overlap the next "
                          "batch's pull with the current step (Fig. 5)")
+    ap.add_argument("--fused-kernels", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused Pallas sparse pull/push + embedding-bag "
+                         "kernels (bit-identical to unfused): auto = on "
+                         "for a real TPU backend, off elsewhere; 'on' off-"
+                         "TPU runs interpret under REPRO_KERNEL_INTERPRET=1 "
+                         "or the jnp reference otherwise")
     ap.add_argument("--merge-delay", type=int, default=0,
                     help="apply k-step merges N boundaries late "
                          "(DenseTrainer archs; 0 = synchronous merges)")
@@ -131,6 +141,8 @@ def main():
         sparse=SparseAdagradConfig(lr=args.sparse_lr, initial_accumulator=0.01),
         placement=args.placement, capacity=args.capacity or None,
         cache_rows=args.cache_rows or None, prefetch=args.prefetch,
+        fused_kernels={"auto": None, "on": True, "off": False}[
+            args.fused_kernels],
         merge_delay=args.merge_delay,
         ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
     )

@@ -100,10 +100,14 @@ def dlrm_forward_from_emb(dense, emb, batch, cfg: DLRMConfig) -> jnp.ndarray:
     return mlp_apply(dense["top"], top_in, act=jax.nn.relu)[:, 0]
 
 
-def dlrm_embed_from_workings(cfg: DLRMConfig):
+def dlrm_embed_from_workings(cfg: DLRMConfig, fused: bool = False):
     """HybridTrainer embed adapter: the 26 single-hot lookups routed through
     each table's pulled working set (``invs["emb_XX"]`` has shape (B,) — one
-    row per instance), so grads land on the compact pulled rows only."""
+    row per instance), so grads land on the compact pulled rows only.
+
+    ``fused`` is accepted for adapter-signature uniformity: single-hot takes
+    have no bag reduction to fuse (the fused push still applies)."""
+    del fused
 
     def embed(workings, invs, batch):
         embs = [
@@ -249,11 +253,16 @@ def din_forward_from_emb(dense, emb, batch, cfg: DINConfig) -> jnp.ndarray:
     return mlp_apply(dense["mlp"], rep, act=jax.nn.relu)[:, 0]
 
 
-def din_embed_from_workings(cfg: DINConfig):
+def din_embed_from_workings(cfg: DINConfig, fused: bool = False):
     """HybridTrainer embed adapter for DIN/DIEN: history + target ids feed
     one item table (``din_table_specs`` concatenates the two fields per
     instance), so ``invs["items"]`` reshapes to (B, seq_len + 1) — the first
-    ``seq_len`` columns are the history lookups, the last is the target."""
+    ``seq_len`` columns are the history lookups, the last is the target.
+
+    ``fused`` is accepted for adapter-signature uniformity: the attention
+    tower consumes unpooled rows, there is no bag reduction to fuse (the
+    fused push still applies)."""
+    del fused
     T = cfg.seq_len
 
     def embed(workings, invs, batch):
@@ -373,10 +382,11 @@ def two_tower_score_candidates(dense, tables, user_emb_pooled, cand_ids, cfg: Tw
     return u @ v.T                                                   # (B, C)
 
 
-def two_tower_embed_from_workings(cfg: TwoTowerConfig):
+def two_tower_embed_from_workings(cfg: TwoTowerConfig, fused: bool = False):
     """HybridTrainer embed adapter: user-history mean bag + positive item,
     both served from the pulled item working set (``invs["items"]`` reshapes
-    to (B, hist_len + 1); see ``two_tower_table_specs``)."""
+    to (B, hist_len + 1); see ``two_tower_table_specs``).  ``fused`` routes
+    the history bag through the fused Pallas gather+bag kernel."""
     H = cfg.user_hist_len
     combiner = two_tower_table_specs(cfg)["items"].combiner
 
@@ -387,6 +397,7 @@ def two_tower_embed_from_workings(cfg: TwoTowerConfig):
         user = EmbeddingEngine.bag_from_working(
             workings["items"], inv[:, :H].reshape(-1), seg, num_bags=B,
             weights=batch["user_mask"].reshape(-1), combiner=combiner,
+            fused=fused,
         )
         item = jnp.take(workings["items"], inv[:, H], axis=0)
         return {"user": user, "item": item}
@@ -458,7 +469,7 @@ def ctr_embed_batch(tables, batch, cfg: CTRConfig) -> jnp.ndarray:
     return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
 
 
-def ctr_embed_from_workings(cfg: CTRConfig):
+def ctr_embed_from_workings(cfg: CTRConfig, fused: bool = False):
     """Build the HybridTrainer embed adapter for the paper's CTR model.
 
     The returned ``embed(workings, invs, batch)`` routes the per-field bag
@@ -467,7 +478,8 @@ def ctr_embed_from_workings(cfg: CTRConfig):
     autodiff lands gradients on the compact pulled rows — Algorithm 1's
     pull path.  This is the one canonical copy used by the trainer factory,
     examples, and benchmarks.  Pooling honors ``TableSpec.combiner`` (sum
-    for the paper's CTR model — masked rows contribute zero).
+    for the paper's CTR model — masked rows contribute zero); ``fused``
+    routes it through the fused Pallas gather+bag kernel.
     """
     combiner = ctr_table_specs(cfg)["sparse"].combiner
 
@@ -478,7 +490,7 @@ def ctr_embed_from_workings(cfg: CTRConfig):
         bags = EmbeddingEngine.bag_from_working(
             workings["sparse"], invs["sparse"], seg,
             num_bags=B * cfg.n_fields, weights=batch["mask"].reshape(-1),
-            combiner=combiner,
+            combiner=combiner, fused=fused,
         )
         return bags.reshape(B, cfg.n_fields, cfg.embed_dim)
 

@@ -22,7 +22,10 @@ Family wiring:
     ``*_embed_from_workings``/``*_hybrid_loss`` adapters from
     ``repro.models.recsys``.  ``TrainerConfig.prefetch`` turns on the
     double-buffered pull prefetch (any placement, bit-identical results);
-    dense families reject it.
+    dense families reject it.  ``TrainerConfig.fused_kernels`` selects the
+    fused Pallas sparse pull/push + bag kernels (None = auto: on for real
+    TPU backends — ``kernels.ops.resolve_fused``), threaded to the backend
+    and the embed adapters; DenseTrainer rejects an explicit True.
 
 ``model_cfg`` overrides the registry's smoke/full config (used by examples
 that scale the table up or down).
@@ -76,11 +79,16 @@ def _build_engine(
                 f"device cache"
             )
         kwargs["cache_rows"] = cfg.cache_rows or capacity
+    from repro.kernels import ops
+
     return EmbeddingEngine(
         specs,
         capacity=capacity,
         optimizer=SparseAdagrad(cfg.sparse),
-        backend=make_backend(cfg.placement, mesh=mesh, **kwargs),
+        backend=make_backend(
+            cfg.placement, mesh=mesh,
+            fused=ops.resolve_fused(cfg.fused_kernels), **kwargs,
+        ),
     )
 
 
@@ -168,12 +176,15 @@ def build_trainer(
         return DenseTrainer(lambda p, b: G.loss_fn(p, b, mcfg), params, cfg, mesh=mesh)
 
     if spec.family == "recsys":
+        from repro.kernels import ops
+
         init_dense, build_engine, embed_of, loss_of = _recsys_wiring(mcfg)
         dense = init_dense(rng, mcfg)
         engine = build_engine(mcfg, cfg, mesh=mesh)
         tables = engine.init(rng, scale=table_scale)
+        fused = ops.resolve_fused(cfg.fused_kernels)
         return HybridTrainer(
-            dense, engine, embed_of(mcfg), loss_of(mcfg),
+            dense, engine, embed_of(mcfg, fused=fused), loss_of(mcfg),
             cfg, mesh=mesh, tables=tables,
         )
 

@@ -75,6 +75,10 @@ class TrainerConfig:
                                       # (None: arch default; must be >= capacity)
     prefetch: bool = False        # double-buffered pull prefetch
                                   # (HybridTrainer only; Fig. 5 overlap)
+    fused_kernels: Optional[bool] = None  # fused Pallas sparse pull/push +
+                                          # bag (HybridTrainer only).  None =
+                                          # auto: on for a real TPU backend,
+                                          # off elsewhere (ops.resolve_fused)
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     ckpt_keep: int = 3
@@ -211,6 +215,13 @@ class DenseTrainer:
                 "DenseTrainer: prefetch=True is a sparse-path feature "
                 "(HybridTrainer's pull prefetch) — an all-dense model has "
                 "no pull stage to overlap; set prefetch=False"
+            )
+        if cfg.fused_kernels:
+            raise ValueError(
+                "DenseTrainer: fused_kernels=True is a sparse-path feature "
+                "(the fused embedding pull/push kernels) — an all-dense "
+                "model has no working set to fuse over; leave "
+                "fused_kernels=None"
             )
         if cfg.merge_delay > 0 and cfg.kstep.merge == "int8_ef":
             raise NotImplementedError(

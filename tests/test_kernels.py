@@ -1,6 +1,8 @@
 """Per-kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
 swept over shapes and dtypes."""
 
+import inspect
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +12,13 @@ from repro.kernels import ref
 from repro.kernels.dot_interaction import dot_interaction_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fused_adam import fused_adam_pallas
-from repro.kernels.sparse_adagrad import sparse_adagrad_pallas
+from repro.kernels.sparse_adagrad import (
+    adagrad_row_updates,
+    gather_rows_cached_pallas,
+    sparse_adagrad_apply_pallas,
+    sparse_adagrad_cached_apply_pallas,
+    sparse_adagrad_pallas,
+)
 
 TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
 
@@ -21,6 +29,9 @@ TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
     (128, 64, 512, 256, 256, 512),
     (256, 128, 1024, 64, 64, 128),
     (32, 8, 128, 512, 128, 128),
+    # arbitrary geometries: nothing divides anything (cdiv grids + padding)
+    (33, 17, 77, 13, 8, 32),
+    (7, 5, 129, 50, 256, 512),
 ])
 def test_embedding_bag(dtype, C, D, nnz, nb, bag_blk, nnz_blk):
     rng = np.random.default_rng(0)
@@ -53,7 +64,27 @@ def test_dot_interaction(dtype, B, F, D, blk):
     )
 
 
-@pytest.mark.parametrize("n,blk", [(1 << 12, 1 << 10), (1 << 16, 1 << 14), (640, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,D,nnz,nb", [(48, 16, 200, 31), (13, 7, 57, 9)])
+def test_embedding_bag_exact_formulation(dtype, C, D, nnz, nb):
+    """The scatter formulation (interpret default) is BIT-identical to the
+    jnp segment-sum oracle — the fused-vs-unfused parity contract."""
+    rng = np.random.default_rng(7)
+    working = jnp.asarray(rng.standard_normal((C, D)), dtype)
+    inv = jnp.asarray(rng.integers(0, C, nnz), jnp.int32)
+    seg = jnp.asarray(rng.integers(0, nb, nnz), jnp.int32)
+    w = jnp.asarray(rng.random(nnz), dtype)
+    for weights in (w, None):
+        out = embedding_bag_pallas(working, inv, seg, weights, nb,
+                                   bag_block=8, interpret=True, exact=True)
+        expect = ref.embedding_bag_ref(working, inv, seg, weights, nb)
+        assert np.array_equal(np.asarray(out), np.asarray(expect)), (
+            np.abs(np.asarray(out, np.float32)
+                   - np.asarray(expect, np.float32)).max())
+
+
+@pytest.mark.parametrize("n,blk", [(1 << 12, 1 << 10), (1 << 16, 1 << 14), (640, 64),
+                                   (1000, 384)])  # uneven trailing block
 @pytest.mark.parametrize("b1", [0.0, 0.9])
 def test_fused_adam(n, blk, b1):
     rng = np.random.default_rng(2)
@@ -69,7 +100,8 @@ def test_fused_adam(n, blk, b1):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("C,D,blk", [(256, 64, 64), (512, 128, 512), (64, 16, 32)])
+@pytest.mark.parametrize("C,D,blk", [(256, 64, 64), (512, 128, 512), (64, 16, 32),
+                                     (100, 17, 48), (5, 3, 512)])  # uneven
 def test_sparse_adagrad(dtype, C, D, blk):
     rng = np.random.default_rng(3)
     rows = jnp.asarray(rng.standard_normal((C, D)), dtype)
@@ -84,6 +116,82 @@ def test_sparse_adagrad(dtype, C, D, blk):
         )
 
 
+def _push_case(seed, R=37, D=7, cap=9, n_real=5, dtype=jnp.float32):
+    """A working-set push case shaped like pull_working_set output: sorted
+    real ids, pads (= min real id) at the END with zero grads."""
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((R, D)), dtype)
+    accum = jnp.asarray(rng.random((R, D)) + 0.1, jnp.float32)
+    real = np.sort(rng.choice(R, size=n_real, replace=False))
+    uids = jnp.asarray(
+        np.concatenate([real, np.full(cap - n_real, real.min())]), jnp.int32)
+    grads = jnp.asarray(rng.standard_normal((cap, D)) * 3, dtype)
+    grads = grads.at[n_real:].set(0.0)
+    return table, accum, uids, grads, real
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_adagrad_apply(dtype, seed):
+    """The fused scatter push is BIT-identical to the unfused scatter: both
+    consume the same pinned (delta, g2) from ``adagrad_row_updates`` and the
+    kernel is pure data movement over the aliased table/accumulator."""
+    table, accum, uids, grads, _ = _push_case(seed, dtype=dtype)
+    delta, g2 = jax.jit(
+        lambda a, g: adagrad_row_updates(a, g, table.dtype, lr=0.05, eps=1e-10)
+    )(accum[uids], grads)
+    want_t, want_a = jax.jit(ref.sparse_adagrad_apply_ref)(
+        table, accum, uids, delta, g2)
+    got_t, got_a = sparse_adagrad_apply_pallas(
+        table, accum, uids, delta, g2, interpret=True)
+    assert np.array_equal(np.asarray(got_t), np.asarray(want_t))
+    assert np.array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_gather_rows_cached(seed):
+    """Double-indirection gather: out[i] = cache[id_slot[uids[i]]], exact."""
+    rng = np.random.default_rng(seed)
+    R, SLOTS, D, cap = 29, 16, 5, 7
+    cache = jnp.asarray(rng.standard_normal((SLOTS, D)), jnp.float32)
+    real = np.sort(rng.choice(R, size=cap - 2, replace=False))
+    uids = jnp.asarray(
+        np.concatenate([real, np.full(2, real.min())]), jnp.int32)
+    id_slot = np.full((R,), -1, np.int32)
+    id_slot[real] = rng.choice(SLOTS, size=len(real), replace=False)
+    id_slot = jnp.asarray(id_slot)
+    got = gather_rows_cached_pallas(cache, id_slot, uids, interpret=True)
+    want = ref.gather_rows_cached_ref(cache, id_slot, uids)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_adagrad_cached_apply(seed):
+    """The cache-tier push kernel (id→slot folded into the index stream) is
+    bit-identical to slot-translate-then-scatter."""
+    rng = np.random.default_rng(seed + 10)
+    R, SLOTS, D, cap, n_real = 29, 16, 5, 7, 5
+    cache = jnp.asarray(rng.standard_normal((SLOTS, D)), jnp.float32)
+    caccum = jnp.asarray(rng.random((SLOTS, D)) + 0.1, jnp.float32)
+    real = np.sort(rng.choice(R, size=n_real, replace=False))
+    uids = jnp.asarray(
+        np.concatenate([real, np.full(cap - n_real, real.min())]), jnp.int32)
+    id_slot = np.full((R,), -1, np.int32)
+    id_slot[real] = rng.choice(SLOTS, size=n_real, replace=False)
+    id_slot = jnp.asarray(id_slot)
+    grads = jnp.asarray(rng.standard_normal((cap, D)), jnp.float32)
+    grads = grads.at[n_real:].set(0.0)
+    delta, g2 = jax.jit(
+        lambda a, g: adagrad_row_updates(a, g, cache.dtype, lr=0.05, eps=1e-10)
+    )(caccum[id_slot[uids]], grads)
+    want_t, want_a = jax.jit(ref.sparse_adagrad_apply_ref)(
+        cache, caccum, jnp.take(id_slot, uids), delta, g2)
+    got_t, got_a = sparse_adagrad_cached_apply_pallas(
+        cache, caccum, id_slot, uids, delta, g2, interpret=True)
+    assert np.array_equal(np.asarray(got_t), np.asarray(want_t))
+    assert np.array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
 def test_ops_dispatch_ref_mode(monkeypatch):
     """Without the env flag on CPU, ops fall back to the oracle path."""
     monkeypatch.delenv("REPRO_KERNEL_INTERPRET", raising=False)
@@ -92,3 +200,41 @@ def test_ops_dispatch_ref_mode(monkeypatch):
     feats = jnp.asarray(rng.standard_normal((8, 5, 4)), jnp.float32)
     out = ops.dot_interaction(feats)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref.dot_interaction_ref(feats)))
+    # new fused ops must dispatch (and bit-match their refs) in ref mode too
+    table, accum, uids, grads, _ = _push_case(11)
+    got_t, got_a = jax.jit(
+        lambda *a: ops.sparse_adagrad_apply(*a, lr=0.05, eps=1e-10)
+    )(table, accum, uids, grads)
+    delta, g2 = adagrad_row_updates(accum[uids], grads, table.dtype,
+                                    lr=0.05, eps=1e-10)
+    want_t, want_a = ref.sparse_adagrad_apply_ref(table, accum, uids, delta, g2)
+    assert np.array_equal(np.asarray(got_t), np.asarray(want_t))
+    assert np.array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
+def test_fused_adam_defaults_match_kstep_config():
+    """Loud-mismatch guard: ``ops.fused_adam``'s (b1, b2) defaults are
+    single-sourced from ``KStepConfig`` (paper §5: b1=0.0, b2=0.999), and the
+    kernel/ref signature defaults must agree — a drift here would silently
+    train the benchmark path with a different optimizer than the trainer."""
+    from repro.core.kstep import KStepConfig
+    from repro.kernels import ops
+
+    db1, db2 = ops.adam_defaults()
+    assert (db1, db2) == (KStepConfig.b1, KStepConfig.b2)
+    for fn in (ref.fused_adam_ref, fused_adam_pallas):
+        sig = inspect.signature(fn)
+        assert sig.parameters["b1"].default == KStepConfig.b1, (
+            f"{fn.__name__} b1 default {sig.parameters['b1'].default} != "
+            f"KStepConfig.b1 {KStepConfig.b1} — update the kernel default or "
+            f"the config, they must not drift apart")
+        assert sig.parameters["b2"].default == KStepConfig.b2, (
+            f"{fn.__name__} b2 default {sig.parameters['b2'].default} != "
+            f"KStepConfig.b2 {KStepConfig.b2}")
+    # ops-level None resolves to the config values (one jnp-ref call)
+    one = jnp.ones((4,), jnp.float32)
+    got = ops.fused_adam(one, one, one, one, one)
+    want = ref.fused_adam_ref(one, one, one, one, one,
+                              b1=KStepConfig.b1, b2=KStepConfig.b2)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
