@@ -1,76 +1,112 @@
-"""Cache hierarchy (paper §2.3): device-cache size vs hit rate and traffic.
+"""Cache hierarchy (paper §2.3): the three-level sweep — device-cache size x
+host page-cache size vs per-tier hit rates and traffic.
 
-The paper's hierarchical parameter server keeps terabyte tables in CPU
-MEM/SSD and only the hot working set on the accelerator, exploiting the
-Zipf skew of ad features.  This benchmark reproduces that story on the
-synthetic Zipf(1.05) CTR stream: sweep the device-cache size (as a fraction
-of the table) and measure the steady-state hit rate, host->device fetch
-traffic, and device->host spill traffic per step through ``CachedBackend``
-pull+push cycles (pushes dirty the working set, so evictions spill).
+The paper's hierarchical parameter server keeps terabyte tables on SSD,
+a page cache over them in CPU MEM, and only the hot working set on the
+accelerator, exploiting the Zipf skew of ad features.  This benchmark
+reproduces that story on the synthetic Zipf(1.05) CTR stream with the real
+storage stack (``CachedBackend`` over a ``DiskStore`` spill directory):
+sweep the device-cache size and the RAM page-cache budget, and meter each
+tier in the steady state —
 
-The §2.3 claim lands as: a ~10% cache already serves >= 80% of lookups from
-device memory, and h2d traffic per step shrinks toward the (irreducible)
-working-set churn as the cache grows.
+  device tier: lookup hit rate, host->device fetch bytes, spill bytes;
+  page tier:   page-cache hit rate, pages evicted;
+  SSD tier:    bytes read / written per step.
+
+The §2.3 claim lands as: a ~10% device cache already serves >= 80% of
+lookups from device memory, and the disk tier's read traffic collapses once
+the page cache covers the hot pages — the two caches filter the Zipf tail
+level by level.
 """
 
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 
 def run(steps: int = 60, rows: int = 50_000, dim: int = 16,
         capacity: int = 4096, batch: int = 512, nnz: int = 20,
-        zipf_a: float = 1.05):
+        zipf_a: float = 1.05, page_rows: int = 512):
     import jax
     import jax.numpy as jnp
 
     from repro.core.cache_tier import CachedBackend
+    from repro.core.embedding_engine import EmbeddingEngine, TableSpec
+    from repro.core.row_store import DiskStore
     from repro.core.sparse_optim import SparseAdagrad, SparseAdagradConfig
     from repro.data import synthetic as S
 
-    opt = SparseAdagrad(SparseAdagradConfig(lr=0.1))
     measure_from = steps * 2 // 3
+    n_pages = -(-rows // page_rows)
     results = []
-    # the cache can never be smaller than one batch's working set, so the
-    # sweep starts at the capacity floor (~8% of this table)
-    for frac in (0.08, 0.10, 0.20, 0.50, 1.00):
-        C = max(capacity, int(rows * frac))
-        cb = CachedBackend(cache_rows=C)
-        table = jnp.zeros((rows, dim), jnp.float32)
-        accum = jnp.full((rows, dim), 0.1, jnp.float32)
-        state = cb.init_state(table)
+    # device cache >= one batch's working set (the capacity floor, ~8% of
+    # this table); page cache from hot-head-only to full mirror (None)
+    for cfrac in (0.08, 0.20, 1.00):
+        for pfrac in (0.10, 0.50, None):
+            C = max(capacity, int(rows * cfrac))
+            pages = None if pfrac is None else max(2, int(n_pages * pfrac))
+            spill = tempfile.mkdtemp(prefix="fig_cache_hier_")
+            store = DiskStore(spill, page_rows=page_rows,
+                              page_cache_pages=pages)
+            engine = EmbeddingEngine(
+                {"t": TableSpec("t", rows=rows, dim=dim, id_field="ids")},
+                capacity=capacity,
+                optimizer=SparseAdagrad(SparseAdagradConfig(lr=0.1)),
+                backend=CachedBackend(cache_rows=C, staged=True,
+                                      capacity=capacity),
+                store=store,
+            )
+            tables = engine.init(jax.random.key(0))
+            accum = engine.init_state(tables).accum
+            states = engine.init_backend_state(tables)
+            pull = engine.pull_stage(donate=False)
+            push = jax.jit(
+                lambda t, a, s, wss, g: engine.push(t, a, s, wss, g))
 
-        @jax.jit
-        def step_fn(table, accum, state, ids):
-            ws, table, accum, state = cb.pull(table, accum, state, ids,
-                                              capacity)
-            # push a small row update so evictions have dirty rows to spill
-            grads = ws.rows * 0.01
-            return cb.push(table, accum, state, ws, grads, opt)
-
-        gen = S.ctr_batches(seed=7, batch=batch, rows=rows, n_fields=8,
-                            nnz=nnz, zipf_a=zipf_a)
-        warm = None
-        t0 = 0.0
-        for i in range(steps):
-            ids = jnp.asarray(next(gen)["ids"].reshape(-1))
-            table, accum, state = step_fn(table, accum, state, ids)
-            if i == measure_from - 1:
-                jax.block_until_ready(state.lookups)
-                warm = (float(state.lookups), float(state.fetched),
-                        float(state.bytes_h2d), float(state.bytes_d2h))
-                t0 = time.perf_counter()
-        jax.block_until_ready(state.lookups)
-        n_meas = steps - measure_from
-        us = (time.perf_counter() - t0) / n_meas * 1e6
-        lookups = float(state.lookups) - warm[0]
-        fetched = float(state.fetched) - warm[1]
-        h2d = (float(state.bytes_h2d) - warm[2]) / n_meas
-        d2h = (float(state.bytes_d2h) - warm[3]) / n_meas
-        results.append((
-            f"fig_cache_f{int(frac * 100):03d}", us,
-            f"cache_rows={C},hit_rate={1.0 - fetched / lookups:.4f},"
-            f"h2d_MB_per_step={h2d / 1e6:.4f},d2h_MB_per_step={d2h / 1e6:.4f},"
-            f"evictions={int(float(state.evictions))}",
-        ))
+            gen = S.ctr_batches(seed=7, batch=batch, rows=rows, n_fields=8,
+                                nnz=nnz, zipf_a=zipf_a)
+            warm = None
+            t0 = 0.0
+            for i in range(steps):
+                ids = {"t": jnp.asarray(next(gen)["ids"].reshape(-1))}
+                wss, tables, accum, states = pull(tables, accum, states, ids)
+                grads = {"t": wss["t"].rows * 0.01}
+                tables, accum, states = push(tables, accum, states, wss, grads)
+                if i == measure_from - 1:
+                    jax.block_until_ready(states["t"].lookups)
+                    st = states["t"]
+                    warm = (float(st.lookups), float(st.fetched),
+                            float(st.bytes_h2d), float(st.bytes_d2h),
+                            dict(store.stats()))
+                    t0 = time.perf_counter()
+            jax.block_until_ready(states["t"].lookups)
+            n_meas = steps - measure_from
+            us = (time.perf_counter() - t0) / n_meas * 1e6
+            st = states["t"]
+            lookups = float(st.lookups) - warm[0]
+            fetched = float(st.fetched) - warm[1]
+            h2d = (float(st.bytes_h2d) - warm[2]) / n_meas
+            d2h = (float(st.bytes_d2h) - warm[3]) / n_meas
+            # page/SSD tiers: window deltas of the store meters (sync first
+            # so the window's write-behind traffic is attributed to it)
+            engine.sync_store(tables, accum, states)
+            ds = {k: v - warm[4][k] for k, v in store.stats().items()}
+            faults = ds["page_hits"] + ds["page_misses"]
+            page_hit = 1.0 - ds["page_misses"] / max(faults, 1.0)
+            store.close()
+            shutil.rmtree(spill, ignore_errors=True)
+            pname = "full" if pages is None else f"{pages:03d}"
+            results.append((
+                f"fig_cache_c{int(cfrac * 100):03d}_p{pname}", us,
+                f"cache_rows={C},page_cache_pages={pages},"
+                f"hit_rate={1.0 - fetched / lookups:.4f},"
+                f"page_hit_rate={page_hit:.4f},"
+                f"h2d_MB_per_step={h2d / 1e6:.4f},"
+                f"d2h_MB_per_step={d2h / 1e6:.4f},"
+                f"disk_rd_MB_per_step={ds['disk_bytes_read'] / n_meas / 1e6:.4f},"
+                f"disk_wr_MB_per_step={ds['disk_bytes_written'] / n_meas / 1e6:.4f},"
+                f"pages_evicted={int(ds['pages_evicted'])}",
+            ))
     return results

@@ -32,6 +32,8 @@ lint).  ``fit_online(..., strict_transfers=True)`` / the launcher's
 from __future__ import annotations
 
 import dataclasses
+import shutil
+import tempfile
 import traceback
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -116,7 +118,8 @@ def _finding(path: str, res: CheckResult) -> Finding:
 
 
 # --------------------------------------------------------------- the audits
-def _build_recsys(arch: str, placement: str, prefetch: bool, n_pod: int = 2):
+def _build_recsys(arch: str, placement: str, prefetch: bool, n_pod: int = 2,
+                  store: str = "host", spill_dir: Optional[str] = None):
     from repro.core.kstep import KStepConfig
     from repro.runtime.factory import build_trainer
     from repro.runtime.trainer import TrainerConfig
@@ -124,24 +127,36 @@ def _build_recsys(arch: str, placement: str, prefetch: bool, n_pod: int = 2):
     tcfg = TrainerConfig(
         n_pod=n_pod, kstep=KStepConfig(k=2), placement=placement,
         prefetch=prefetch, log_every=10_000,
+        store=store, spill_dir=spill_dir,
     )
     return build_trainer(arch, tcfg, smoke=True)
 
 
 def audit_recsys(
     arch: str, placement: str, prefetch: bool = False,
-    batch: int = 32, check_transfers: bool = True,
+    batch: int = 32, check_transfers: bool = True, store: str = "host",
 ) -> List[CheckResult]:
     """Trace-audit one arch x placement trainer: jaxpr hygiene + donation on
     the pull and train executables, then run 2k steps for the retrace guard
-    and (optionally) the transfer-guard runtime sync check."""
+    and (optionally) the transfer-guard runtime sync check.
+
+    ``store="disk"`` audits the three-level hierarchy representative over a
+    throwaway spill dir: the jitted executables are the same ones (the disk
+    path wraps, never replaces, them), and the transfer-sync check proves
+    the staging protocol's host IO stays behind explicit
+    ``device_put``/``device_get`` at commit boundaries.
+    """
     import jax
     from repro import configs
     from repro.data import synthetic as S
 
-    target = f"{arch}/{placement}" + ("/prefetch" if prefetch else "")
+    target = (f"{arch}/{placement}" + ("/prefetch" if prefetch else "")
+              + ("/disk" if store == "disk" else ""))
     results: List[CheckResult] = []
-    tr = _build_recsys(arch, placement, prefetch)
+    spill = tempfile.mkdtemp(prefix="trace_audit_spill_") \
+        if store == "disk" else None
+    tr = _build_recsys(arch, placement, prefetch, store=store,
+                       spill_dir=spill)
     mcfg = configs.get(arch).smoke_cfg
     gen = S.recsys_batches(mcfg, batch=batch, seed=0)
     b0 = next(gen)
@@ -170,7 +185,11 @@ def audit_recsys(
             target, "f64", not wides,
             f"{name} stage f64 outputs from: {wides}" if wides else ""))
 
-    pull_txt = tr._pull.lower(
+    # under the disk store tr._pull is the host-staging WRAPPER around the
+    # jitted pull; the lowered-module/donation/retrace checks want the jit
+    pull_jit = (next(iter(tr.engine._pull_jits.values()))
+                if store == "disk" else tr._pull)
+    pull_txt = pull_jit.lower(
         tr.tables, accum, tr.backend_state, flat_ids).as_text()
     train_txt = tr._train_local.lower(*train_args).as_text()
     for name, txt in (("pull", pull_txt), ("train", train_txt)):
@@ -186,7 +205,7 @@ def audit_recsys(
     # (the online loop is predict-then-train, so predict rides along: it
     # must neither recompile per step nor sync implicitly)
     k = tr.cfg.kstep.k
-    jits = {"pull": tr._pull, "train_local": tr._train_local,
+    jits = {"pull": pull_jit, "train_local": tr._train_local,
             "train_merge": tr._train_merge, "predict": tr._predict_jit}
     b = b0
     transfer_err: Optional[str] = None
@@ -220,6 +239,9 @@ def audit_recsys(
             ("implicit host<->device transfer in the inner loop under "
              f"jax.transfer_guard('disallow'): {transfer_err}")
             if transfer_err else ""))
+    if spill is not None:
+        tr.engine.store.close()
+        shutil.rmtree(spill, ignore_errors=True)
     return results
 
 
@@ -300,16 +322,21 @@ def run_trace_audit(
     findings: List[Finding] = []
     report: List[Dict] = []
 
-    combos = [(a, p, False) for a in archs for p in placements]
+    combos = [(a, p, False, "host") for a in archs for p in placements]
     if archs:
-        combos.append((archs[0], "cached", True))   # prefetch representative
-    for arch, placement, prefetch in combos:
-        target = f"{arch}/{placement}" + ("/prefetch" if prefetch else "")
+        # prefetch and disk-store representatives: both axes share the
+        # placement executables by construction, so one cell each suffices
+        combos.append((archs[0], "cached", True, "host"))
+        combos.append((archs[0], "cached", True, "disk"))
+    for arch, placement, prefetch, store in combos:
+        target = (f"{arch}/{placement}" + ("/prefetch" if prefetch else "")
+                  + ("/disk" if store == "disk" else ""))
         if log:
             log(f"trace-audit: {target}")
         try:
             results = audit_recsys(
-                arch, placement, prefetch, check_transfers=check_transfers)
+                arch, placement, prefetch, check_transfers=check_transfers,
+                store=store)
         except Exception:
             results = [CheckResult(
                 target, "audit-error", False,

@@ -54,7 +54,8 @@ def _fsync_path(path: str):
         os.close(fd)
 
 
-def save_tree(directory: str, step: int, tree: Pytree, meta: Optional[Dict] = None):
+def save_tree(directory: str, step: int, tree: Pytree, meta: Optional[Dict] = None,
+              extras_dir: Optional[str] = None):
     """Atomically persist ``tree`` for ``step``. Returns the final dir.
 
     Crash-atomicity recipe: write arrays + manifest into ``step_X.tmp/``,
@@ -64,6 +65,12 @@ def save_tree(directory: str, step: int, tree: Pytree, meta: Optional[Dict] = No
     it first, so a kill between the two renames still leaves every earlier
     checkpoint complete and restorable; the aside copy is deleted only
     after the replacement is in place.
+
+    ``extras_dir``: a fully-written staging directory (the DiskStore's page
+    snapshot) MOVED into ``step_X.tmp/pages`` by rename — it rides the same
+    whole-directory atomicity as the arrays, and because the caller wrote
+    it synchronously before handing it over, an async writer thread never
+    races live page mutations.
     """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
@@ -72,6 +79,8 @@ def save_tree(directory: str, step: int, tree: Pytree, meta: Optional[Dict] = No
         if os.path.exists(stale):
             shutil.rmtree(stale)
     os.makedirs(tmp)
+    if extras_dir is not None:
+        os.rename(extras_dir, os.path.join(tmp, "pages"))
     named, _ = _flatten_with_names(tree)
     arrays = {k: np.asarray(v) for k, v in named.items()}
     arrays_path = os.path.join(tmp, "arrays_proc0.npz")
@@ -155,11 +164,15 @@ class CheckpointManager:
         keep_last: int = 3,
         save_every: int = 100,
         async_save: bool = False,
+        spill_dir: Optional[str] = None,
     ):
         self.directory = directory
         self.keep_last = keep_last
         self.save_every = save_every
         self.async_save = async_save
+        # a DiskStore spill directory to sweep for write-behind wreckage
+        # (*.tmp page files) alongside checkpoint GC — see _gc
+        self.spill_dir = spill_dir
         self._thread: Optional[threading.Thread] = None
         self._exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
@@ -167,20 +180,24 @@ class CheckpointManager:
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.save_every == 0
 
-    def _write(self, step: int, host_tree, meta):
-        save_tree(self.directory, step, host_tree, meta)
+    def _write(self, step: int, host_tree, meta, extras_dir=None):
+        save_tree(self.directory, step, host_tree, meta, extras_dir=extras_dir)
         self._gc()
 
-    def _write_async(self, step: int, host_tree, meta):
+    def _write_async(self, step: int, host_tree, meta, extras_dir=None):
         # A failed background save must not be silent: capture the
         # exception so wait() / the next save() re-raises it on the caller.
         try:
-            self._write(step, host_tree, meta)
+            self._write(step, host_tree, meta, extras_dir=extras_dir)
         except BaseException as e:   # noqa: BLE001 — re-raised from wait()
             self._exc = e
 
-    def save(self, step: int, tree: Pytree, meta: Optional[Dict] = None, block: bool = False):
+    def save(self, step: int, tree: Pytree, meta: Optional[Dict] = None,
+             block: bool = False, extras_dir: Optional[str] = None):
         # Snapshot to host memory first so devices are released immediately.
+        # extras_dir must likewise already be a complete host-side snapshot
+        # (the trainer writes it synchronously) — the async thread only
+        # renames it into the checkpoint.
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         # drain the in-flight background writer first — EVERY path: a
         # blocking save must not race the previous async one, and a pending
@@ -188,11 +205,12 @@ class CheckpointManager:
         self.wait()
         if self.async_save and not block:
             self._thread = threading.Thread(
-                target=self._write_async, args=(step, host_tree, meta), daemon=True
+                target=self._write_async, args=(step, host_tree, meta, extras_dir),
+                daemon=True,
             )
             self._thread.start()
         else:
-            self._write(step, host_tree, meta)
+            self._write(step, host_tree, meta, extras_dir=extras_dir)
 
     def wait(self):
         """Block until the in-flight background save lands; re-raise its
@@ -220,6 +238,22 @@ class CheckpointManager:
         for name in names:
             if re.fullmatch(r"step_\d+\.(tmp|old)", name):
                 shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+            # a page-snapshot staging dir is consumed (renamed away) by
+            # save_tree; one still present belongs to a save that crashed
+            # before the rename
+            if re.fullmatch(r"pages_staging_\d+", name):
+                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+        if self.spill_dir and os.path.isdir(self.spill_dir):
+            # DiskStore write-behind wreckage: a kill mid page write leaves
+            # <page>.tmp next to the (still complete) old page — orphaned
+            # spill pages are dead by construction, sweep them here too
+            for dirpath, _, files in os.walk(self.spill_dir):
+                for fn in files:
+                    if fn.endswith(".tmp"):
+                        try:
+                            os.remove(os.path.join(dirpath, fn))
+                        except OSError:
+                            pass
 
     def restore_latest(self, like: Pytree, shardings=None):
         s = latest_step(self.directory)

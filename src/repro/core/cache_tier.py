@@ -2,28 +2,36 @@
 
 The paper's core systems claim is that terabyte tables never need to be
 accelerator-resident: CTR traffic is Zipf-skewed, so a device cache holding
-the hot working set (plus a host tier holding everything) serves almost all
-pulls locally.  ``CachedBackend`` is that placement behind the
+the hot working set (plus a host/disk tier holding everything) serves almost
+all pulls locally.  ``CachedBackend`` is that placement behind the
 ``EmbeddingBackend`` contract:
 
-  - the FULL table and its AdaGrad accumulator stay host-committed (they are
-    threaded through pull/push untouched except for cache spills — on a real
-    accelerator they would be ``jax.device_put`` to the host platform and
-    touched only by the miss gather / spill scatter DMAs),
+  - the FULL table and its AdaGrad accumulator stay off-device — either
+    host-committed full arrays threaded through pull/push (``HostStore``,
+    the default) or row pages in a spill directory behind an in-RAM page
+    cache (``DiskStore``, ``staged=True``: pull sees only the batch's
+    working-set rows, staged by the store in dedup'd-uid order),
   - a fixed-size device cache of ``cache_rows`` slots holds the hottest rows
-    together with their accumulator rows, an id->slot map, per-slot
-    access-frequency counters, and dirty bits — all carried as a
+    together with their accumulator rows, an id->slot *linear-probe hash
+    map* (``kernels.hash_map``, O(cache_rows) — not O(table_rows)),
+    per-slot access-frequency counters, and dirty bits — all carried as a
     jit-traceable ``CacheState`` pytree through the compiled train step.
 
 Per pull (one batched pass, no host round-trips per id):
-  1. dedup the batch ids (shared ``_dedup``), look every unique id up in the
-     id->slot map — hits are served from the cache;
+  1. dedup the batch ids (shared ``_dedup``), probe every unique id in the
+     hash map (``ops.hash_lookup`` — Pallas kernel or jnp oracle,
+     bit-identical) — hits are served from the cache;
   2. LFU-with-decay eviction: frequencies decay by ``decay``, the coldest
      unprotected slots (never a slot hit by the current batch) are chosen
      with one ``top_k``; evicted *dirty* rows spill value+accumulator back
-     to the host table in one batched scatter;
-  3. misses fetch value+accumulator rows from host in ONE batched gather
-     and are admitted into the victim slots.
+     to the host table in one batched scatter (or, staged, into explicit
+     spill buffers the host applies to the DiskStore at commit);
+  3. misses fetch value+accumulator rows from the host tier in ONE batched
+     gather (staged: the rows are already uid-aligned) and are admitted
+     into the victim slots; the hash map inserts the new (id, slot) pairs
+     — reusing each id's stale bucket if it was cached before — and
+     rebuilds itself from ``slot_uid`` when stale entries crowd the
+     occupancy bound (``n_occupied + capacity > 3H/4``).
 
 ``push`` writes the AdaGrad row update through to the cache only (marking
 slots dirty) with arithmetic bit-identical to ``SparseAdagrad.apply_rows``
@@ -33,46 +41,62 @@ bit-identical to ``GatherBackend`` (asserted by ``tests/test_cache_tier``).
 
 Host<->device traffic is metered in bytes (value + f32 accumulator rows per
 miss fetch and per dirty spill) so ``benchmarks/fig_cache_hier.py`` can
-reproduce the cache-size-vs-traffic story.  At true 1e11-row scale the dense
-``id_slot`` map would be a device hash table; at repro scale the dense int32
-map (4 bytes/row vs 260+ bytes/row for value+accum) keeps it simple.
+reproduce the cache-size-vs-traffic story; the DiskStore adds page-cache
+hit/miss and disk-byte meters below it for the three-level figure.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.embedding_backend import WorkingSet, _dedup, _with_drop_row
 from repro.core.sparse_optim import SparseAdagrad
+from repro.kernels import ref
+from repro.kernels.hash_map import hash_insert, hash_rebuild, hash_table_size
 
 
 class CacheState(NamedTuple):
     """Device-cache state for ONE table (a jit-traceable pytree).
 
+    Everything is O(cache_rows): the id->slot index is the linear-probe
+    hash map (``key_tab``/``slot_tab``, H = ``hash_table_size(C)`` buckets)
+    instead of a dense (table_rows,) array.  An entry ``(k, s)`` is live
+    iff ``slot_uid[s] == k`` — eviction kills entries by overwriting
+    ``slot_uid``, and ``n_occupied`` (occupied buckets, including stale
+    ones) triggers the occupancy-bounded rebuild.
+
     Counter convention: a "lookup" is one (non-dropped) id slot served this
     step; a fetched row serves every same-batch duplicate of its id, so
     ``hit_rate = 1 - fetched / lookups`` is the fraction of lookups served
     without host traffic.  Counters are f32 (monotonic, no x64 in jit).
+
+    ``spill_uid`` exists for the staged (DiskStore) mode: the evicted-dirty
+    ids whose rows ride out through the pull's table/accum outputs for the
+    host to apply at the commit boundary.  Host mode keeps it 0-sized.
     """
 
     slot_uid: jnp.ndarray    # (C,) int32 — logical id held by each slot; -1 empty
-    id_slot: jnp.ndarray     # (rows,) int32 — id -> slot; -1 not cached
+    key_tab: jnp.ndarray     # (H,) int32 — hash bucket keys; -1 EMPTY
+    slot_tab: jnp.ndarray    # (H,) int32 — hash bucket values (cache slots)
+    n_occupied: jnp.ndarray  # () int32 — occupied buckets incl. stale entries
     rows: jnp.ndarray        # (C, dim) table dtype — cached row values
     accum: jnp.ndarray       # (C, dim) f32 — cached AdaGrad accumulator rows
     freq: jnp.ndarray        # (C,) f32 — LFU-with-decay counters
     dirty: jnp.ndarray       # (C,) bool — row updated since admission
+    spill_uid: jnp.ndarray   # (capacity,) int32 staged mode; (0,) host mode
     lookups: jnp.ndarray     # () f32 — id slots served
     fetched: jnp.ndarray     # () f32 — unique rows fetched from host (misses)
     evictions: jnp.ndarray   # () f32 — occupied slots reassigned
+    rebuilds: jnp.ndarray    # () f32 — hash-map occupancy rebuilds
     bytes_h2d: jnp.ndarray   # () f32 — host->device fetch traffic
     bytes_d2h: jnp.ndarray   # () f32 — device->host spill traffic
 
 
 class CachedBackend:
-    """Hot/cold placement: device cache over a host-resident table.
+    """Hot/cold placement: device cache over a host- or disk-resident table.
 
     Parameters
     ----------
@@ -82,24 +106,40 @@ class CachedBackend:
         bit-identical to ``GatherBackend``.
     decay: multiplicative LFU frequency decay per pull (1.0 = plain LFU;
         lower values forget stale heat faster — drifting Zipf heads).
-    fused: serve the working-set row gather and the push through the fused
-        cache-tier Pallas kernels (``kernels.ops.gather_rows_cached`` /
-        ``sparse_adagrad_cached_apply``): the id→slot indirection is folded
-        into the kernel's index stream, so the (capacity, dim) data moves in
-        ONE indexed pass instead of slot-translate-then-gather — and the
-        push applies AdaGrad straight into the aliased cache buffers.
-        Bit-identical to the unfused path (same pinned row math).
+    fused: serve the hash-map probe, the working-set row gather, and the
+        push through the fused cache-tier Pallas kernels
+        (``kernels.ops.hash_lookup`` / ``gather_rows_cached`` /
+        ``sparse_adagrad_cached_apply``): the probe's id→slot output IS the
+        index stream of the gather/scatter kernels, so the (capacity, dim)
+        data moves in ONE indexed pass with no slot-translate materialized
+        — and the push applies AdaGrad straight into the aliased cache
+        buffers.  Bit-identical to the unfused path (same map contents,
+        same pinned row math).
+    staged: DiskStore mode.  The pull's ``table``/``accum`` inputs are the
+        batch working-set rows staged in dedup'd-uid order (not the full
+        table); miss fetches read them positionally, and evicted-dirty rows
+        leave through the pull's table/accum OUTPUTS (ids in
+        ``state.spill_uid``) for the host to write behind at the commit
+        boundary.  Requires ``capacity`` (sizes the spill buffers).
+    capacity: the pull capacity, required (and only used) when ``staged``.
     """
 
     def __init__(self, cache_rows: int, decay: float = 0.95,
-                 fused: bool = False):
+                 fused: bool = False, staged: bool = False,
+                 capacity: Optional[int] = None):
         if cache_rows <= 0:
             raise ValueError(f"cache_rows must be positive, got {cache_rows}")
         if not 0.0 < decay <= 1.0:
             raise ValueError(f"decay must be in (0, 1], got {decay}")
+        if staged and not capacity:
+            raise ValueError("staged CachedBackend requires capacity "
+                             "(sizes the per-pull spill buffers)")
         self.cache_rows = int(cache_rows)
         self.decay = float(decay)
         self.fused = bool(fused)
+        self.staged = bool(staged)
+        self.capacity = int(capacity) if capacity else None
+        self.hash_buckets = hash_table_size(self.cache_rows)
 
     # tables stay in logical row layout; the hierarchy lives in CacheState
     def prepare(self, table: jnp.ndarray) -> jnp.ndarray:
@@ -109,25 +149,38 @@ class CachedBackend:
         return table
 
     def init_state(self, table: jnp.ndarray) -> CacheState:
-        n_rows, dim = table.shape
+        dim = table.shape[1]
         C = self.cache_rows
+        H = self.hash_buckets
+        spill_cap = self.capacity if self.staged else 0
         # counters get DISTINCT buffers: the state pytree is donated into
-        # the compiled pull stage, and donating one shared zero five times
+        # the compiled pull stage, and donating one shared zero six times
         # is an XLA error ("attempt to donate the same buffer twice")
         z = lambda: jnp.zeros((), jnp.float32)
         return CacheState(
             slot_uid=jnp.full((C,), -1, jnp.int32),
-            id_slot=jnp.full((n_rows,), -1, jnp.int32),
+            key_tab=jnp.full((H,), -1, jnp.int32),
+            slot_tab=jnp.zeros((H,), jnp.int32),
+            n_occupied=jnp.zeros((), jnp.int32),
             rows=jnp.zeros((C, dim), table.dtype),
             accum=jnp.zeros((C, dim), jnp.float32),
             freq=jnp.zeros((C,), jnp.float32),
             dirty=jnp.zeros((C,), bool),
-            lookups=z(), fetched=z(), evictions=z(), bytes_h2d=z(), bytes_d2h=z(),
+            spill_uid=jnp.full((spill_cap,), -1, jnp.int32),
+            lookups=z(), fetched=z(), evictions=z(), rebuilds=z(),
+            bytes_h2d=z(), bytes_d2h=z(),
         )
 
     def _row_bytes(self, table: jnp.ndarray) -> int:
         # one row moved = value row + its f32 accumulator row
         return table.shape[1] * (jnp.dtype(table.dtype).itemsize + 4)
+
+    def _lookup(self, key_tab, slot_tab, slot_uid, uids):
+        if self.fused:
+            from repro.kernels import ops
+
+            return ops.hash_lookup(key_tab, slot_tab, slot_uid, uids)
+        return ref.hash_lookup_ref(key_tab, slot_tab, slot_uid, uids)
 
     def pull(self, table, accum, state: CacheState, flat_ids, capacity: int):
         C = self.cache_rows
@@ -136,6 +189,12 @@ class CachedBackend:
                 f"cache_rows ({C}) must cover the pull capacity ({capacity}): "
                 f"one batch's working set must fit in the device cache"
             )
+        if self.staged and table.shape[0] != capacity:
+            raise ValueError(
+                f"staged pull expects ({capacity}, dim) working-set rows "
+                f"from the RowStore, got {table.shape}"
+            )
+        H = self.hash_buckets
         n_rows = table.shape[0]
         uids, inverse, n_dropped = _dedup(flat_ids, capacity)
         # dedup pads by repeating an already-present id: count each unique id
@@ -143,7 +202,19 @@ class CachedBackend:
         valid = jnp.concatenate(
             [jnp.ones((1,), bool), uids[1:] > uids[:-1]]
         )
-        slot = state.id_slot[uids]                       # (capacity,)
+
+        # ---- hash-map occupancy rebuild: stale entries (evicted ids) pile
+        # up because liveness is checked, not deleted; rebuilding from
+        # slot_uid before occupancy can cross 3H/4 keeps every probe chain
+        # EMPTY-terminated and every insert placeable.
+        need_rebuild = state.n_occupied + capacity > (3 * H) // 4
+        key_tab, slot_tab, n_occ = jax.lax.cond(
+            need_rebuild,
+            lambda: hash_rebuild(state.slot_uid, H),
+            lambda: (state.key_tab, state.slot_tab, state.n_occupied),
+        )
+
+        slot = self._lookup(key_tab, slot_tab, state.slot_uid, uids)
         hit = valid & (slot >= 0)
         miss = valid & (slot < 0)
         n_miss = jnp.sum(miss.astype(jnp.int32))
@@ -168,52 +239,67 @@ class CachedBackend:
         evict = used & (v_old >= 0)
         spill = evict & state.dirty[victims]
 
-        # ---- spill evicted dirty rows back to host (one batched scatter)
-        spill_idx = jnp.where(spill, v_old, n_rows)
-        new_table = table.at[spill_idx].set(
-            state.rows[victims].astype(table.dtype), mode="drop"
-        )
-        new_haccum = accum.at[spill_idx].set(state.accum[victims], mode="drop")
-        id_slot = state.id_slot.at[jnp.where(evict, v_old, n_rows)].set(
-            -1, mode="drop"
-        )
+        # ---- spill evicted dirty rows back to the cold tier
+        if self.staged:
+            # rows leave through the pull outputs; the host scatters them
+            # into the DiskStore page cache at the commit boundary
+            spill_uid = jnp.where(spill, v_old, -1)
+            new_table = state.rows[victims].astype(table.dtype)
+            new_haccum = state.accum[victims]
+            fetched_rows = table      # staged working-set rows, uid-aligned
+            fetched_accum = accum
+        else:
+            # one batched scatter into the host-resident table
+            spill_idx = jnp.where(spill, v_old, n_rows)
+            new_table = table.at[spill_idx].set(
+                state.rows[victims].astype(table.dtype), mode="drop"
+            )
+            new_haccum = accum.at[spill_idx].set(
+                state.accum[victims], mode="drop")
 
-        # ---- fetch misses from host in ONE batched gather (value + accum)
+        # ---- fetch misses from the cold tier in ONE batched gather
         miss_rank = jnp.cumsum(miss.astype(jnp.int32)) - 1
         target = jnp.where(
             miss, victims[jnp.clip(miss_rank, 0, capacity - 1)], C
         )
-        fetch_idx = jnp.where(miss, uids, 0)
-        fetched_rows = jnp.take(new_table, fetch_idx, axis=0)
-        fetched_accum = jnp.take(new_haccum, fetch_idx, axis=0)
+        if not self.staged:
+            fetch_idx = jnp.where(miss, uids, 0)
+            fetched_rows = jnp.take(new_table, fetch_idx, axis=0)
+            fetched_accum = jnp.take(new_haccum, fetch_idx, axis=0)
 
-        # ---- admit: map ids to their new slots, install rows, reset heat
+        # ---- admit: install rows, reset heat, insert (id, slot) pairs
         slot_uid = state.slot_uid.at[target].set(uids, mode="drop")
         cache_rows = state.rows.at[target].set(fetched_rows, mode="drop")
         cache_accum = state.accum.at[target].set(fetched_accum, mode="drop")
         dirty = state.dirty.at[target].set(False, mode="drop")
         freq = freq.at[target].set(0.0, mode="drop")
-        id_slot = id_slot.at[jnp.where(miss, uids, n_rows)].set(
-            target, mode="drop"
+        key_tab, slot_tab, n_occ = hash_insert(
+            key_tab, slot_tab, n_occ, uids, target, miss
         )
-        # every working-set id is now cached; touch its slot by multiplicity
-        slot_now = id_slot[uids]
+        # every working-set id is now cached: hits keep their probed slot,
+        # misses took their victim slot, and dedup pads (repeats of the
+        # first uid) share the first position's slot — no second probe.
+        slot0 = jnp.where(miss[0], target[0], slot[0])
+        slot_now = jnp.where(valid, jnp.where(miss, target, slot), slot0)
         freq = freq.at[slot_now].add(counts, mode="drop")
 
         if self.fused:
             from repro.kernels import ops
 
-            # id→slot indirection folded into the kernel's index stream
-            wrows = ops.gather_rows_cached(cache_rows, id_slot, uids)
+            # the probe output drives the kernel's index stream directly
+            wrows = ops.gather_rows_cached(cache_rows, slot_now)
         else:
             wrows = jnp.take(cache_rows, slot_now, axis=0)
         rb = self._row_bytes(table)
         new_state = CacheState(
-            slot_uid=slot_uid, id_slot=id_slot, rows=cache_rows,
-            accum=cache_accum, freq=freq, dirty=dirty,
+            slot_uid=slot_uid, key_tab=key_tab, slot_tab=slot_tab,
+            n_occupied=n_occ, rows=cache_rows, accum=cache_accum,
+            freq=freq, dirty=dirty,
+            spill_uid=spill_uid if self.staged else state.spill_uid,
             lookups=state.lookups + jnp.sum(counts),
             fetched=state.fetched + n_miss.astype(jnp.float32),
             evictions=state.evictions + jnp.sum(evict.astype(jnp.float32)),
+            rebuilds=state.rebuilds + need_rebuild.astype(jnp.float32),
             bytes_h2d=state.bytes_h2d + n_miss.astype(jnp.float32) * rb,
             bytes_d2h=state.bytes_d2h
             + jnp.sum(spill.astype(jnp.float32)) * rb,
@@ -223,17 +309,19 @@ class CachedBackend:
 
     def push(self, table, accum, state: CacheState, ws: WorkingSet, row_grads,
              opt: SparseAdagrad):
-        """Write-through to the CACHE only (host sees the update at spill or
-        flush time): the same ``SparseAdagrad.apply_rows`` update as the
-        gather placement, applied to the cached rows via the id->slot map —
-        bit-identical arithmetic by construction."""
+        """Write-through to the CACHE only (the cold tier sees the update at
+        spill or flush time): the same ``SparseAdagrad.apply_rows`` update
+        as the gather placement, applied to the cached rows via the hash
+        map — bit-identical arithmetic by construction."""
         uids = ws.uids
-        slot = state.id_slot[uids]          # all cached after the pull
+        # all working-set ids are live in the map after the matching pull
+        slot = self._lookup(
+            state.key_tab, state.slot_tab, state.slot_uid, uids)
         if self.fused:
             from repro.kernels import ops
 
             new_rows, new_accum = ops.sparse_adagrad_cached_apply(
-                state.rows, state.accum, state.id_slot, uids,
+                state.rows, state.accum, slot,
                 row_grads[: uids.shape[0]],
                 lr=opt.cfg.lr, eps=opt.cfg.eps,
             )
@@ -248,14 +336,24 @@ class CachedBackend:
         return table, accum, new_state
 
     def flush(self, table, accum, state: CacheState):
-        """Write every dirty cached row (value + accumulator) back to host —
-        checkpoint/export consistency point."""
-        n_rows = table.shape[0]
+        """Write every dirty cached row (value + accumulator) back to the
+        cold tier — checkpoint/export consistency point.
+
+        Staged mode: the host applies the dirty rows to the DiskStore
+        itself (it reads ``slot_uid``/``dirty``/``rows``/``accum`` from the
+        state *before* calling this — see ``EmbeddingEngine.flush``); here
+        only the dirty bits clear and the spill meter advances.
+        """
         dirty_occ = state.dirty & (state.slot_uid >= 0)
-        idx = jnp.where(dirty_occ, state.slot_uid, n_rows)
-        new_table = table.at[idx].set(state.rows.astype(table.dtype), mode="drop")
-        new_accum = accum.at[idx].set(state.accum, mode="drop")
         n = jnp.sum(dirty_occ.astype(jnp.float32))
+        if self.staged:
+            new_table, new_accum = table, accum
+        else:
+            n_rows = table.shape[0]
+            idx = jnp.where(dirty_occ, state.slot_uid, n_rows)
+            new_table = table.at[idx].set(
+                state.rows.astype(table.dtype), mode="drop")
+            new_accum = accum.at[idx].set(state.accum, mode="drop")
         new_state = state._replace(
             dirty=jnp.zeros_like(state.dirty),
             bytes_d2h=state.bytes_d2h + n * self._row_bytes(table),
@@ -265,13 +363,14 @@ class CachedBackend:
     def stats(self, state: CacheState) -> dict:
         """Raw counters as python floats (call OUTSIDE jit).
 
-        One explicit ``jax.device_get`` materializes all five scalars in a
+        One explicit ``jax.device_get`` materializes all six scalars in a
         single deliberate d2h hop — strict-transfers-clean, where per-field
-        ``float()`` would be five implicit syncs."""
+        ``float()`` would be six implicit syncs."""
         got = jax.device_get({
             "lookups": state.lookups,
             "fetched": state.fetched,
             "evictions": state.evictions,
+            "rebuilds": state.rebuilds,
             "bytes_h2d": state.bytes_h2d,
             "bytes_d2h": state.bytes_d2h,
         })

@@ -164,10 +164,20 @@ class GatherBackend:
     straight into the aliased table/accumulator buffers instead of
     materializing the intermediate updated-rows arrays — bit-identical to
     the unfused scatter (same pinned row math feeds both).
+
+    ``staged=True`` is the DiskStore dataflow (``--store disk``): the
+    ``table``/``accum`` the jitted pull/push see are NOT the full table but
+    the batch's (capacity, dim) working-set rows, staged by the
+    ``RowStore`` in dedup'd-uid order.  Pull just appends the drop row;
+    push applies the same AdaGrad row math elementwise
+    (``SparseAdagrad.apply_staged``) and returns the updated rows through
+    the table/accum outputs for the host to commit.  Bit-identical to the
+    resident path at every valid (first-occurrence) position.
     """
 
-    def __init__(self, fused: bool = False):
+    def __init__(self, fused: bool = False, staged: bool = False):
         self.fused = fused
+        self.staged = staged
 
     def init_state(self, table: jnp.ndarray):
         return ()
@@ -183,16 +193,35 @@ class GatherBackend:
 
     def pull(self, table, accum, state, flat_ids, capacity: int):
         uids, inv, n_dropped = _dedup(flat_ids, capacity)
-        rows = _with_drop_row(jnp.take(table, uids, axis=0))
+        if self.staged:
+            if table.shape[0] != capacity:
+                raise ValueError(
+                    f"staged pull expects ({capacity}, dim) working-set rows "
+                    f"from the RowStore, got {table.shape}"
+                )
+            # the store already gathered rows in dedup'd-uid order — the
+            # host mirrors _dedup exactly (np.unique, truncate-keep-smallest,
+            # pad with the minimum), so rows[i] IS T[uids[i]]
+            rows = _with_drop_row(table)
+        else:
+            rows = _with_drop_row(jnp.take(table, uids, axis=0))
         return WorkingSet(uids, inv, rows, n_dropped), table, accum, state
 
     def push(self, table, accum, state, ws: WorkingSet, row_grads,
              opt: SparseAdagrad):
         # row_grads[capacity] belongs to the drop row — discard it.
-        new_table, new_accum = opt.apply_rows(
-            table, accum, ws.uids, row_grads[: ws.uids.shape[0]],
-            fused=self.fused,
-        )
+        if self.staged:
+            # elementwise AdaGrad on the staged rows; the updated buffers
+            # ride out through the table/accum outputs and the host commits
+            # the valid positions into the DiskStore at the next boundary
+            new_table, new_accum = opt.apply_staged(
+                table, accum, row_grads[: ws.uids.shape[0]]
+            )
+        else:
+            new_table, new_accum = opt.apply_rows(
+                table, accum, ws.uids, row_grads[: ws.uids.shape[0]],
+                fused=self.fused,
+            )
         return new_table, new_accum, state
 
 
@@ -302,6 +331,10 @@ def make_backend(
     tests and the ``--placement`` acceptance check rely on).  ``cached``
     takes ``cache_rows`` (device cache size, required) and ``decay``
     (LFU decay, optional) — see ``repro.core.cache_tier.CachedBackend``.
+    ``staged=True`` (gather/cached; plus ``capacity`` for cached) selects
+    the DiskStore dataflow where pull/push see staged working-set rows
+    instead of the resident table — wired by ``runtime.factory`` when
+    ``store="disk"``.
 
     ``fused`` selects the fused Pallas pull/push kernels where a placement
     has them (gather: fused push; cached: fused pull + push with the
@@ -314,12 +347,13 @@ def make_backend(
         # mesh is legitimate shared context (GSPMD shards the gather);
         # placement-specific knobs are not — dropping them silently would
         # make a capacity-bounded experiment run unbounded.
+        staged = kwargs.pop("staged", False)
         if kwargs:
             raise TypeError(
                 f"placement 'gather' does not accept {sorted(kwargs)} "
                 f"(routed/cached-only options)"
             )
-        return GatherBackend(fused=fused)
+        return GatherBackend(fused=fused, staged=staged)
     if placement == "routed":
         if mesh is None:
             mesh = jax.make_mesh((jax.device_count(),), ("data",))

@@ -51,6 +51,7 @@ from typing import Any, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.embedding_backend import (  # noqa: F401  (re-exported API)
     EmbeddingBackend,
@@ -59,6 +60,7 @@ from repro.core.embedding_backend import (  # noqa: F401  (re-exported API)
     make_backend,
     pull_working_set,
 )
+from repro.core.row_store import HostStore
 from repro.core.sparse_optim import (
     SparseAdagrad,
     SparseAdagradConfig,
@@ -139,6 +141,7 @@ class EmbeddingEngine:
         capacity: int,
         optimizer=None,
         backend: Optional[EmbeddingBackend] = None,
+        store=None,
     ):
         self.specs = dict(specs)
         self.capacity = int(capacity)
@@ -148,6 +151,24 @@ class EmbeddingEngine:
             optimizer = SparseAdagrad(optimizer)
         self.opt: SparseAdagrad = optimizer
         self.backend: EmbeddingBackend = backend if backend is not None else GatherBackend()
+        # the cold bottom of the hierarchy: HostStore (full jnp tables, the
+        # default) or DiskStore (paged spill dir; pull/push see staged
+        # working-set rows).  The backend's dataflow must match the store.
+        self.store = store if store is not None else HostStore()
+        staged = bool(getattr(self.backend, "staged", False))
+        if self.store.kind == "disk" and not staged:
+            raise ValueError(
+                "DiskStore requires a staged backend (make_backend(..., "
+                "staged=True)): the pull must consume working-set rows, "
+                "not a resident table")
+        if self.store.kind != "disk" and staged:
+            raise ValueError(
+                "staged backend requires store='disk': nothing stages the "
+                "working-set rows under the host store")
+        # per-table (uids, valid) of the batch currently staged — what the
+        # gather-staged absorb needs to commit push outputs to the store
+        self._staged_pending: Dict[str, Any] = {}
+        self._staged_stages: Dict[bool, Any] = {}
         self._pull_jits: Dict[bool, Any] = {}   # donate flag -> jitted stage
         # id extraction runs EVERY step in front of the pull jit; compiled
         # once so per-step eager column slices don't ship their start index
@@ -157,14 +178,29 @@ class EmbeddingEngine:
 
     # ------------------------------------------------------------ lifecycle
     def init(self, rng: jax.Array, scale: float = 0.01) -> Dict[str, jnp.ndarray]:
-        """Random-normal logical init, converted to the backend's layout."""
+        """Random-normal logical init, converted to the backend's layout.
+
+        Under the DiskStore the SAME per-table PRNG values are generated
+        (host/disk parity is bit-exact by construction) but land in the
+        store's page files; the returned "tables" are the (capacity, dim)
+        staging buffers the pull/push stages thread instead.
+        """
         tables = {}
         for i, (name, spec) in enumerate(sorted(self.specs.items())):
             key = jax.random.fold_in(rng, i)
             t = (
                 jax.random.normal(key, (spec.rows, spec.dim), jnp.float32) * scale
             ).astype(spec.dtype)
-            tables[name] = self.backend.prepare(t)
+            if self.store.kind == "disk":
+                vals = np.asarray(jax.device_get(t))
+                self.store.create_table(
+                    name, spec.rows, spec.dim, spec.dtype,
+                    init_rows_fn=lambda a, b, _v=vals: _v[a:b],
+                    accum_init=self.opt.cfg.initial_accumulator,
+                )
+                tables[name] = jnp.zeros((self.capacity, spec.dim), spec.dtype)
+            else:
+                tables[name] = self.backend.prepare(t)
         return tables
 
     def init_state(self, tables: Dict[str, jnp.ndarray]) -> SparseAdagradState:
@@ -254,6 +290,10 @@ class EmbeddingEngine:
         With ``donate=True`` the table/accumulator/state buffers are donated
         (the pull consumes the committed sparse state and hands back the
         post-pull state; callers must drop their old references).
+
+        Under the DiskStore the returned callable wraps the SAME jitted
+        executable with the host-side staging protocol (read-ahead ->
+        absorb -> gather -> stage); see ``_disk_pull_stage``.
         """
         donate = bool(donate)
         if donate not in self._pull_jits:
@@ -262,7 +302,128 @@ class EmbeddingEngine:
             self._pull_jits[donate] = jax.jit(
                 _pull, donate_argnums=(0, 1, 2) if donate else ()
             )
+        if self.store.kind == "disk":
+            return self._disk_pull_stage(donate)
         return self._pull_jits[donate]
+
+    # ----------------------------------------------- disk-store staging path
+    def host_dedup(self, ids_np: np.ndarray):
+        """Numpy mirror of ``_dedup``'s uid layout, run at staging time.
+
+        Must match ``jnp.unique(size=capacity, fill_value=None)`` bit-for-
+        bit: sorted ascending unique, truncated to capacity KEEPING THE
+        SMALLEST, padded by repeating the minimum.  ``valid`` marks first
+        occurrences (pads repeat an earlier value, so a strict > test finds
+        them) — only valid positions commit back to the store, because a
+        last-wins numpy scatter would let pad rows overwrite real updates.
+        """
+        cap = self.capacity
+        u = np.unique(np.asarray(ids_np, np.int64).reshape(-1))
+        k = min(len(u), cap)
+        uids = np.full((cap,), u[0], np.int64)
+        uids[:k] = u[:k]
+        valid = np.ones((cap,), bool)
+        valid[1:] = uids[1:] > uids[:-1]
+        return uids, valid
+
+    def _is_cached(self) -> bool:
+        return getattr(self.backend, "cache_rows", None) is not None
+
+    def absorb_staged(self, tables, accum, states):
+        """Commit the previous step's staged outputs into the DiskStore.
+
+        The explicit ``jax.device_get`` is the ONE deliberate d2h boundary
+        of the disk path (strict-transfers-exempt); it blocks on the train
+        step still holding these buffers — which is why ``readahead`` is
+        issued first, so page fault-in overlaps that wait.
+
+        cached: the pull's table/accum OUTPUTS are the evicted-dirty spill
+        rows, ids in ``state.spill_uid`` (-1 = no spill).  gather: the
+        push's outputs are the updated staged rows of the batch recorded in
+        ``_staged_pending``.  Both writes are of absolute row values, so
+        re-absorbing (save-then-continue, resume replay) is idempotent.
+        """
+        if self._is_cached():
+            for n in self.specs:
+                got = jax.device_get({
+                    "uid": states[n].spill_uid,
+                    "rows": tables[n], "accum": accum[n],
+                })
+                m = np.asarray(got["uid"]) >= 0
+                if m.any():
+                    self.store.scatter(
+                        n, np.asarray(got["uid"])[m],
+                        np.asarray(got["rows"])[m],
+                        np.asarray(got["accum"])[m])
+        else:
+            for n, (uids, valid) in self._staged_pending.items():
+                got = jax.device_get({"rows": tables[n], "accum": accum[n]})
+                self.store.scatter(
+                    n, uids[valid],
+                    np.asarray(got["rows"])[valid],
+                    np.asarray(got["accum"])[valid])
+            self._staged_pending = {}
+
+    def _disk_pull_stage(self, donate: bool):
+        """Host staging wrapped around the jitted pull (DiskStore only).
+
+        Order is the latency-hiding protocol: (1) the batch's dedup'd id
+        stream is computed host-side (cheap numpy), (2) ``readahead``
+        queues its pages for background fault-in — disk reads overlap the
+        device still training the previous batch, (3) ``absorb_staged`` commits
+        the previous staged outputs (this is the call that blocks on the
+        train step), (4) ``gather`` finds the pages warm, (5) the rows are
+        ``device_put`` and the SAME jitted pull executable dispatches.
+        """
+        if donate in self._staged_stages:
+            return self._staged_stages[donate]
+        inner = self._pull_jits[donate]
+
+        def staged_pull(tables, accum, states, flat_ids):
+            ids_np = jax.device_get(flat_ids)
+            ded = {n: self.host_dedup(ids_np[n]) for n in ids_np}
+            for n, (uids, valid) in ded.items():
+                self.store.readahead(n, uids[valid])
+            self.absorb_staged(tables, accum, states)
+            staged_t, staged_a = {}, {}
+            for n, (uids, _valid) in ded.items():
+                rows, acc = self.store.gather(n, uids)
+                staged_t[n] = jax.device_put(rows)
+                staged_a[n] = jax.device_put(acc)
+            self._staged_pending = ded
+            return inner(staged_t, staged_a, states, flat_ids)
+
+        self._staged_stages[donate] = staged_pull
+        return staged_pull
+
+    def sync_store(self, tables, accum, states):
+        """DiskStore commit point (checkpoint/export): absorb the pending
+        staged outputs, write the device cache's dirty rows through, and
+        persist every dirty page.  Leaves device state untouched (dirty
+        bits stay set — the next sync rewrites the same values, which is
+        idempotent), so it is safe at any commit boundary.  No-op under the
+        host store."""
+        if self.store.kind != "disk":
+            return
+        self.absorb_staged(tables, accum, states)
+        if self._is_cached():
+            for n in self.specs:
+                got = jax.device_get({
+                    "slot_uid": states[n].slot_uid, "dirty": states[n].dirty,
+                    "rows": states[n].rows, "accum": states[n].accum,
+                })
+                m = np.asarray(got["dirty"]) & (np.asarray(got["slot_uid"]) >= 0)
+                if m.any():
+                    self.store.scatter(
+                        n, np.asarray(got["slot_uid"])[m],
+                        np.asarray(got["rows"])[m],
+                        np.asarray(got["accum"])[m])
+        self.store.flush()
+
+    def reset_staging(self):
+        """Drop pending staged-batch metadata (checkpoint resume: the
+        restored pages already contain everything committed at save)."""
+        self._staged_pending = {}
 
     def pull_async(self, tables, accum, states, batch, donate: bool = True):
         """Dispatch (do NOT block on) the pull stage for ``batch``.
@@ -305,13 +466,16 @@ class EmbeddingEngine:
         stateless placements).  Call outside jit — materializes the device
         scalars.  Interval (per-logging-window) deltas are the trainer's
         job: it snapshots these totals at each boundary."""
-        stats_fn = getattr(self.backend, "stats", None)
-        if stats_fn is None:
-            return {}
         tot: Dict[str, float] = {}
-        for s in states.values():
-            for k, v in stats_fn(s).items():
-                tot[k] = tot.get(k, 0.0) + v
+        stats_fn = getattr(self.backend, "stats", None)
+        if stats_fn is not None:
+            for s in states.values():
+                for k, v in stats_fn(s).items():
+                    tot[k] = tot.get(k, 0.0) + v
+        # the store's page-cache/disk meters ride the same counter protocol
+        # (cumulative floats; the trainer's logger diffs them per interval)
+        for k, v in self.store.stats().items():
+            tot[k] = tot.get(k, 0.0) + float(v)
         return tot
 
     @staticmethod
@@ -320,19 +484,35 @@ class EmbeddingEngine:
 
         An interval with zero lookups (idle / predict-only window) reports
         ``cache_hit_rate = 0.0`` — not the fake perfect 1.0 that
-        ``1 - 0/max(0, 1)`` would produce in fit history."""
+        ``1 - 0/max(0, 1)`` would produce in fit history.  Under the
+        DiskStore the page-tier meters ride along (``page_hit_rate``,
+        ``disk_bytes_read``/``disk_bytes_written``, ``pages_evicted``) —
+        the third level of the hierarchy."""
         if not counters:
             return {}
-        lookups = counters["lookups"]
-        hit_rate = (
-            0.0 if lookups <= 0.0 else 1.0 - counters["fetched"] / lookups
-        )
-        return {
-            "cache_hit_rate": hit_rate,
-            "evictions": int(counters["evictions"]),
-            "cache_bytes_h2d": counters["bytes_h2d"],
-            "cache_bytes_d2h": counters["bytes_d2h"],
-        }
+        out: Dict[str, float] = {}
+        if "lookups" in counters:
+            lookups = counters["lookups"]
+            hit_rate = (
+                0.0 if lookups <= 0.0 else 1.0 - counters["fetched"] / lookups
+            )
+            out.update({
+                "cache_hit_rate": hit_rate,
+                "evictions": int(counters["evictions"]),
+                "cache_bytes_h2d": counters["bytes_h2d"],
+                "cache_bytes_d2h": counters["bytes_d2h"],
+            })
+        if "page_hits" in counters:
+            touches = counters["page_hits"] + counters["page_misses"]
+            out.update({
+                "page_hit_rate": (
+                    0.0 if touches <= 0.0 else counters["page_hits"] / touches
+                ),
+                "pages_evicted": int(counters["pages_evicted"]),
+                "disk_bytes_read": counters["disk_bytes_read"],
+                "disk_bytes_written": counters["disk_bytes_written"],
+            })
+        return out
 
     def cache_stats(self, states) -> Dict[str, float]:
         """Whole-run cache stats ({} for stateless placements)."""

@@ -30,6 +30,16 @@ Invariants (all loud, never silent):
     the logically-identical post-pull trees in the pending slot are the only
     valid handles until commit (checkpointing must therefore happen at
     commit boundaries — ``HybridTrainer.save`` enforces this).
+
+Under ``--store disk`` the engine's pull stage is the host-staging wrapper
+(``EmbeddingEngine._disk_pull_stage``), and this prefetcher needs no change:
+``dispatch`` runs the wrapper, whose read-ahead queues the next batch's
+pages BEFORE its absorb blocks on the train step still holding the previous
+staged outputs — so disk fault-in overlaps device compute exactly like the
+pull itself does.  The absorb-at-dispatch ordering also means that while a
+pull is pending the store is fully current, which ``HybridTrainer.predict``
+relies on (it must NOT absorb the pending pass-through buffers itself; see
+``_predict_disk``).
 """
 
 from __future__ import annotations

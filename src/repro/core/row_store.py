@@ -1,0 +1,475 @@
+"""RowStore — the cold bottom of the three-level parameter hierarchy.
+
+The paper's terabyte tables live on SSD, not in host RAM: host memory holds
+only a page cache over the full table, and the device cache (cache_tier)
+sits above that.  ``RowStore`` is the storage abstraction behind the
+``EmbeddingBackend`` state contract:
+
+``HostStore``
+    Today's behavior, the default: tables are full jnp arrays threaded
+    through pull/push; the store itself is a stateless tag.
+
+``DiskStore``
+    The SSD tier.  Per table, the full value table and its AdaGrad
+    accumulator live in fixed-size row pages (``page_rows`` rows each) as
+    ``page_%06d.npz`` files under ``<spill_dir>/<table>/``, behind an
+    in-RAM LRU page cache (``page_cache_pages`` pages; ``None`` = unbounded
+    — the full-mirror parity configuration).  Three IO disciplines keep
+    disk latency off the critical path and crashes survivable:
+
+    *read-ahead*: the prefetch pipeline knows next batch's dedup'd id
+    stream before the device needs the rows; ``readahead(uids)`` queues the
+    pages those uids live on for a background thread to fault in while the
+    device is still training on the previous batch, so the blocking
+    ``gather`` call finds them warm.
+
+    *write-behind*: ``scatter`` updates pages in the RAM cache and marks
+    them dirty; pages are persisted by a background writer either on LRU
+    eviction or at ``flush()``.  Reads of a page mid-write are served from
+    an in-flight lookaside copy — never from a half-written file.
+
+    *rename-aside page writes*: every page write goes to ``<page>.tmp``
+    (+fsync) then ``os.replace`` onto the final name, matching
+    ``checkpoint/ckpt.py`` semantics — a kill mid write-behind leaves
+    either the old complete page or the new complete page, plus at worst a
+    stray ``.tmp`` that ``__init__`` and the CheckpointManager GC sweep.
+
+    Background-thread exceptions are captured and re-raised on the next
+    API call (the CheckpointManager idiom) — IO errors surface at commit
+    boundaries instead of killing daemon threads silently.
+
+All IO is host-side numpy at commit boundaries; nothing here runs under
+jit.  Byte/hit meters (``stats()``) feed ``benchmarks/fig_cache_hier.py``'s
+three-level sweep.  See docs/storage.md for the full hierarchy story.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+import queue
+import threading
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+_PAGE_FMT = "page_%06d.npz"
+
+
+class HostStore:
+    """Host-RAM resident tables (the default) — a stateless placement tag.
+
+    The engine threads full jnp tables through pull/push exactly as before;
+    the store participates in nothing and meters nothing.
+    """
+
+    kind = "host"
+
+    def close(self):
+        pass
+
+    def flush(self):
+        pass
+
+    def stats(self) -> dict:
+        return {}
+
+
+class _TableFile:
+    """One table's page set under ``<root>/<name>/`` + its dirty/meta state."""
+
+    def __init__(self, root: str, name: str, rows: int, dim: int,
+                 dtype: np.dtype, page_rows: int):
+        self.dir = os.path.join(root, name)
+        self.rows = int(rows)
+        self.dim = int(dim)
+        self.dtype = np.dtype(dtype)
+        self.page_rows = int(page_rows)
+        self.n_pages = -(-self.rows // self.page_rows)  # ceil div
+        os.makedirs(self.dir, exist_ok=True)
+
+    def page_path(self, p: int) -> str:
+        return os.path.join(self.dir, _PAGE_FMT % p)
+
+    def page_len(self, p: int) -> int:
+        """Rows in page p (the last page may be short)."""
+        return min(self.page_rows, self.rows - p * self.page_rows)
+
+
+class DiskStore:
+    """Paged spill-directory row store with read-ahead and write-behind.
+
+    Parameters
+    ----------
+    spill_dir: directory holding one subdirectory of pages per table.
+    page_rows: rows per page file.
+    page_cache_pages: RAM page-cache capacity in pages across all tables;
+        ``None`` = unbounded (every touched page stays resident — the
+        full-mirror configuration that is bit-identical to ``HostStore``).
+    """
+
+    kind = "disk"
+
+    def __init__(self, spill_dir: str, page_rows: int = 1024,
+                 page_cache_pages: Optional[int] = None):
+        if page_rows <= 0:
+            raise ValueError(f"page_rows must be positive, got {page_rows}")
+        if page_cache_pages is not None and page_cache_pages <= 0:
+            raise ValueError(
+                f"page_cache_pages must be positive or None, "
+                f"got {page_cache_pages}")
+        self.spill_dir = os.path.abspath(spill_dir)
+        self.page_rows = int(page_rows)
+        self.page_cache_pages = (
+            int(page_cache_pages) if page_cache_pages is not None else None)
+        os.makedirs(self.spill_dir, exist_ok=True)
+        sweep_stray_tmp(self.spill_dir)
+
+        self._tables: Dict[str, _TableFile] = {}
+        self._lock = threading.RLock()
+        # page cache: (table, page) -> (rows_arr, accum_arr); LRU via
+        # OrderedDict move_to_end; dirty pages tracked separately
+        self._cache: "collections.OrderedDict[Tuple[str, int], Tuple[np.ndarray, np.ndarray]]" = (
+            collections.OrderedDict())
+        self._dirty: set = set()
+        # pages handed to the writer thread but not yet on disk: reads hit
+        # this lookaside before ever touching the (possibly mid-write) file
+        self._in_flight: Dict[Tuple[str, int], Tuple[np.ndarray, np.ndarray]] = {}
+        self._bg_error: Optional[BaseException] = None
+
+        self._write_q: "queue.Queue" = queue.Queue()
+        self._read_q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._writer = threading.Thread(
+            target=self._writer_loop, name="diskstore-writer", daemon=True)
+        self._reader = threading.Thread(
+            target=self._reader_loop, name="diskstore-readahead", daemon=True)
+        self._writer.start()
+        self._reader.start()
+
+        self._stats = {
+            "page_hits": 0.0, "page_misses": 0.0, "pages_evicted": 0.0,
+            "disk_bytes_read": 0.0, "disk_bytes_written": 0.0,
+        }
+
+    # ------------------------------------------------------------- lifecycle
+    def _check_bg(self):
+        if self._bg_error is not None:
+            err, self._bg_error = self._bg_error, None
+            raise RuntimeError("DiskStore background IO failed") from err
+
+    def close(self):
+        """Flush everything and stop the background threads."""
+        try:
+            self.flush()
+        finally:
+            self._stop.set()
+            self._write_q.put(None)
+            self._read_q.put(None)
+            self._writer.join(timeout=30)
+            self._reader.join(timeout=30)
+
+    # ------------------------------------------------------- table creation
+    def create_table(self, name: str, rows: int, dim: int, dtype,
+                     init_rows_fn=None, accum_init: float = 0.0):
+        """Register table ``name`` and materialize its pages on disk.
+
+        ``init_rows_fn(start, stop) -> (stop-start, dim)`` generates the
+        initial values page by page (so a table larger than RAM never
+        materializes whole); ``None`` initializes zeros.  ``accum_init``
+        fills the AdaGrad accumulator (``SparseAdagradConfig.
+        initial_accumulator``).  Existing page files are adopted as-is
+        (resume path).
+        """
+        self._check_bg()
+        t = _TableFile(self.spill_dir, name, rows, dim, np.dtype(dtype),
+                       self.page_rows)
+        with self._lock:
+            self._tables[name] = t
+        for p in range(t.n_pages):
+            path = t.page_path(p)
+            if os.path.exists(path):
+                continue
+            start = p * t.page_rows
+            stop = start + t.page_len(p)
+            if init_rows_fn is not None:
+                vals = np.asarray(init_rows_fn(start, stop), dtype=t.dtype)
+            else:
+                vals = np.zeros((stop - start, t.dim), t.dtype)
+            acc = np.full((stop - start, t.dim), accum_init, np.float32)
+            _write_page_atomic(path, vals, acc)
+            self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
+
+    def has_table(self, name: str) -> bool:
+        return name in self._tables
+
+    def table_meta(self, name: str) -> dict:
+        t = self._tables[name]
+        return {"rows": t.rows, "dim": t.dim, "dtype": str(t.dtype),
+                "page_rows": t.page_rows}
+
+    # ----------------------------------------------------------- page cache
+    def _load_page(self, t: _TableFile, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Return page p's (rows, accum) arrays, faulting in if needed.
+
+        Caller holds the lock.  In-flight write copies win over the file —
+        they are strictly newer and the file may be mid-replace.
+        """
+        key = (t.dir, p)
+        got = self._cache.get(key)
+        if got is not None:
+            self._cache.move_to_end(key)
+            self._stats["page_hits"] += 1
+            return got
+        self._stats["page_misses"] += 1
+        pending = self._in_flight.get(key)
+        if pending is not None:
+            vals, acc = pending[0].copy(), pending[1].copy()
+        else:
+            with np.load(t.page_path(p)) as z:
+                vals, acc = z["rows"], z["accum"]
+            self._stats["disk_bytes_read"] += vals.nbytes + acc.nbytes
+        self._cache[key] = (vals, acc)
+        self._evict_lru(keep=key)
+        return self._cache[key]
+
+    def _evict_lru(self, keep=None):
+        """Shrink the cache to capacity; dirty victims go to the writer."""
+        if self.page_cache_pages is None:
+            return
+        while len(self._cache) > self.page_cache_pages:
+            for key in self._cache:      # LRU order; skip the pinned page
+                if key != keep:
+                    break
+            else:
+                return
+            vals, acc = self._cache.pop(key)
+            self._stats["pages_evicted"] += 1
+            if key in self._dirty:
+                self._dirty.discard(key)
+                self._in_flight[key] = (vals, acc)
+                self._write_q.put((key, vals, acc))
+
+    def _table_of(self, key) -> _TableFile:
+        for t in self._tables.values():
+            if t.dir == key[0]:
+                return t
+        raise KeyError(key)
+
+    # ------------------------------------------------------------ access API
+    def gather(self, name: str, uids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(len(uids), dim) value + accumulator rows, in uid order.
+
+        The blocking read of the pull path — ``readahead`` should have
+        warmed the pages while the device trained the previous batch.
+        """
+        self._check_bg()
+        t = self._tables[name]
+        uids = np.asarray(uids, np.int64)
+        out_v = np.empty((len(uids), t.dim), t.dtype)
+        out_a = np.empty((len(uids), t.dim), np.float32)
+        with self._lock:
+            for p in np.unique(uids // t.page_rows):
+                vals, acc = self._load_page(t, int(p))
+                sel = uids // t.page_rows == p
+                r = uids[sel] - int(p) * t.page_rows
+                out_v[sel] = vals[r]
+                out_a[sel] = acc[r]
+        return out_v, out_a
+
+    def scatter(self, name: str, uids: np.ndarray, rows: np.ndarray,
+                accum: np.ndarray):
+        """Write value + accumulator rows back (write-behind: RAM pages are
+        updated and marked dirty; disk catches up on eviction/flush)."""
+        self._check_bg()
+        t = self._tables[name]
+        uids = np.asarray(uids, np.int64)
+        rows = np.asarray(rows)
+        accum = np.asarray(accum)
+        with self._lock:
+            for p in np.unique(uids // t.page_rows):
+                vals, acc = self._load_page(t, int(p))
+                sel = uids // t.page_rows == p
+                r = uids[sel] - int(p) * t.page_rows
+                vals[r] = rows[sel].astype(t.dtype, copy=False)
+                acc[r] = accum[sel]
+                self._dirty.add((t.dir, int(p)))
+
+    def readahead(self, name: str, uids: np.ndarray):
+        """Queue the pages holding ``uids`` for background fault-in.
+
+        Non-blocking: the reader thread pulls pages into the cache while
+        the device trains, hiding disk latency under the train stage.
+        """
+        self._check_bg()
+        t = self._tables[name]
+        pages = np.unique(np.asarray(uids, np.int64) // t.page_rows)
+        with self._lock:
+            todo = [int(p) for p in pages if (t.dir, int(p)) not in self._cache]
+        for p in todo:
+            self._read_q.put((name, p))
+
+    # ------------------------------------------------------------ durability
+    def flush(self):
+        """Write every dirty page to disk and wait for the writer to drain.
+
+        The durability point: after ``flush`` returns, the page files on
+        disk are the complete, current table (checkpoint snapshots and
+        parity reads call this first).
+        """
+        self._check_bg()
+        with self._lock:
+            dirty = list(self._dirty)
+            self._dirty.clear()
+            for key in dirty:
+                vals, acc = self._cache[key]
+                self._in_flight[key] = (vals, acc)
+                self._write_q.put((key, vals, acc))
+        self._write_q.join()
+        self._check_bg()
+
+    def snapshot_to(self, dest_dir: str):
+        """Copy the complete page set into ``dest_dir/<table>/`` (checkpoint
+        staging).  Flushes first, then copies page files byte-for-byte —
+        the copies inherit the rename-aside crash safety of the enclosing
+        checkpoint directory."""
+        self.flush()
+        for name, t in self._tables.items():
+            d = os.path.join(dest_dir, name)
+            os.makedirs(d, exist_ok=True)
+            for p in range(t.n_pages):
+                src = t.page_path(p)
+                dst = os.path.join(d, _PAGE_FMT % p)
+                _copy_file_atomic(src, dst)
+
+    def restore_from(self, src_dir: str):
+        """Replace the live pages with a checkpoint's page set (resume).
+
+        Drops the page cache — restored state must come from the restored
+        files, not from stale RAM pages.
+        """
+        self._check_bg()
+        with self._lock:
+            self._dirty.clear()
+        # drain in-flight write-behind: a stale page write landing AFTER the
+        # restore copy would silently corrupt the resumed state
+        self._write_q.join()
+        self._check_bg()
+        with self._lock:
+            self._cache.clear()
+            for name, t in self._tables.items():
+                d = os.path.join(src_dir, name)
+                for p in range(t.n_pages):
+                    src = os.path.join(d, _PAGE_FMT % p)
+                    if not os.path.exists(src):
+                        raise FileNotFoundError(
+                            f"checkpoint missing page {src} for table "
+                            f"{name!r} — layout mismatch?")
+                    _copy_file_atomic(src, t.page_path(p))
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._stats)
+
+    # ------------------------------------------------------------ bg threads
+    def _writer_loop(self):
+        while True:
+            item = self._write_q.get()
+            if item is None:
+                self._write_q.task_done()
+                return
+            key, vals, acc = item
+            try:
+                t = self._table_of(key)
+                _write_page_atomic(t.page_path(key[1]), vals, acc)
+                with self._lock:
+                    self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
+                    # only retire the lookaside if it's still OUR copy (a
+                    # newer flush may have queued a fresher write)
+                    if self._in_flight.get(key) is (vals, acc):
+                        del self._in_flight[key]
+            except BaseException as e:  # surfaced via _check_bg
+                self._bg_error = e
+            finally:
+                self._write_q.task_done()
+
+    def _reader_loop(self):
+        while True:
+            item = self._read_q.get()
+            if item is None:
+                return
+            name, p = item
+            try:
+                with self._lock:
+                    t = self._tables.get(name)
+                    if t is not None and not self._stop.is_set():
+                        self._load_page(t, p)
+            except BaseException as e:
+                self._bg_error = e
+
+
+# ------------------------------------------------------------------ helpers
+def _write_page_atomic(path: str, rows: np.ndarray, accum: np.ndarray):
+    """npz to ``.tmp`` + fsync + ``os.replace`` — same crash-safety contract
+    as ``checkpoint.ckpt.save_tree``: readers only ever see complete pages.
+
+    Retries once if the ``.tmp`` vanishes between fsync and replace: the
+    CheckpointManager's wreckage sweep may race a live write-behind, and
+    from its view any ``.tmp`` is deletable — a rewrite is always safe.
+    """
+    tmp = path + ".tmp"
+    for attempt in range(3):
+        with open(tmp, "wb") as f:
+            np.savez(f, rows=rows, accum=accum)
+            f.flush()
+            os.fsync(f.fileno())
+        try:
+            os.replace(tmp, path)
+            return
+        except FileNotFoundError:
+            if attempt == 2:
+                raise
+
+
+def _copy_file_atomic(src: str, dst: str):
+    tmp = dst + ".tmp"
+    with open(src, "rb") as fsrc, open(tmp, "wb") as fdst:
+        while True:
+            chunk = fsrc.read(1 << 22)
+            if not chunk:
+                break
+            fdst.write(chunk)
+        fdst.flush()
+        os.fsync(fdst.fileno())
+    os.replace(tmp, dst)
+
+
+def sweep_stray_tmp(root: str) -> int:
+    """Delete ``*.tmp`` page wreckage under ``root`` (kill mid write-behind
+    or mid page-copy).  Safe by construction: a ``.tmp`` is only ever an
+    incomplete write whose complete predecessor (if any) still holds the
+    final name.  Returns the number of files removed."""
+    removed = 0
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            if fn.endswith(".tmp"):
+                os.remove(os.path.join(dirpath, fn))
+                removed += 1
+    return removed
+
+
+def make_store(store: str = "host", spill_dir: Optional[str] = None,
+               page_rows: int = 1024,
+               page_cache_pages: Optional[int] = None):
+    """``store`` in {"host", "disk"} -> a RowStore instance."""
+    if store == "host":
+        if spill_dir is not None:
+            raise ValueError("spill_dir is a disk-store option; "
+                             "remove it or pass store='disk'")
+        return HostStore()
+    if store == "disk":
+        if not spill_dir:
+            raise ValueError("store='disk' requires spill_dir")
+        return DiskStore(spill_dir, page_rows=page_rows,
+                         page_cache_pages=page_cache_pages)
+    raise ValueError(f"unknown store {store!r}; use 'host' or 'disk'")

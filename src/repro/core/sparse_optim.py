@@ -83,6 +83,31 @@ class SparseAdagrad:
         new_accum = accum.at[unique_ids].add(g2)
         return new_table, new_accum
 
+    def apply_staged(self, rows, accum_rows, row_grads):
+        """Working-set-aligned AdaGrad — the disk-store staged push.
+
+        ``rows``/``accum_rows`` are already gathered in dedup'd-uid order
+        (the RowStore staged them), so the update is elementwise: position
+        i of the output is bit-equal to row ``uids[i]`` after
+        ``apply_rows`` on a resident table — same pinned ``(delta, g2)``
+        helper, and the pad positions' ±0.0 contributions are inert under
+        the scatter-add exactly as they are here.
+
+        The adds go through an identity-iota scatter-add, NOT ``+``: XLA's
+        CPU backend FMA-contracts ``accum + square(g)`` even across the
+        ``optimization_barrier`` (the product feeds the add at full
+        precision, skipping g2's rounding), while ``apply_rows``'s real
+        scatter-add cannot contract — the scatter form here keeps the two
+        paths bit-identical.
+        """
+        from repro.kernels.sparse_adagrad import adagrad_row_updates
+
+        delta, g2 = adagrad_row_updates(
+            accum_rows, row_grads, rows.dtype,
+            lr=self.cfg.lr, eps=self.cfg.eps)
+        idx = jnp.arange(rows.shape[0], dtype=jnp.int32)
+        return rows.at[idx].add(delta), accum_rows.at[idx].add(g2)
+
     def step(self, tables: Pytree, state: SparseAdagradState, updates: Pytree):
         """updates: pytree matching ``tables`` of (unique_ids, row_grads)."""
         flat_t, treedef = jax.tree.flatten(tables)

@@ -1,0 +1,203 @@
+"""Device linear-probe hash map: the O(cache_rows) id→slot index.
+
+``CachedBackend`` used to carry a dense ``(table_rows,)`` int32 id→slot
+array on device — the last O(table_rows) device allocation in the cache
+tier.  This module replaces it with an open-addressing linear-probe hash
+map sized O(cache_rows), carried through the jitted pull/push as three
+small arrays:
+
+  - ``key_tab``  (H,) int32 — the id stored in each bucket (-1 = EMPTY),
+  - ``slot_tab`` (H,) int32 — the cache slot that id mapped to,
+  - ``n_occupied`` ()  int32 — occupied buckets, *including stale ones*.
+
+Liveness is checked against ``slot_uid`` instead of deleting: an entry
+``(k, s)`` is live iff ``slot_uid[s] == k``.  Eviction overwrites
+``slot_uid[s]`` with the admitted id, which kills the evicted id's entry
+for free — no tombstones, no unlink pass.  Buckets therefore only go
+EMPTY → occupied; probe chains never shrink between rebuilds, which is
+exactly what makes bounded probing *exact*:
+
+  - **lookup** probes from ``h(k)`` until it sees ``k`` (at most one
+    bucket per key can hold it) or an EMPTY bucket (the chain end);
+  - **insert** of a key claims the first EMPTY bucket on its chain — or
+    *reuses* the key's own stale bucket, which must appear before any
+    EMPTY bucket on the chain (it was placed at a first-EMPTY position
+    and nothing empties);
+  - **rebuild** (when stale entries pile up past the occupancy bound)
+    re-inserts only the live ``(slot_uid[s], s)`` pairs into fresh
+    buckets, restoring load ≤ cache_rows / H.
+
+``hash_table_size`` keeps H ≥ 4·cache_rows, and ``CachedBackend``
+rebuilds before occupancy can cross 3H/4, so every chain ends in an
+EMPTY bucket and both loops terminate.
+
+The batch *lookup* is the hot-path kernel (``hash_lookup_pallas``, one
+probe loop per working-set id, parity-locked to ``ref.hash_lookup_ref``
+— dispatch via ``ops.hash_lookup`` per docs/kernels.md).  The map
+*maintenance* (insert / rebuild) is trace-level jnp shared verbatim by
+every dispatch mode: the map contents are bit-identical whether lookups
+run through Pallas, the interpreter, or the jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EMPTY = -1  # bucket key for never-occupied buckets
+
+
+def hash_table_size(cache_rows: int) -> int:
+    """Bucket count H for a cache of ``cache_rows`` slots: the next power
+    of two ≥ 4·cache_rows (load factor ≤ 0.25 after every rebuild), so
+    probe chains stay short and an EMPTY chain-terminator always exists."""
+    n = max(int(cache_rows), 8) * 4
+    return 1 << (n - 1).bit_length()
+
+
+def hash_bucket(keys: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Home bucket per key: 32-bit murmur3 finalizer, masked to H-1.
+
+    The mix is a bijection on uint32 (distinct ids never alias before the
+    mask), computed in wrapping uint32 so no x64 widening enters the jit.
+    """
+    assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of 2"
+    x = keys.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# maintenance (trace-level jnp — shared by every dispatch mode)
+# ---------------------------------------------------------------------------
+
+def hash_insert(key_tab, slot_tab, n_occupied, keys, slots, mask):
+    """Batch-insert ``keys[i] -> slots[i]`` where ``mask[i]`` (keys under
+    the mask are distinct and not live in the map).
+
+    Round-based parallel probing: every pending key claims the first
+    bucket on its chain that is EMPTY or already holds the key (a stale
+    entry from a past residency — reused in place, so the map never holds
+    two buckets for one key).  Conflicting claims on one EMPTY bucket are
+    resolved by a deterministic scatter-max (highest key position wins);
+    losers advance one probe and retry.  Terminates because every round
+    either places a key or advances its probe toward an EMPTY bucket.
+    """
+    H = key_tab.shape[0]
+    K = keys.shape[0]
+    base = hash_bucket(keys, H)
+    pos = jnp.arange(K, dtype=jnp.int32)
+
+    def cond(carry):
+        return jnp.any(carry[2])
+
+    def body(carry):
+        key_tab, slot_tab, pending, off, n_occ = carry
+        b = (base + off) & (H - 1)
+        kb = key_tab[b]
+        reuse = pending & (kb == keys)           # own stale bucket: no conflict
+        free = pending & (kb == EMPTY)
+        winner = (
+            jnp.full((H,), -1, jnp.int32)
+            .at[jnp.where(free, b, H)]
+            .max(pos, mode="drop")
+        )
+        won_free = free & (winner[b] == pos)
+        won = reuse | won_free
+        sink = jnp.where(won, b, H)
+        key_tab = key_tab.at[sink].set(keys, mode="drop")
+        slot_tab = slot_tab.at[sink].set(slots, mode="drop")
+        n_occ = n_occ + jnp.sum(won_free.astype(jnp.int32))
+        pending = pending & ~won
+        off = jnp.where(pending, off + 1, off)
+        return key_tab, slot_tab, pending, off, n_occ
+
+    init = (key_tab, slot_tab, mask, jnp.zeros((K,), jnp.int32), n_occupied)
+    key_tab, slot_tab, _, _, n_occupied = jax.lax.while_loop(cond, body, init)
+    return key_tab, slot_tab, n_occupied
+
+
+def hash_rebuild(slot_uid, n_buckets: int):
+    """Fresh (key_tab, slot_tab, n_occupied) holding only the live
+    ``(slot_uid[s], s)`` pairs — drops every stale entry in one shot."""
+    C = slot_uid.shape[0]
+    key_tab = jnp.full((n_buckets,), EMPTY, jnp.int32)
+    slot_tab = jnp.zeros((n_buckets,), jnp.int32)
+    return hash_insert(
+        key_tab, slot_tab, jnp.zeros((), jnp.int32),
+        slot_uid, jnp.arange(C, dtype=jnp.int32), slot_uid >= 0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lookup kernel (the Pallas probe; jnp oracle lives in kernels/ref.py)
+# ---------------------------------------------------------------------------
+
+def _mix_scalar(u, hmask):
+    x = u.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return (x & jnp.uint32(hmask)).astype(jnp.int32)
+
+
+def _lookup_kernel(uids_ref, key_ref, slot_ref, suid_ref, out_ref, *, hmask):
+    """One working-set id per grid step: probe from the home bucket until
+    the key or an EMPTY bucket appears; a found entry resolves to its slot
+    only if still live (``slot_uid[slot] == key``) — a stale hit is a miss
+    and the probe stops (at most one bucket per key)."""
+    u = uids_ref[pl.program_id(0)]
+    base = _mix_scalar(u, hmask)
+
+    def cond(carry):
+        return carry[0] == 0
+
+    def body(carry):
+        _, off, slot = carry
+        b = (base + off) & hmask
+        kb = key_ref[b, 0]
+        s = slot_ref[b, 0]
+        live = (kb == u) & (suid_ref[s, 0] == u)
+        done = (kb == u) | (kb == EMPTY)
+        slot = jnp.where(live, s, slot)
+        return done.astype(jnp.int32), off + 1, slot
+
+    zero = jnp.zeros((), jnp.int32)
+    _, _, slot = jax.lax.while_loop(
+        cond, body, (zero, zero, jnp.full((), -1, jnp.int32))
+    )
+    out_ref[0, 0] = slot
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hash_lookup_pallas(key_tab, slot_tab, slot_uid, uids, interpret=False):
+    """slots[i] = live slot of uids[i], or -1 — the Pallas probe whose
+    output feeds the fused cached gather/scatter index streams."""
+    H = key_tab.shape[0]
+    K = uids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(K,),
+        in_specs=[
+            pl.BlockSpec((H, 1), lambda i, uids: (0, 0)),
+            pl.BlockSpec((H, 1), lambda i, uids: (0, 0)),
+            pl.BlockSpec((slot_uid.shape[0], 1), lambda i, uids: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, uids: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_lookup_kernel, hmask=H - 1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, 1), jnp.int32),
+        interpret=interpret,
+    )(uids, key_tab[:, None], slot_tab[:, None], slot_uid[:, None])
+    return out[:, 0]

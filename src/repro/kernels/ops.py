@@ -27,6 +27,7 @@ from repro.kernels import ref
 from repro.kernels.dot_interaction import dot_interaction_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fused_adam import fused_adam_pallas
+from repro.kernels.hash_map import hash_lookup_pallas
 from repro.kernels.sparse_adagrad import (
     adagrad_row_updates,
     gather_rows_cached_pallas,
@@ -180,26 +181,42 @@ def sparse_adagrad_apply(table, accum, uids, grads, *, lr, eps):
         table, accum, uids, delta, g2, interpret=(mode == "interpret"))
 
 
-def gather_rows_cached(cache_rows, id_slot, uids):
-    """Fused cached pull: out[i] = cache_rows[id_slot[uids[i]]]."""
+def hash_lookup(key_tab, slot_tab, slot_uid, uids):
+    """Linear-probe id→slot lookup over the O(cache_rows) hash map.
+
+    slots[i] = live cache slot of uids[i] (or -1).  Exact in every mode:
+    the Pallas probe kernel and the jnp reference walk identical chains
+    over identical map contents (map maintenance is shared trace-level
+    jnp), so the dispatch mode can never change a hit into a miss.
+    """
     mode = _mode()
     if mode == "ref":
-        return ref.gather_rows_cached_ref(cache_rows, id_slot, uids)
+        return ref.hash_lookup_ref(key_tab, slot_tab, slot_uid, uids)
+    return hash_lookup_pallas(
+        key_tab, slot_tab, slot_uid, uids, interpret=(mode == "interpret"))
+
+
+def gather_rows_cached(cache_rows, slots):
+    """Fused cached pull: out[i] = cache_rows[slots[i]], with the
+    hash-probe output as the kernel's index stream."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.gather_rows_cached_ref(cache_rows, slots)
     return gather_rows_cached_pallas(
-        cache_rows, id_slot, uids, interpret=(mode == "interpret"))
+        cache_rows, slots, interpret=(mode == "interpret"))
 
 
-def sparse_adagrad_cached_apply(cache_rows, cache_accum, id_slot, uids,
-                                grads, *, lr, eps):
-    """Fused cached push: id→slot indirection folded into the index stream."""
-    accum_rows = gather_rows_cached(cache_accum, id_slot, uids)
+def sparse_adagrad_cached_apply(cache_rows, cache_accum, slots, grads,
+                                *, lr, eps):
+    """Fused cached push: the hash-probe id→slot output drives the
+    scatter's scalar-prefetch index stream directly."""
+    accum_rows = gather_rows_cached(cache_accum, slots)
     delta, g2 = adagrad_row_updates(accum_rows, grads, cache_rows.dtype,
                                     lr=lr, eps=eps)
     mode = _mode()
     if mode == "ref":
-        slot = jnp.take(id_slot, uids)
         return ref.sparse_adagrad_apply_ref(
-            cache_rows, cache_accum, slot, delta, g2)
+            cache_rows, cache_accum, slots, delta, g2)
     return sparse_adagrad_cached_apply_pallas(
-        cache_rows, cache_accum, id_slot, uids, delta, g2,
+        cache_rows, cache_accum, slots, delta, g2,
         interpret=(mode == "interpret"))

@@ -41,8 +41,46 @@ def sparse_adagrad_apply_ref(table, accum, uids, delta, g2):
     return table.at[uids].add(delta), accum.at[uids].add(g2)
 
 
-def gather_rows_cached_ref(cache_rows, id_slot, uids):
-    return jnp.take(cache_rows, jnp.take(id_slot, uids), axis=0)
+def gather_rows_cached_ref(cache_rows, slots):
+    return jnp.take(cache_rows, slots, axis=0)
+
+
+def hash_lookup_ref(key_tab, slot_tab, slot_uid, uids):
+    """Batch linear-probe lookup, the oracle for ``hash_lookup_pallas``.
+
+    slots[i] = the live cache slot of uids[i] (an entry ``(k, s)`` is live
+    iff ``slot_uid[s] == k``), or -1.  Vectorized over the batch: one
+    while_loop advances every still-probing id one bucket per round until
+    each has seen its key (at most one bucket holds it) or an EMPTY
+    chain-terminator.  Terminates because the map keeps occupancy < H.
+    """
+    from repro.kernels.hash_map import EMPTY, hash_bucket
+
+    H = key_tab.shape[0]
+    base = hash_bucket(uids, H)
+    K = uids.shape[0]
+
+    def cond(carry):
+        return jnp.any(carry[0])
+
+    def body(carry):
+        active, off, slot = carry
+        b = (base + off) & (H - 1)
+        kb = key_tab[b]
+        s = slot_tab[b]
+        found = active & (kb == uids)
+        live = found & (slot_uid[s] == uids)
+        slot = jnp.where(live, s, slot)
+        active = active & ~found & (kb != EMPTY)
+        off = jnp.where(active, off + 1, off)
+        return active, off, slot
+
+    _, _, slot = jax.lax.while_loop(
+        cond, body,
+        (jnp.ones((K,), bool), jnp.zeros((K,), jnp.int32),
+         jnp.full((K,), -1, jnp.int32)),
+    )
+    return slot
 
 
 def dot_interaction_ref(feats):

@@ -28,10 +28,11 @@ safe against stale-read/overwrite races when the TPU pipeline revisits
 the same table row.
 
 ``sparse_adagrad_cached_apply_pallas`` / ``gather_rows_cached_pallas``
-are the cache-tier variants: the id→slot indirection is folded into the
-kernel's scalar-prefetch index stream (``row = id_slot[uids[i]]``), so the
-cached pull/push do one indexed pass over the (slots, dim) cache instead
-of materializing slot-translated row gathers around the kernel.
+are the cache-tier variants: the id→slot hash-probe output
+(``kernels.hash_map.hash_lookup_pallas``) is the kernel's scalar-prefetch
+index stream (``row = slots[i]``), so the cached pull/push do one indexed
+pass over the (slots, dim) cache instead of materializing slot-translated
+row gathers around the kernel.
 """
 
 from __future__ import annotations
@@ -133,7 +134,7 @@ def sparse_adagrad_apply_pallas(
     )(uids, table, accum, delta, g2)
 
 
-def _cached_apply_kernel(idslot_ref, uids_ref, t_ref, a_ref, d_ref, g2_ref,
+def _cached_apply_kernel(slots_ref, t_ref, a_ref, d_ref, g2_ref,
                          nt_ref, na_ref):
     nt_ref[...] = t_ref[...] + d_ref[...]
     na_ref[...] = a_ref[...] + g2_ref[...]
@@ -143,20 +144,21 @@ def _cached_apply_kernel(idslot_ref, uids_ref, t_ref, a_ref, d_ref, g2_ref,
 def sparse_adagrad_cached_apply_pallas(
     cache_rows: jnp.ndarray,   # (slots, D) device cache
     cache_accum: jnp.ndarray,  # (slots, D) f32
-    id_slot: jnp.ndarray,      # (R,) id -> slot map
-    uids: jnp.ndarray,         # (cap,) ids, pads at the END
+    slots: jnp.ndarray,        # (cap,) cache slot per working-set id — the
+                               # hash-probe output; pad ids share the first
+                               # real id's slot and carry zero delta/g2
     delta: jnp.ndarray,        # (cap, D)
     g2: jnp.ndarray,           # (cap, D)
     interpret: bool = False,
 ):
-    cap = uids.shape[0]
+    cap = slots.shape[0]
     D = cache_rows.shape[1]
-    # The id->slot indirection folded into the index stream: one indexed
-    # pass over the cache, no slot-translated gather materialized.
-    row = lambda i, idslot, uids: (idslot[uids[cap - 1 - i]], 0)
-    seq = lambda i, idslot, uids: (cap - 1 - i, 0)
+    # The hash-probe lookup output IS the index stream: one indexed pass
+    # over the cache, no slot-translated gather materialized.
+    row = lambda i, slots: (slots[cap - 1 - i], 0)
+    seq = lambda i, slots: (cap - 1 - i, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2, grid=(cap,),
+        num_scalar_prefetch=1, grid=(cap,),
         in_specs=[pl.BlockSpec((1, D), row), pl.BlockSpec((1, D), row),
                   pl.BlockSpec((1, D), seq), pl.BlockSpec((1, D), seq)],
         out_specs=[pl.BlockSpec((1, D), row), pl.BlockSpec((1, D), row)],
@@ -165,32 +167,32 @@ def sparse_adagrad_cached_apply_pallas(
         _cached_apply_kernel, grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct(cache_rows.shape, cache_rows.dtype),
                    jax.ShapeDtypeStruct(cache_accum.shape, jnp.float32)],
-        input_output_aliases={2: 0, 3: 1},
+        input_output_aliases={1: 0, 2: 1},
         interpret=interpret,
-    )(id_slot, uids, cache_rows, cache_accum, delta, g2)
+    )(slots, cache_rows, cache_accum, delta, g2)
 
 
-def _gather_cached_kernel(idslot_ref, uids_ref, rows_ref, out_ref):
+def _gather_cached_kernel(slots_ref, rows_ref, out_ref):
     out_ref[...] = rows_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gather_rows_cached_pallas(
     cache_rows: jnp.ndarray,  # (slots, D)
-    id_slot: jnp.ndarray,     # (R,)
-    uids: jnp.ndarray,        # (cap,)
+    slots: jnp.ndarray,       # (cap,) cache slot per working-set id
     interpret: bool = False,
 ):
-    """out[i] = cache_rows[id_slot[uids[i]]] — the fused cached pull."""
-    cap = uids.shape[0]
+    """out[i] = cache_rows[slots[i]] — the fused cached pull, indexed by
+    the hash-probe output stream."""
+    cap = slots.shape[0]
     D = cache_rows.shape[1]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2, grid=(cap,),
-        in_specs=[pl.BlockSpec((1, D), lambda i, idslot, uids: (idslot[uids[i]], 0))],
-        out_specs=pl.BlockSpec((1, D), lambda i, idslot, uids: (i, 0)),
+        num_scalar_prefetch=1, grid=(cap,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, slots: (slots[i], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, slots: (i, 0)),
     )
     return pl.pallas_call(
         _gather_cached_kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((cap, D), cache_rows.dtype),
         interpret=interpret,
-    )(id_slot, uids, cache_rows)
+    )(slots, cache_rows)

@@ -37,6 +37,15 @@ behind the ``EmbeddingBackend`` contract
 must be divisible by the shard count for ``routed``; ``--cache-rows`` must
 cover it for ``cached``).
 
+``--store disk`` drops the cold tier one level: full tables + accumulators
+live in fixed-size row pages under ``--spill-dir`` (``--page-rows`` rows
+per page) with an in-RAM LRU page cache (``--page-cache-pages``), async
+read-ahead keyed off each batch's dedup'd id stream, and write-behind
+dirty-page flushing — the three-level hierarchy of docs/storage.md.  Works
+with ``gather`` and ``cached`` placements (``routed`` addresses
+shard-resident rows and is rejected); with an unbounded page cache the
+results are bit-identical to ``--store host``.
+
 ``--prefetch`` turns on the double-buffered pull prefetch (paper Fig. 5):
 the next batch's working-set pull is dispatched while the current step is
 still executing, for any placement — bit-identical results, overlapped
@@ -83,6 +92,19 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--cache-rows", type=int, default=0,
                     help="device cache rows for --placement cached "
                          "(0: working-set capacity, the minimum)")
+    ap.add_argument("--store", default="host", choices=["host", "disk"],
+                    help="cold tier below the device cache: 'host' keeps "
+                         "full tables in host RAM (default); 'disk' pages "
+                         "them to --spill-dir (three-level hierarchy: "
+                         "device cache -> page cache -> SSD; docs/storage.md)")
+    ap.add_argument("--spill-dir", default="",
+                    help="DiskStore page directory (required for --store "
+                         "disk)")
+    ap.add_argument("--page-rows", type=int, default=0,
+                    help="rows per spill page for --store disk (0: 1024)")
+    ap.add_argument("--page-cache-pages", type=int, default=0,
+                    help="in-RAM page-cache budget for --store disk "
+                         "(0: unbounded — full mirror)")
     ap.add_argument("--prefetch", action="store_true",
                     help="double-buffered pull prefetch: overlap the next "
                          "batch's pull with the current step (Fig. 5)")
@@ -141,6 +163,9 @@ def main():
         sparse=SparseAdagradConfig(lr=args.sparse_lr, initial_accumulator=0.01),
         placement=args.placement, capacity=args.capacity or None,
         cache_rows=args.cache_rows or None, prefetch=args.prefetch,
+        store=args.store, spill_dir=args.spill_dir or None,
+        page_rows=args.page_rows or None,
+        page_cache_pages=args.page_cache_pages or None,
         fused_kernels={"auto": None, "on": True, "off": False}[
             args.fused_kernels],
         merge_delay=args.merge_delay,

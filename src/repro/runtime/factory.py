@@ -64,10 +64,39 @@ def _build_engine(
     mesh: Optional[jax.sharding.Mesh],
 ) -> EmbeddingEngine:
     """Placement-selected engine over ``specs`` (shared by all recsys archs)."""
+    from repro.core.row_store import make_store
+
     capacity = cfg.capacity or _default_capacity(
         max(s.rows for s in specs.values())
     )
+    # ---- cold-tier store (three-level hierarchy when store="disk")
+    if cfg.store == "host" and (
+        cfg.page_rows is not None or cfg.page_cache_pages is not None
+    ):
+        # no-silent-config: page geometry without the disk tier is a
+        # mis-specified experiment, not a default to ignore
+        raise ValueError(
+            "page_rows/page_cache_pages are disk-store knobs — set "
+            "store='disk' (with spill_dir) to use them"
+        )
+    if cfg.store == "disk" and cfg.placement == "routed":
+        raise NotImplementedError(
+            "store='disk' with placement='routed' is not implemented: the "
+            "routed exchange addresses shard-resident rows, which the "
+            "staged working-set dataflow does not provide — use 'gather' "
+            "or 'cached'"
+        )
+    store = make_store(
+        cfg.store, spill_dir=cfg.spill_dir,
+        page_rows=cfg.page_rows if cfg.page_rows is not None else 1024,
+        page_cache_pages=cfg.page_cache_pages,
+    )
+
     kwargs = {}
+    if store.kind == "disk":
+        kwargs["staged"] = True
+        if cfg.placement == "cached":
+            kwargs["capacity"] = capacity   # sizes the per-pull spill buffers
     if cfg.placement == "cached":
         # default to the minimum feasible cache (one batch's working set);
         # an EXPLICIT undersized cache_rows is an error, not a silent clamp
@@ -89,6 +118,7 @@ def _build_engine(
             cfg.placement, mesh=mesh,
             fused=ops.resolve_fused(cfg.fused_kernels), **kwargs,
         ),
+        store=store,
     )
 
 

@@ -48,6 +48,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
+import shutil
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
@@ -79,6 +81,12 @@ class TrainerConfig:
                                           # bag (HybridTrainer only).  None =
                                           # auto: on for a real TPU backend,
                                           # off elsewhere (ops.resolve_fused)
+    store: str = "host"           # cold tier: "host" (resident tables) |
+                                  # "disk" (paged spill dir; HybridTrainer)
+    spill_dir: Optional[str] = None   # page directory (required for "disk")
+    page_rows: Optional[int] = None   # rows per page file (None: 1024)
+    page_cache_pages: Optional[int] = None  # RAM page-cache capacity
+                                            # (None: unbounded full mirror)
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 200
     ckpt_keep: int = 3
@@ -222,6 +230,14 @@ class DenseTrainer:
                 "(the fused embedding pull/push kernels) — an all-dense "
                 "model has no working set to fuse over; leave "
                 "fused_kernels=None"
+            )
+        if (cfg.store != "host" or cfg.spill_dir is not None
+                or cfg.page_rows is not None
+                or cfg.page_cache_pages is not None):
+            raise ValueError(
+                "DenseTrainer: store/spill_dir/page_rows/page_cache_pages "
+                "are sparse-path knobs (the embedding tables' storage "
+                "hierarchy) — an all-dense model has no tables to spill"
             )
         if cfg.merge_delay > 0 and cfg.kstep.merge == "int8_ef":
             raise NotImplementedError(
@@ -411,8 +427,13 @@ class HybridTrainer:
         self._metrics_base_step = 0   # step the counters were last re-zeroed at
         self._embed = embed_fn
         self._loss = loss_fn
+        # the checkpoint GC doubles as the spill-dir wreckage sweeper when
+        # the engine's tables live in a DiskStore
         self.ckpt = (
-            CheckpointManager(cfg.ckpt_dir, cfg.ckpt_keep, cfg.ckpt_every, cfg.ckpt_async)
+            CheckpointManager(
+                cfg.ckpt_dir, cfg.ckpt_keep, cfg.ckpt_every, cfg.ckpt_async,
+                spill_dir=getattr(engine.store, "spill_dir", None),
+            )
             if cfg.ckpt_dir else None
         )
         donate = cfg.donate
@@ -612,12 +633,47 @@ class HybridTrainer:
         the pull fetches from the authoritative host rows).  Valid while a
         prefetched pull is in flight: the pass-through trees it reads are
         logically identical to the committed state."""
+        if self.engine.store.kind == "disk":
+            return self._predict_disk(batch)
         batch = self._stage(batch)
         scores = self._predict_jit(
             self.dense, self.tables, self.sparse_state.accum,
             self.backend_state, batch,
         )
         # scores are consumed host-side (streaming AUC): explicit d2h
+        return np.asarray(jax.device_get(scores))
+
+    def _predict_disk(self, batch) -> np.ndarray:
+        """Disk-store inference: stage THIS batch's rows from the store.
+
+        The training staging buffers hold another batch's rows, so predict
+        builds its own: host-dedup the batch's ids, ``store.gather`` the
+        rows/accum, and run the same ``_predict_jit`` over them (the staged
+        shapes match the training buffers, so no recompile).  Exactness:
+        under prefetch the dispatch already absorbed every push output into
+        the store; under sync pull there may be un-absorbed push outputs,
+        absorbed here first.  The absorb is SKIPPED while a prefetched pull
+        is pending — for the gather backend the pending pass-through tables
+        are the PRE-train staged rows, and absorbing them would clear the
+        pending metadata so the real push outputs were never committed."""
+        if self._prefetcher is None or self._prefetcher.pending is None:
+            self.engine.absorb_staged(
+                self.tables, self.sparse_state.accum, self.backend_state
+            )
+        batch = self._stage(batch)
+        ids_np = {
+            n: np.asarray(jax.device_get(ids))
+            for n, ids in self.engine.ids_from_batch(batch).items()
+        }
+        staged_t, staged_a = {}, {}
+        for n, ids in ids_np.items():
+            uids, _valid = self.engine.host_dedup(ids)
+            rows, acc = self.engine.store.gather(n, uids)
+            staged_t[n] = jax.device_put(rows)
+            staged_a[n] = jax.device_put(acc)
+        scores = self._predict_jit(
+            self.dense, staged_t, staged_a, self.backend_state, batch,
+        )
         return np.asarray(jax.device_get(scores))
 
     def _predict_traced(self, dense, tables, accum, bstate, batch):
@@ -711,10 +767,14 @@ class HybridTrainer:
         (+ cache geometry, which shapes the checkpointed backend state)."""
         b = self.engine.backend
         sig = {"backend": type(b).__name__,
-               "n_shards": getattr(b, "n_shards", 1)}
+               "n_shards": getattr(b, "n_shards", 1),
+               "store": self.engine.store.kind}
         cache_rows = getattr(b, "cache_rows", None)
         if cache_rows is not None:
             sig["cache_rows"] = int(cache_rows)
+        if self.engine.store.kind == "disk":
+            # page geometry shapes the checkpoint's page files
+            sig["page_rows"] = int(self.engine.store.page_rows)
         return sig
 
     def save(self):
@@ -728,6 +788,22 @@ class HybridTrainer:
                 "checkpoints capture committed state only; save at step "
                 "boundaries (as fit/train_step do) before prefetching"
             )
+        extras_dir = None
+        if self.engine.store.kind == "disk":
+            # commit everything in flight to the store, then snapshot its
+            # pages SYNCHRONOUSLY into a staging dir — the async writer only
+            # renames the finished snapshot into the checkpoint, so live
+            # page mutations after this point can't tear it.  The staged
+            # buffers/spill state in the npz tree stay consistent with the
+            # snapshot: re-absorbing them on resume rewrites the same values
+            # (absolute-row writes are idempotent).
+            self.engine.sync_store(
+                self.tables, self.sparse_state.accum, self.backend_state)
+            extras_dir = os.path.join(
+                self.ckpt.directory, f"pages_staging_{self.step_num}")
+            if os.path.exists(extras_dir):
+                shutil.rmtree(extras_dir)
+            self.engine.store.snapshot_to(extras_dir)
         # checkpointing deliberately materializes device state host-side —
         # an allow-listed section under strict-transfers runs
         with jax.transfer_guard("allow"):
@@ -735,6 +811,7 @@ class HybridTrainer:
                 self.step_num, self._ckpt_tree(),
                 meta={"n_pod": self.n_pod, "k": self.cfg.kstep.k,
                       **self._backend_sig()},
+                extras_dir=extras_dir,
             )
 
     def resume(self) -> bool:
@@ -750,11 +827,14 @@ class HybridTrainer:
         if man is not None and "backend" in man.get("meta", {}):
             sig = self._backend_sig()
             saved = {k: man["meta"][k]
-                     for k in ("backend", "n_shards", "cache_rows")
+                     for k in ("backend", "n_shards", "cache_rows",
+                               "store", "page_rows")
                      if k in man["meta"]}
+            # pre-store checkpoints carry no "store" key — they were host
+            # runs, so only a disk-configured engine must refuse them
             if saved != {k: sig.get(k) for k in saved} or (
                 "cache_rows" in sig and "cache_rows" not in saved
-            ):
+            ) or (sig["store"] == "disk" and "store" not in saved):
                 raise ValueError(
                     f"checkpoint written with {saved} but the current engine "
                     f"uses {sig}: the tables' physical "
@@ -769,6 +849,12 @@ class HybridTrainer:
         step, tree = self.ckpt.restore_latest(like)
         if step is None:
             return False
+        if self.engine.store.kind == "disk":
+            # pages first: the restored npz state (staged buffers, cache
+            # spill ids) is only consistent against the SAVE-TIME pages
+            self.engine.store.restore_from(os.path.join(
+                self.ckpt.directory, f"step_{step:010d}", "pages"))
+            self.engine.reset_staging()
         self.step_num = step
         self.dense, self.tables = tree["dense"], tree["tables"]
         self.sparse_state = self.sparse_state._replace(accum=tree["accum"])

@@ -1,0 +1,200 @@
+"""Linear-probe hash map: Pallas probe vs jnp oracle vs a dense-map model.
+
+The map replaces the cache tier's dense O(table_rows) id→slot array, so
+the contract is *exactness*: for any sequence of admissions/evictions the
+lookup must return precisely what the dense array would.  Collisions,
+stale-entry reuse after eviction, and the occupancy-triggered rebuild are
+the cases that can silently corrupt — each is pinned here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.hash_map import (
+    EMPTY,
+    hash_bucket,
+    hash_insert,
+    hash_lookup_pallas,
+    hash_rebuild,
+    hash_table_size,
+)
+
+
+def _fresh(H):
+    return (jnp.full((H,), EMPTY, jnp.int32), jnp.zeros((H,), jnp.int32),
+            jnp.zeros((), jnp.int32))
+
+
+def _insert(key_tab, slot_tab, n_occ, pairs):
+    keys = jnp.asarray([k for k, _ in pairs], jnp.int32)
+    slots = jnp.asarray([s for _, s in pairs], jnp.int32)
+    mask = jnp.ones((len(pairs),), bool)
+    return hash_insert(key_tab, slot_tab, n_occ, keys, slots, mask)
+
+
+def _lookup_both(key_tab, slot_tab, slot_uid, uids):
+    """The oracle and the kernel must agree bit-for-bit."""
+    uids = jnp.asarray(uids, jnp.int32)
+    want = ref.hash_lookup_ref(key_tab, slot_tab, slot_uid, uids)
+    got = hash_lookup_pallas(key_tab, slot_tab, slot_uid, uids,
+                             interpret=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want)), (
+        "pallas probe diverged from jnp oracle")
+    return np.asarray(want)
+
+
+def test_table_size_bounds():
+    for c in (1, 8, 100, 4096):
+        H = hash_table_size(c)
+        assert H >= 4 * c and H & (H - 1) == 0
+
+
+def test_insert_lookup_roundtrip():
+    C, H = 16, hash_table_size(16)
+    key_tab, slot_tab, n_occ = _fresh(H)
+    ids = np.array([3, 99, 1024, 7, 2**30, 0], np.int32)
+    slots = np.arange(len(ids), dtype=np.int32)
+    key_tab, slot_tab, n_occ = _insert(
+        key_tab, slot_tab, n_occ, list(zip(ids, slots)))
+    slot_uid = jnp.full((C,), -1, jnp.int32).at[slots].set(ids)
+    got = _lookup_both(key_tab, slot_tab, slot_uid, ids)
+    assert np.array_equal(got, slots)
+    assert int(n_occ) == len(ids)
+    # absent keys miss
+    got = _lookup_both(key_tab, slot_tab, slot_uid, [5, 123456, 2**30 - 1])
+    assert np.array_equal(got, [-1, -1, -1])
+
+
+def test_forced_collisions_probe_past_occupied():
+    """Keys engineered into one home bucket: every probe chain walks the
+    same cluster and still resolves each key exactly."""
+    C = 8
+    H = hash_table_size(C)
+    # mine ids that collide in their home bucket
+    cand = np.arange(0, 200000, dtype=np.int32)
+    buckets = np.asarray(hash_bucket(jnp.asarray(cand), H))
+    target = buckets[0]
+    ids = cand[buckets == target][:6]
+    assert len(ids) == 6, "need 6 colliding ids for the test"
+    key_tab, slot_tab, n_occ = _fresh(H)
+    slots = np.arange(6, dtype=np.int32)
+    key_tab, slot_tab, n_occ = _insert(
+        key_tab, slot_tab, n_occ, list(zip(ids, slots)))
+    # the cluster is exactly 6 consecutive buckets from the shared home
+    kt = np.asarray(key_tab)
+    assert sorted(np.nonzero(kt != EMPTY)[0].tolist()) == sorted(
+        ((int(target) + i) & (H - 1)) for i in range(6))
+    slot_uid = jnp.full((C,), -1, jnp.int32).at[slots].set(ids)
+    got = _lookup_both(key_tab, slot_tab, slot_uid, ids)
+    assert np.array_equal(got, slots)
+    # a 7th id with the same home bucket misses (probe walks the whole
+    # cluster and stops at the first EMPTY)
+    extra = cand[buckets == target][6]
+    got = _lookup_both(key_tab, slot_tab, slot_uid, [extra])
+    assert got[0] == -1
+
+
+def test_eviction_stale_entry_and_reuse():
+    """Evicting id A (slot reassigned via slot_uid) makes A's entry stale —
+    lookup must miss, NOT return the old slot — and re-admitting A must
+    reuse the stale bucket in place (never two buckets for one key)."""
+    C = 4
+    H = hash_table_size(C)
+    key_tab, slot_tab, n_occ = _fresh(H)
+    key_tab, slot_tab, n_occ = _insert(
+        key_tab, slot_tab, n_occ, [(10, 0), (20, 1)])
+    slot_uid = jnp.asarray([10, 20, -1, -1], jnp.int32)
+    assert np.array_equal(
+        _lookup_both(key_tab, slot_tab, slot_uid, [10, 20]), [0, 1])
+
+    # evict 10: slot 0 now belongs to 30
+    slot_uid = jnp.asarray([30, 20, -1, -1], jnp.int32)
+    key_tab, slot_tab, n_occ = _insert(key_tab, slot_tab, n_occ, [(30, 0)])
+    got = _lookup_both(key_tab, slot_tab, slot_uid, [10, 20, 30])
+    assert np.array_equal(got, [-1, 1, 0])
+
+    # re-admit 10 into slot 2: the stale bucket is reused, occupancy
+    # does not grow for it
+    occ_before = int(n_occ)
+    key_tab, slot_tab, n_occ = _insert(key_tab, slot_tab, n_occ, [(10, 2)])
+    slot_uid = jnp.asarray([30, 20, 10, -1], jnp.int32)
+    got = _lookup_both(key_tab, slot_tab, slot_uid, [10, 20, 30])
+    assert np.array_equal(got, [2, 1, 0])
+    assert int(n_occ) == occ_before  # reuse must not grow occupancy
+    assert int(np.sum(np.asarray(key_tab) == 10)) == 1, (
+        "re-admission must reuse the stale bucket, not open a second one")
+
+
+def test_rebuild_drops_stale_keeps_live():
+    C = 8
+    H = hash_table_size(C)
+    key_tab, slot_tab, n_occ = _fresh(H)
+    pairs = [(i * 17 + 3, i) for i in range(C)]
+    key_tab, slot_tab, n_occ = _insert(key_tab, slot_tab, n_occ, pairs)
+    # half the slots get reassigned (stale entries pile up)
+    live = [(k if i % 2 == 0 else k + 1000, i) for i, (k, _) in
+            zip(range(C), pairs)]
+    slot_uid = jnp.asarray([k for k, _ in live], jnp.int32)
+    key_tab2, slot_tab2, n_occ2 = hash_rebuild(slot_uid, H)
+    assert int(n_occ2) == C
+    got = _lookup_both(key_tab2, slot_tab2, slot_uid, [k for k, _ in live])
+    assert np.array_equal(got, np.arange(C))
+    # the stale (evicted) keys are gone entirely
+    stale = [k for i, (k, _) in zip(range(C), pairs) if i % 2 == 1]
+    got = _lookup_both(key_tab2, slot_tab2, slot_uid, stale)
+    assert np.array_equal(got, -np.ones(len(stale)))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_churn_matches_dense_map(seed):
+    """Fuzz admission/eviction churn against a dense id→slot model array:
+    after every round the probe (oracle AND kernel) must equal the dense
+    truth for hits, misses, and evicted ids alike."""
+    rng = np.random.default_rng(seed)
+    C, R = 32, 500
+    H = hash_table_size(C)
+    key_tab, slot_tab, n_occ = _fresh(H)
+    slot_uid = np.full((C,), -1, np.int32)
+    dense = np.full((R,), -1, np.int32)
+    for _ in range(30):
+        k = rng.integers(1, 9)
+        ids = rng.choice(R, size=k, replace=False).astype(np.int32)
+        ids = ids[dense[ids] < 0]  # admit only ids not currently cached
+        if len(ids) == 0:
+            continue
+        victims = rng.choice(C, size=len(ids), replace=False).astype(np.int32)
+        for v in victims:  # evict whoever held the victim slot
+            old = slot_uid[v]
+            if old >= 0:
+                dense[old] = -1
+        slot_uid[victims] = ids
+        dense[ids] = victims
+        key_tab, slot_tab, n_occ = _insert(
+            key_tab, slot_tab, n_occ, list(zip(ids, victims)))
+        probe_ids = rng.choice(R, size=64).astype(np.int32)
+        got = _lookup_both(key_tab, slot_tab, jnp.asarray(slot_uid),
+                           probe_ids)
+        assert np.array_equal(got, dense[probe_ids])
+
+
+def test_insert_conflicting_claims_one_round():
+    """Several keys whose chains race for the same EMPTY buckets in one
+    batch insert: all must land, each findable, no bucket double-booked."""
+    C = 8
+    H = hash_table_size(C)
+    cand = np.arange(0, 200000, dtype=np.int32)
+    buckets = np.asarray(hash_bucket(jnp.asarray(cand), H))
+    target = buckets[0]
+    ids = cand[buckets == target][:5]
+    key_tab, slot_tab, n_occ = _fresh(H)
+    slots = np.arange(5, dtype=np.int32)
+    key_tab, slot_tab, n_occ = _insert(
+        key_tab, slot_tab, n_occ, list(zip(ids, slots)))
+    kt = np.asarray(key_tab)
+    assert int(n_occ) == 5 == int(np.sum(kt != EMPTY))
+    slot_uid = jnp.full((C,), -1, jnp.int32).at[slots].set(ids)
+    got = _lookup_both(key_tab, slot_tab, slot_uid, ids)
+    assert np.array_equal(got, slots)

@@ -150,44 +150,42 @@ def test_sparse_adagrad_apply(dtype, seed):
 
 @pytest.mark.parametrize("seed", [0, 1])
 def test_gather_rows_cached(seed):
-    """Double-indirection gather: out[i] = cache[id_slot[uids[i]]], exact."""
+    """Slot-stream gather: out[i] = cache[slots[i]], exact — slots being the
+    hash-probe output the cache tier feeds the kernel."""
     rng = np.random.default_rng(seed)
-    R, SLOTS, D, cap = 29, 16, 5, 7
+    SLOTS, D, cap = 16, 5, 7
     cache = jnp.asarray(rng.standard_normal((SLOTS, D)), jnp.float32)
-    real = np.sort(rng.choice(R, size=cap - 2, replace=False))
-    uids = jnp.asarray(
-        np.concatenate([real, np.full(2, real.min())]), jnp.int32)
-    id_slot = np.full((R,), -1, np.int32)
-    id_slot[real] = rng.choice(SLOTS, size=len(real), replace=False)
-    id_slot = jnp.asarray(id_slot)
-    got = gather_rows_cached_pallas(cache, id_slot, uids, interpret=True)
-    want = ref.gather_rows_cached_ref(cache, id_slot, uids)
+    real_slots = rng.choice(SLOTS, size=cap - 2, replace=False)
+    slots = jnp.asarray(
+        np.concatenate([real_slots, np.full(2, real_slots[0])]), jnp.int32)
+    got = gather_rows_cached_pallas(cache, slots, interpret=True)
+    want = ref.gather_rows_cached_ref(cache, slots)
     assert np.array_equal(np.asarray(got), np.asarray(want))
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_sparse_adagrad_cached_apply(seed):
-    """The cache-tier push kernel (id→slot folded into the index stream) is
-    bit-identical to slot-translate-then-scatter."""
+    """The cache-tier push kernel (probe output as the index stream) is
+    bit-identical to the jnp scatter over the same slots."""
     rng = np.random.default_rng(seed + 10)
-    R, SLOTS, D, cap, n_real = 29, 16, 5, 7, 5
+    SLOTS, D, cap, n_real = 16, 5, 7, 5
     cache = jnp.asarray(rng.standard_normal((SLOTS, D)), jnp.float32)
     caccum = jnp.asarray(rng.random((SLOTS, D)) + 0.1, jnp.float32)
-    real = np.sort(rng.choice(R, size=n_real, replace=False))
-    uids = jnp.asarray(
-        np.concatenate([real, np.full(cap - n_real, real.min())]), jnp.int32)
-    id_slot = np.full((R,), -1, np.int32)
-    id_slot[real] = rng.choice(SLOTS, size=n_real, replace=False)
-    id_slot = jnp.asarray(id_slot)
+    real_slots = rng.choice(SLOTS, size=n_real, replace=False)
+    # pads share the first real id's slot and carry zero grads, exactly as
+    # the cache tier's slot_now stream does
+    slots = jnp.asarray(
+        np.concatenate([real_slots, np.full(cap - n_real, real_slots[0])]),
+        jnp.int32)
     grads = jnp.asarray(rng.standard_normal((cap, D)), jnp.float32)
     grads = grads.at[n_real:].set(0.0)
     delta, g2 = jax.jit(
         lambda a, g: adagrad_row_updates(a, g, cache.dtype, lr=0.05, eps=1e-10)
-    )(caccum[id_slot[uids]], grads)
+    )(caccum[slots], grads)
     want_t, want_a = jax.jit(ref.sparse_adagrad_apply_ref)(
-        cache, caccum, jnp.take(id_slot, uids), delta, g2)
+        cache, caccum, slots, delta, g2)
     got_t, got_a = sparse_adagrad_cached_apply_pallas(
-        cache, caccum, id_slot, uids, delta, g2, interpret=True)
+        cache, caccum, slots, delta, g2, interpret=True)
     assert np.array_equal(np.asarray(got_t), np.asarray(want_t))
     assert np.array_equal(np.asarray(got_a), np.asarray(want_a))
 

@@ -1,0 +1,358 @@
+"""RowStore / three-level hierarchy: DiskStore unit behaviour, crash-safety
+GC, and the ISSUE's acceptance parity — ``--store disk`` bit-identical to
+``--store host`` across placements, with save->resume surviving the loss of
+the spill directory."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.row_store import (
+    DiskStore,
+    HostStore,
+    make_store,
+    sweep_stray_tmp,
+)
+
+
+# ------------------------------------------------------------------ helpers
+def _mk_store(tmp_path, **kw):
+    return DiskStore(str(tmp_path / "spill"), **kw)
+
+
+def _init_fn(start, stop):
+    # row r filled with r: page-local slicing errors show up as value errors
+    return np.arange(start, stop, dtype=np.float32)[:, None] * np.ones(
+        (1, 4), np.float32)
+
+
+# --------------------------------------------------------------- unit: pages
+def test_create_gather_roundtrip(tmp_path):
+    st = _mk_store(tmp_path, page_rows=8)
+    st.create_table("t", rows=50, dim=4, dtype=np.float32,
+                    init_rows_fn=_init_fn, accum_init=0.25)
+    uids = np.array([0, 7, 8, 49, 13], np.int64)   # page edges + last short page
+    vals, acc = st.gather("t", uids)
+    np.testing.assert_array_equal(vals, _init_fn(0, 50)[uids])
+    np.testing.assert_array_equal(acc, np.full((5, 4), 0.25, np.float32))
+    st.close()
+
+
+def test_scatter_write_behind_and_flush(tmp_path):
+    st = _mk_store(tmp_path, page_rows=8)
+    st.create_table("t", rows=32, dim=4, dtype=np.float32)
+    uids = np.array([3, 9, 31], np.int64)
+    rows = np.full((3, 4), 7.0, np.float32)
+    accum = np.full((3, 4), 2.0, np.float32)
+    st.scatter("t", uids, rows, accum)
+    # visible through the cache immediately...
+    v, a = st.gather("t", uids)
+    np.testing.assert_array_equal(v, rows)
+    np.testing.assert_array_equal(a, accum)
+    # ...and durable on disk after flush: a FRESH store sees the values
+    st.flush()
+    st.close()
+    st2 = _mk_store(tmp_path, page_rows=8)
+    st2.create_table("t", rows=32, dim=4, dtype=np.float32)  # adopts pages
+    v, a = st2.gather("t", uids)
+    np.testing.assert_array_equal(v, rows)
+    np.testing.assert_array_equal(a, accum)
+    st2.close()
+
+
+def test_bounded_cache_evicts_and_stays_correct(tmp_path):
+    st = _mk_store(tmp_path, page_rows=4, page_cache_pages=2)
+    st.create_table("t", rows=64, dim=4, dtype=np.float32,
+                    init_rows_fn=_init_fn)
+    # touch every page, writing as we go — evictions must persist dirty pages
+    for lo in range(0, 64, 4):
+        uids = np.arange(lo, lo + 4, dtype=np.int64)
+        v, a = st.gather("t", uids)
+        st.scatter("t", uids, v + 1.0, a + 1.0)
+    v, _ = st.gather("t", np.arange(64, dtype=np.int64))
+    np.testing.assert_array_equal(v, _init_fn(0, 64) + 1.0)
+    stats = st.stats()
+    assert stats["pages_evicted"] > 0
+    assert stats["disk_bytes_written"] > 0
+    st.close()
+
+
+def test_readahead_warms_pages(tmp_path):
+    st = _mk_store(tmp_path, page_rows=8)
+    st.create_table("t", rows=64, dim=4, dtype=np.float32)
+    uids = np.array([1, 17, 42], np.int64)
+    st.readahead("t", uids)
+    # the reader thread is asynchronous — wait for it to drain
+    import time
+    for _ in range(100):
+        if st._read_q.empty():
+            break
+        time.sleep(0.01)
+    time.sleep(0.05)
+    before = st.stats()
+    st.gather("t", uids)
+    after = st.stats()
+    # all three pages were faulted in by the reader: gather only hits
+    assert after["page_hits"] - before["page_hits"] == 3
+    assert after["page_misses"] == before["page_misses"]
+    st.close()
+
+
+def test_snapshot_restore_roundtrip(tmp_path):
+    st = _mk_store(tmp_path, page_rows=8)
+    st.create_table("t", rows=20, dim=4, dtype=np.float32,
+                    init_rows_fn=_init_fn, accum_init=0.5)
+    snap = str(tmp_path / "snap")
+    st.snapshot_to(snap)
+    # mutate after the snapshot, then restore: mutation must vanish
+    st.scatter("t", np.arange(20, dtype=np.int64),
+               np.zeros((20, 4), np.float32), np.zeros((20, 4), np.float32))
+    st.restore_from(snap)
+    v, a = st.gather("t", np.arange(20, dtype=np.int64))
+    np.testing.assert_array_equal(v, _init_fn(0, 20))
+    np.testing.assert_array_equal(a, np.full((20, 4), 0.5, np.float32))
+    st.close()
+
+
+def test_restore_missing_page_raises(tmp_path):
+    st = _mk_store(tmp_path, page_rows=8)
+    st.create_table("t", rows=20, dim=4, dtype=np.float32)
+    snap = str(tmp_path / "snap")
+    st.snapshot_to(snap)
+    os.remove(os.path.join(snap, "t", "page_000001.npz"))
+    with pytest.raises(FileNotFoundError):
+        st.restore_from(snap)
+    st.close()
+
+
+def test_make_store_validation(tmp_path):
+    assert isinstance(make_store("host"), HostStore)
+    with pytest.raises(ValueError, match="spill_dir is a disk-store option"):
+        make_store("host", spill_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="requires spill_dir"):
+        make_store("disk")
+    with pytest.raises(ValueError, match="unknown store"):
+        make_store("tape")
+    with pytest.raises(ValueError, match="page_rows must be positive"):
+        DiskStore(str(tmp_path / "s"), page_rows=0)
+    with pytest.raises(ValueError, match="page_cache_pages must be positive"):
+        DiskStore(str(tmp_path / "s"), page_cache_pages=0)
+
+
+# -------------------------------------------------------- crash-safety / GC
+def test_stray_tmp_swept_on_init_and_by_ckpt_gc(tmp_path):
+    """Kill mid write-behind leaves ``<page>.npz.tmp`` wreckage: both the
+    next DiskStore boot AND the CheckpointManager GC sweep it, and the
+    complete predecessor page survives untouched."""
+    spill = tmp_path / "spill"
+    st = DiskStore(str(spill), page_rows=8)
+    st.create_table("t", rows=16, dim=4, dtype=np.float32,
+                    init_rows_fn=_init_fn)
+    st.close()
+    page = spill / "t" / "page_000000.npz"
+    wreck = spill / "t" / "page_000000.npz.tmp"
+    wreck.write_bytes(b"torn half-written page")
+    # (a) CheckpointManager GC sweeps spill wreckage alongside ckpt wreckage
+    ck = tmp_path / "ck"
+    mgr = CheckpointManager(str(ck), keep_last=2, save_every=1,
+                            spill_dir=str(spill))
+    os.makedirs(ck / "pages_staging_00005")   # crashed pre-rename staging
+    mgr.save(1, {"a": np.zeros(3)})
+    assert not wreck.exists()
+    assert not (ck / "pages_staging_00005").exists()
+    # (b) a fresh boot over the same dir also sweeps (no manager needed)
+    wreck.write_bytes(b"torn again")
+    st2 = DiskStore(str(spill), page_rows=8)
+    assert not wreck.exists()
+    st2.create_table("t", rows=16, dim=4, dtype=np.float32)
+    v, _ = st2.gather("t", np.arange(8, dtype=np.int64))
+    np.testing.assert_array_equal(v, _init_fn(0, 8))  # old page intact
+    st2.close()
+
+
+def test_write_page_survives_concurrent_tmp_sweep(tmp_path):
+    """The GC may delete a live write's .tmp between fsync and replace —
+    the writer retries instead of dying (regression for the race)."""
+    from repro.core import row_store as RS
+
+    calls = {"n": 0}
+    orig_replace = os.replace
+
+    def flaky_replace(src, dst):
+        if calls["n"] == 0 and src.endswith(".tmp"):
+            calls["n"] += 1
+            os.remove(src)              # the sweep got there first
+            raise FileNotFoundError(src)
+        return orig_replace(src, dst)
+
+    path = str(tmp_path / "page_000000.npz")
+    rows = np.ones((4, 2), np.float32)
+    acc = np.zeros((4, 2), np.float32)
+    import unittest.mock as mock
+    with mock.patch.object(RS.os, "replace", side_effect=flaky_replace):
+        RS._write_page_atomic(path, rows, acc)
+    with np.load(path) as z:
+        np.testing.assert_array_equal(z["rows"], rows)
+
+
+def test_sweep_counts(tmp_path):
+    (tmp_path / "a.npz.tmp").write_bytes(b"x")
+    sub = tmp_path / "t"
+    sub.mkdir()
+    (sub / "b.npz.tmp").write_bytes(b"x")
+    (sub / "keep.npz").write_bytes(b"x")
+    assert sweep_stray_tmp(str(tmp_path)) == 2
+    assert (sub / "keep.npz").exists()
+
+
+# ------------------------------------------- integration: host/disk parity
+def _trainer(placement, store, spill_dir, prefetch, ckpt_dir=None,
+             page_cache_pages=None):
+    from repro.core.kstep import KStepConfig
+    from repro.core.sparse_optim import SparseAdagradConfig
+    from repro.runtime.factory import build_trainer
+    from repro.runtime.trainer import TrainerConfig
+
+    tcfg = TrainerConfig(
+        n_pod=2, kstep=KStepConfig(lr=1e-3, k=3, merge="two_phase"),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        placement=placement, prefetch=prefetch,
+        store=store, spill_dir=spill_dir, page_rows=256 if spill_dir else None,
+        page_cache_pages=page_cache_pages,
+        ckpt_dir=ckpt_dir, ckpt_every=3, ckpt_async=False,
+    )
+    return build_trainer("baidu-ctr", tcfg)
+
+
+def _batches(n, batch=48):
+    from repro import configs
+    from repro.data import synthetic as S
+
+    cfg = configs.get("baidu-ctr").smoke_cfg
+    gen = S.recsys_batches(cfg, batch=batch, seed=1)
+    return [next(gen) for _ in range(n)]
+
+
+def _final_rows(tr):
+    """(rows, accum) per table from the authoritative store/placement."""
+    eng = tr.engine
+    if eng.store.kind == "disk":
+        eng.sync_store(tr.tables, tr.sparse_state.accum, tr.backend_state)
+        out = {}
+        for n, s in eng.specs.items():
+            out[n] = eng.store.gather(n, np.arange(s.rows, dtype=np.int64))
+        return out
+    ft, fa, _ = eng.flush(tr.tables, tr.sparse_state.accum, tr.backend_state)
+    ex, exa = eng.export(ft), eng.export(fa)
+    return {n: (np.asarray(ex[n]), np.asarray(exa[n])) for n in ex}
+
+
+@pytest.mark.parametrize("placement", ["gather", "cached"])
+def test_disk_bitwise_parity_with_host(placement, tmp_path):
+    """The acceptance bar: full-mirror disk training is bit-identical to
+    host training — losses, predictions, final rows, final accumulators —
+    under both the sync and the prefetched pull."""
+    batches = _batches(5)
+    ref = _trainer(placement, "host", None, prefetch=False)
+    ref_losses = [float(ref.train_step(b)) for b in batches]
+    ref_pred = ref.predict(batches[0])
+    ref_rows = _final_rows(ref)
+
+    for prefetch in (False, True):
+        spill = str(tmp_path / f"spill_{int(prefetch)}")
+        tr = _trainer(placement, "disk", spill, prefetch=prefetch)
+        losses = [float(tr.train_step(b)) for b in batches]
+        assert losses == ref_losses
+        np.testing.assert_array_equal(tr.predict(batches[0]), ref_pred)
+        rows = _final_rows(tr)
+        for n in ref_rows:
+            np.testing.assert_array_equal(rows[n][0], ref_rows[n][0])
+            np.testing.assert_array_equal(rows[n][1], ref_rows[n][1])
+        tr.engine.store.close()
+
+
+def test_disk_trains_beyond_page_cache_budget(tmp_path):
+    """page_cache_pages smaller than the table's page count still trains —
+    and stays bit-identical (the page cache is a cache, not a capacity)."""
+    batches = _batches(4)
+    ref = _trainer("gather", "host", None, prefetch=False)
+    ref_losses = [float(ref.train_step(b)) for b in batches]
+
+    tr = _trainer("gather", "disk", str(tmp_path / "spill"), prefetch=False,
+                  page_cache_pages=4)   # 4*256 rows resident << table rows
+    losses = [float(tr.train_step(b)) for b in batches]
+    assert losses == ref_losses
+    assert tr.engine.store.stats()["pages_evicted"] > 0
+    tr.engine.store.close()
+
+
+def test_disk_save_resume_replay_bitexact(tmp_path):
+    """Crash after step 4 (last checkpoint at 3), lose the spill dir, resume
+    into a FRESH one from the checkpoint pages, replay to 6: losses and the
+    final store match the uninterrupted run bit-for-bit."""
+    batches = _batches(6)
+
+    ref = _trainer("cached", "disk", str(tmp_path / "s_ref"), prefetch=True,
+                   ckpt_dir=str(tmp_path / "ck_ref"))
+    ref_losses = [float(ref.train_step(b)) for b in batches]
+    ref_rows = _final_rows(ref)
+    ref.ckpt.wait()
+    ref.engine.store.close()
+
+    crash = _trainer("cached", "disk", str(tmp_path / "s1"), prefetch=True,
+                     ckpt_dir=str(tmp_path / "ck"))
+    for b in batches[:4]:
+        crash.train_step(b)
+    crash.ckpt.wait()
+    shutil.rmtree(tmp_path / "s1")   # node loss: local SSD gone
+
+    tr = _trainer("cached", "disk", str(tmp_path / "s2"), prefetch=True,
+                  ckpt_dir=str(tmp_path / "ck"))
+    assert tr.resume()
+    start = tr.step_num
+    assert start == 3
+    losses = [float(tr.train_step(b)) for b in batches[start:]]
+    assert losses == ref_losses[start:]
+    rows = _final_rows(tr)
+    for n in ref_rows:
+        np.testing.assert_array_equal(rows[n][0], ref_rows[n][0])
+        np.testing.assert_array_equal(rows[n][1], ref_rows[n][1])
+    tr.ckpt.wait()
+    tr.engine.store.close()
+
+
+def test_resume_rejects_store_mismatch(tmp_path):
+    """A host-store checkpoint must not silently resume as disk (and the
+    layout guard says so out loud)."""
+    batches = _batches(3)
+    tr = _trainer("gather", "host", None, prefetch=False,
+                  ckpt_dir=str(tmp_path / "ck"))
+    for b in batches:
+        tr.train_step(b)
+    tr.ckpt.wait()
+
+    tr2 = _trainer("gather", "disk", str(tmp_path / "spill"), prefetch=False,
+                   ckpt_dir=str(tmp_path / "ck"))
+    with pytest.raises(ValueError, match="store"):
+        tr2.resume()
+    tr2.engine.store.close()
+
+
+def test_factory_rejects_bad_combos(tmp_path):
+    with pytest.raises(ValueError, match="disk-store knobs"):
+        _trainer("gather", "host", None, prefetch=False, page_cache_pages=4)
+    from repro.core.kstep import KStepConfig
+    from repro.core.sparse_optim import SparseAdagradConfig
+    from repro.runtime.factory import build_trainer
+    from repro.runtime.trainer import TrainerConfig
+
+    tcfg = TrainerConfig(
+        n_pod=2, kstep=KStepConfig(lr=1e-3, k=3, merge="two_phase"),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        placement="routed", store="disk", spill_dir=str(tmp_path / "s"),
+    )
+    with pytest.raises(NotImplementedError, match="routed"):
+        build_trainer("baidu-ctr", tcfg)
