@@ -27,6 +27,7 @@ def main() -> None:
         fig9_kstep_auc,
         fig10_comm_ratio,
         fig_cache_hier,
+        fig_serve_qps,
         roofline,
         table1_hashing,
     )
@@ -40,6 +41,10 @@ def main() -> None:
         "fig9": lambda: fig9_kstep_auc.run(steps=steps),
         "fig10": lambda: fig10_comm_ratio.run(),
         "fig_cache": lambda: fig_cache_hier.run(steps=steps),
+        # co-located serving tier: QPS + p50/p99 vs dynamic-batch size,
+        # cold device cache vs trainer-warmed (runtime/serve_ctr.py)
+        "serve_qps": lambda: fig_serve_qps.run(
+            steps=steps // 3, n_requests=256 if args.quick else 1024),
         # sparse hot-path fused-vs-unfused referee; also writes
         # BENCH_roofline.json (the perf baseline later PRs diff against)
         "roofline_measure": lambda: roofline.measure_rows(quick=args.quick),

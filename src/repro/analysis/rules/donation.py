@@ -30,6 +30,7 @@ from repro.analysis import lint
 DEFAULT_HOT_MODULES = (
     "*/runtime/trainer.py",
     "*/runtime/serve.py",
+    "*/runtime/serve_ctr.py",
     "*/core/embedding_engine.py",
     "*/core/prefetch.py",
     "*/core/cache_tier.py",

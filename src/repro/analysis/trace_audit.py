@@ -5,7 +5,10 @@ The AST lint (layer 1) sees what the source *says*; this layer checks what
 the compiler actually *gets*.  For every registered recsys arch x placement
 {gather, routed, cached} (and the LM serving decode step), a trainer is
 built at smoke scale, one real step is traced, and the jaxpr / lowered
-module is audited:
+module is audited.  The co-located CTR serving tier gets its own audit
+(``audit_serve_lookup``): same hygiene, plus the inverted donation
+invariant — the read-only lookup must donate NOTHING (it shares live
+training buffers):
 
 - ``callback``:   no ``pure_callback``/``io_callback``/``debug_callback``
                   primitives anywhere in the step jaxpr — a callback in the
@@ -47,6 +50,7 @@ _CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback"}
 # name the module that owns the audited executable)
 _TRAINER_PATH = "src/repro/runtime/trainer.py"
 _SERVE_PATH = "src/repro/runtime/serve.py"
+_SERVE_CTR_PATH = "src/repro/runtime/serve_ctr.py"
 
 
 # ------------------------------------------------------------ jaxpr walking
@@ -299,6 +303,89 @@ def audit_serve_decode() -> List[CheckResult]:
     return results
 
 
+def audit_serve_lookup(arch: str = "baidu-ctr", placement: str = "cached",
+                       batch: int = 32) -> List[CheckResult]:
+    """The co-located CTR serving tier (``runtime/serve_ctr.py``): audit the
+    read-only lookup executable that ``CTRServer`` drives.
+
+    Beyond the usual jaxpr hygiene, the serving-specific invariants:
+
+    - ``no-donation``: predict shares the LIVE training buffers (tables,
+      accumulators, cache state) with the trainer — its lowered module must
+      mark NO donor parameters, or a serve call would invalidate the
+      trainer's handles mid-run.
+    - ``transfer-sync``: interleaved train_step + server drain survives
+      ``jax.transfer_guard("disallow")`` — serving adds no implicit
+      host<->device syncs to the co-located loop (its h2d staging and d2h
+      score reads are explicit device_put/device_get).
+    - ``retrace``: server drains must reuse the one compiled predict
+      executable (dynamic batches pad to a static shape)."""
+    import jax
+    from repro import configs
+    from repro.data import synthetic as S
+    from repro.runtime.factory import build_ctr_server
+    from repro.runtime.serve_ctr import requests_from_batch
+
+    target = f"serve-ctr/{placement}"
+    results: List[CheckResult] = []
+    tr = _build_recsys(arch, placement, prefetch=False)
+    mcfg = configs.get(arch).smoke_cfg
+    gen = S.recsys_batches(mcfg, batch=batch, seed=0)
+    srv = build_ctr_server(tr, max_batch=batch)
+
+    # ---- static: hygiene + the no-donation invariant on the real predict
+    b0 = next(gen)
+    staged = tr._stage({k: v for k, v in b0.items() if k != "label"})
+    args = (tr.dense, tr.tables, tr.sparse_state.accum, tr.backend_state,
+            staged)
+    jx = jax.make_jaxpr(tr._predict_traced)(*args)
+    cbs = callback_primitives(jx)
+    results.append(CheckResult(
+        target, "callback", not cbs,
+        f"serve lookup callbacks: {cbs}" if cbs else ""))
+    wides = f64_leaks(jx)
+    results.append(CheckResult(
+        target, "f64", not wides,
+        f"serve lookup f64 outputs from: {wides}" if wides else ""))
+    txt = tr._predict_jit.lower(*args).as_text()
+    ok = not donation_marked(txt)
+    results.append(CheckResult(
+        target, "no-donation", ok,
+        "" if ok else (
+            "serve lookup lowered module marks donor parameters — predict "
+            "reads the trainer's LIVE tables/accum/cache state and must "
+            "never donate them"),
+    ))
+
+    # ---- dynamic: co-located loop (train + drain) -> retrace + guard
+    for _ in range(2):   # warm-up: compile predict + train executables
+        tr.train_step(next(gen))
+        srv.submit_batch(next(gen))
+        srv.drain()
+    size0 = tr._predict_jit._cache_size()
+    transfer_err: Optional[str] = None
+    try:
+        with jax.transfer_guard("disallow"):
+            for _ in range(2):
+                tr.train_step(next(gen))
+                for req in requests_from_batch(next(gen)):
+                    srv.submit(req)
+                srv.drain()
+    except Exception as e:
+        transfer_err = f"{type(e).__name__}: {e}"
+    grew = tr._predict_jit._cache_size() - size0
+    results.append(CheckResult(
+        target, "retrace", grew == 0,
+        f"predict jit cache grew by {grew} across server drains" if grew
+        else ""))
+    results.append(CheckResult(
+        target, "transfer-sync", transfer_err is None,
+        ("implicit host<->device transfer in the co-located train+serve "
+         f"loop under jax.transfer_guard('disallow'): {transfer_err}")
+        if transfer_err else ""))
+    return results
+
+
 # ----------------------------------------------------------------- the gate
 def run_trace_audit(
     archs: Optional[Sequence[str]] = None,
@@ -359,4 +446,19 @@ def run_trace_audit(
             report.append(dataclasses.asdict(r))
             if not r.ok:
                 findings.append(_finding(_SERVE_PATH, r))
+
+        # co-located CTR serving tier (read-only lookup + no-donation)
+        if log:
+            log("trace-audit: serve-ctr")
+        try:
+            results = audit_serve_lookup(
+                archs[0] if archs else "baidu-ctr")
+        except Exception:
+            results = [CheckResult(
+                "serve-ctr", "audit-error", False,
+                traceback.format_exc(limit=3).strip())]
+        for r in results:
+            report.append(dataclasses.asdict(r))
+            if not r.ok:
+                findings.append(_finding(_SERVE_CTR_PATH, r))
     return findings, report

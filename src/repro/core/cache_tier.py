@@ -307,6 +307,62 @@ class CachedBackend:
         ws = WorkingSet(uids, inverse, _with_drop_row(wrows), n_dropped)
         return ws, new_table, new_haccum, new_state
 
+    def lookup(self, table, accum, state: CacheState, flat_ids, capacity: int):
+        """Read-only serving lookup — the MixCache read side.
+
+        Probes the hash map exactly like ``pull`` but ADMITS NOTHING: hits
+        are served from the cached rows (which hold the freshest values —
+        push writes through to the cache, so a trained row serves
+        immediately), misses fall through to the cold tier (the host table,
+        or the uid-aligned staged rows under the DiskStore).  The
+        fallthrough is exact by construction: a row absent from the cache
+        cannot be dirty (eviction spills dirty rows before killing their
+        map entry), so the cold tier holds its authoritative value.  No
+        state is returned because none changes: no admission, no eviction,
+        no rebuild, no counters — the training trajectory is invariant
+        under any interleaving of lookups."""
+        C = self.cache_rows
+        if C < capacity:
+            raise ValueError(
+                f"cache_rows ({C}) must cover the lookup capacity "
+                f"({capacity}): one batch's working set must fit in the "
+                f"device cache"
+            )
+        if self.staged and table.shape[0] != capacity:
+            raise ValueError(
+                f"staged lookup expects ({capacity}, dim) working-set rows "
+                f"from the RowStore, got {table.shape}"
+            )
+        uids, inverse, n_dropped = _dedup(flat_ids, capacity)
+        valid = jnp.concatenate(
+            [jnp.ones((1,), bool), uids[1:] > uids[:-1]]
+        )
+        slot = self._lookup(state.key_tab, state.slot_tab, state.slot_uid, uids)
+        hit = slot >= 0
+        safe = jnp.where(hit, slot, 0)
+        if self.fused:
+            from repro.kernels import ops
+
+            cached = ops.gather_rows_cached(state.rows, safe)
+        else:
+            cached = jnp.take(state.rows, safe, axis=0)
+        if self.staged:
+            cold = table          # staged working-set rows, uid-aligned
+        else:
+            cold = jnp.take(table, uids, axis=0)
+        wrows = jnp.where(hit[:, None], cached, cold)
+        ws = WorkingSet(uids, inverse, _with_drop_row(wrows), n_dropped)
+        # served id slots / unique cold-tier reads, metered separately from
+        # the training counters (which live in state and stay untouched)
+        counts = jnp.zeros((capacity + 1,), jnp.float32).at[inverse].add(1.0)[
+            :capacity
+        ]
+        aux = {
+            "serve_lookups": jnp.sum(counts),
+            "serve_misses": jnp.sum((valid & ~hit).astype(jnp.float32)),
+        }
+        return ws, aux
+
     def push(self, table, accum, state: CacheState, ws: WorkingSet, row_grads,
              opt: SparseAdagrad):
         """Write-through to the CACHE only (the cold tier sees the update at

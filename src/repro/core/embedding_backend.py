@@ -8,9 +8,23 @@ physically move is a placement decision, so it lives behind a protocol:
     state = backend.init_state(table)
     backend.pull(table, accum, state, flat_ids, capacity)
         -> (WorkingSet, table, accum, state)
+    backend.lookup(table, accum, state, flat_ids, capacity)
+        -> (WorkingSet, aux)              # read-only (serving/inference)
     backend.push(table, accum, state, working_set, row_grads, opt)
         -> (table, accum, state)
     backend.flush(table, accum, state) -> (table, accum, state)
+
+The pull path is split into two explicit contracts.  ``pull`` is the
+TRAINING pull: it may mutate backend state (LFU counters, cache
+admissions/evictions, spill buffers) and thread updated tables back.
+``lookup`` is the READ-ONLY serving lookup: it returns the same rows a
+pull would serve but is side-effect-free on every input — no admissions,
+no evictions, no counters, nothing donated — so a co-located inference
+server can read the live training state between steps without perturbing
+the training trajectory (ScaleFreeCTR's shared MixCache).  ``aux`` is a
+small dict of f32 scalars metering the lookup itself (``serve_lookups``,
+plus ``serve_misses`` for the cache tier) so serving traffic is counted
+separately from training traffic.
 
 Every backend owns an explicit per-table STATE pytree threaded through the
 compiled train step (``EmbeddingEngine.pull/push`` -> ``HybridTrainer``).
@@ -145,6 +159,15 @@ class EmbeddingBackend(Protocol):
     def pull(self, table, accum, state, flat_ids, capacity: int):
         ...
 
+    def lookup(self, table, accum, state, flat_ids, capacity: int):
+        """Read-only serving lookup: ``(WorkingSet, aux)``.
+
+        Must serve the same row values a ``pull`` would (cache-fresh rows
+        included) while mutating NOTHING — no admission, no eviction, no
+        counter writes; every input pytree is returned untouched by simply
+        not being returned at all."""
+        ...
+
     def push(self, table, accum, state, ws: WorkingSet, row_grads,
              opt: SparseAdagrad):
         ...
@@ -191,8 +214,8 @@ class GatherBackend:
     def flush(self, table, accum, state):
         return table, accum, state
 
-    def pull(self, table, accum, state, flat_ids, capacity: int):
-        uids, inv, n_dropped = _dedup(flat_ids, capacity)
+    def _served_rows(self, table, uids, capacity: int) -> jnp.ndarray:
+        """(capacity + 1, dim) rows for ``uids`` — shared by pull/lookup."""
         if self.staged:
             if table.shape[0] != capacity:
                 raise ValueError(
@@ -202,10 +225,23 @@ class GatherBackend:
             # the store already gathered rows in dedup'd-uid order — the
             # host mirrors _dedup exactly (np.unique, truncate-keep-smallest,
             # pad with the minimum), so rows[i] IS T[uids[i]]
-            rows = _with_drop_row(table)
-        else:
-            rows = _with_drop_row(jnp.take(table, uids, axis=0))
+            return _with_drop_row(table)
+        return _with_drop_row(jnp.take(table, uids, axis=0))
+
+    def pull(self, table, accum, state, flat_ids, capacity: int):
+        uids, inv, n_dropped = _dedup(flat_ids, capacity)
+        rows = self._served_rows(table, uids, capacity)
         return WorkingSet(uids, inv, rows, n_dropped), table, accum, state
+
+    def lookup(self, table, accum, state, flat_ids, capacity: int):
+        """Read-only lookup: identical row service to ``pull`` (the gather
+        path is stateless, so the only difference is the contract — nothing
+        is threaded back, nothing may be donated into it)."""
+        uids, inv, n_dropped = _dedup(flat_ids, capacity)
+        rows = self._served_rows(table, uids, capacity)
+        aux = {"serve_lookups":
+               jnp.float32(flat_ids.size) - n_dropped.astype(jnp.float32)}
+        return WorkingSet(uids, inv, rows, n_dropped), aux
 
     def push(self, table, accum, state, ws: WorkingSet, row_grads,
              opt: SparseAdagrad):
@@ -303,6 +339,19 @@ class RoutedBackend:
             uids, inv, _with_drop_row(rows), n_dedup_dropped + jnp.sum(dropped)
         )
         return ws, table, accum, state
+
+    def lookup(self, table, accum, state, flat_ids, capacity: int):
+        """Read-only lookup: the same all-to-all exchange as ``pull`` (the
+        route reads shard-resident rows and mutates nothing), returned
+        without the state threading so nothing can be donated into it."""
+        uids, inv, n_dedup_dropped = _dedup(flat_ids, capacity)
+        pull_fn, _ = self._pull_push(table.shape[0], table.shape[1], capacity)
+        rows, _, dropped = pull_fn(table, uids)
+        n_dropped = n_dedup_dropped + jnp.sum(dropped)
+        ws = WorkingSet(uids, inv, _with_drop_row(rows), n_dropped)
+        aux = {"serve_lookups":
+               jnp.float32(flat_ids.size) - n_dropped.astype(jnp.float32)}
+        return ws, aux
 
     def push(self, table, accum, state, ws: WorkingSet, row_grads,
              opt: SparseAdagrad):

@@ -38,6 +38,19 @@ speculatively dispatch batch t+1's pull while the device still runs batch
 t's fwd/bwd — the cache tier's table spill is the only ordering point, and
 it is serialized by handing the pull's returned tables to the next stage.
 
+Serving path (co-located CTR inference, ``runtime/serve_ctr.py``): the same
+engine exposes a READ-ONLY lookup next to the training pull —
+``lookup``/``lookup_batch`` trace inside a caller's jit, ``lookup_stage``
+is the standalone compiled stage (donating NOTHING — it must never consume
+live training buffers).  A lookup serves exactly the rows a pull would
+(cache-fresh values included) with zero side effects on backend state, so
+an inference server can read the live trainer's tables between steps
+without moving the training trajectory.  Under the DiskStore the lookup
+stage reads pages through ``store.gather(serve=True)`` (serve-metered page
+cache, no readahead queueing) and OVERLAYS the pending staged training
+outputs read-only (``_staged_updates``) instead of absorbing them — the
+store is never written on the serving path.
+
 JAX has no native EmbeddingBag and no CSR/CSC sparse — the bag lookup here is
 built from ``jnp.take`` + ``jax.ops.segment_sum`` (this IS part of the system,
 per the assignment), with a Pallas TPU kernel for the fused gather-reduce hot
@@ -170,6 +183,8 @@ class EmbeddingEngine:
         self._staged_pending: Dict[str, Any] = {}
         self._staged_stages: Dict[bool, Any] = {}
         self._pull_jits: Dict[bool, Any] = {}   # donate flag -> jitted stage
+        self._lookup_jit: Any = None            # read-only serving lookup
+        self._staged_lookup: Any = None         # its DiskStore wrapper
         # id extraction runs EVERY step in front of the pull jit; compiled
         # once so per-step eager column slices don't ship their start index
         # host->device each step (id_col tables: 26 slices/step on DLRM).
@@ -279,6 +294,47 @@ class EmbeddingEngine:
     def pull_batch(self, tables, accum, states, batch):
         return self.pull(tables, accum, states, self.ids_from_batch(batch))
 
+    # ------------------------------------------------- read-only lookup path
+    def lookup(self, tables, accum, states, flat_ids: Dict[str, jnp.ndarray]):
+        """Read-only serving lookup: ``({name: WorkingSet}, aux)``.
+
+        The inference counterpart of ``pull``: serves identical row values
+        (the cache tier's dirty rows included — freshly trained rows are
+        servable immediately) but is side-effect-free on every input, so
+        interleaving lookups with training changes nothing.  ``aux`` sums
+        the backends' serve meters (f32 scalars) across tables."""
+        wss, aux_tot = {}, {}
+        for name, ids in flat_ids.items():
+            ws, aux = self.backend.lookup(
+                tables[name], accum[name], states[name], ids, self.capacity
+            )
+            wss[name] = ws
+            for k, v in aux.items():
+                aux_tot[k] = aux_tot.get(k, 0.0) + v
+        return wss, aux_tot
+
+    def lookup_batch(self, tables, accum, states, batch):
+        return self.lookup(tables, accum, states, self.ids_from_batch(batch))
+
+    def lookup_stage(self):
+        """The compiled LOOKUP stage: ``(tables, accum, states, flat_ids) ->
+        (wss, aux)`` with NOTHING donated — the stage reads the live
+        training buffers and must leave them valid for the trainer.
+
+        Under the DiskStore the returned callable wraps the same jitted
+        executable with read-only staging (``stage_lookup``): serve-metered
+        page reads plus a host-side overlay of any pending staged training
+        outputs, never an absorb."""
+        if self._lookup_jit is None:
+            def _lookup(tables, accum, states, flat_ids):
+                return self.lookup(tables, accum, states, flat_ids)
+            # donate_argnums=() is the contract, not an omission: a serving
+            # read must never consume the trainer's live buffers
+            self._lookup_jit = jax.jit(_lookup, donate_argnums=())
+        if self.store.kind == "disk":
+            return self._disk_lookup_stage()
+        return self._lookup_jit
+
     # --------------------------------------------------- async pull staging
     def pull_stage(self, donate: bool = True):
         """The compiled PULL stage: ``(tables, accum, states, flat_ids) ->
@@ -329,20 +385,22 @@ class EmbeddingEngine:
     def _is_cached(self) -> bool:
         return getattr(self.backend, "cache_rows", None) is not None
 
-    def absorb_staged(self, tables, accum, states):
-        """Commit the previous step's staged outputs into the DiskStore.
-
-        The explicit ``jax.device_get`` is the ONE deliberate d2h boundary
-        of the disk path (strict-transfers-exempt); it blocks on the train
-        step still holding these buffers — which is why ``readahead`` is
-        issued first, so page fault-in overlaps that wait.
+    def _staged_updates(self, tables, accum, states):
+        """Pending staged training outputs as ``{name: (uids, rows, accum)}``
+        numpy triples — the rows the DiskStore does not hold yet.
 
         cached: the pull's table/accum OUTPUTS are the evicted-dirty spill
         rows, ids in ``state.spill_uid`` (-1 = no spill).  gather: the
         push's outputs are the updated staged rows of the batch recorded in
-        ``_staged_pending``.  Both writes are of absolute row values, so
-        re-absorbing (save-then-continue, resume replay) is idempotent.
+        ``_staged_pending``.  READ-ONLY: shared by ``absorb_staged`` (which
+        scatters the triples into the store and clears the pending
+        metadata) and the serving lookup's overlay (which patches them onto
+        store reads WITHOUT committing anything).  The explicit
+        ``jax.device_get`` is the deliberate d2h boundary of the disk path
+        (strict-transfers-exempt); it blocks on the train step still
+        holding these buffers.
         """
+        out: Dict[str, Any] = {}
         if self._is_cached():
             for n in self.specs:
                 got = jax.device_get({
@@ -351,18 +409,28 @@ class EmbeddingEngine:
                 })
                 m = np.asarray(got["uid"]) >= 0
                 if m.any():
-                    self.store.scatter(
-                        n, np.asarray(got["uid"])[m],
-                        np.asarray(got["rows"])[m],
-                        np.asarray(got["accum"])[m])
+                    out[n] = (np.asarray(got["uid"])[m],
+                              np.asarray(got["rows"])[m],
+                              np.asarray(got["accum"])[m])
         else:
             for n, (uids, valid) in self._staged_pending.items():
                 got = jax.device_get({"rows": tables[n], "accum": accum[n]})
-                self.store.scatter(
-                    n, uids[valid],
-                    np.asarray(got["rows"])[valid],
-                    np.asarray(got["accum"])[valid])
-            self._staged_pending = {}
+                out[n] = (uids[valid],
+                          np.asarray(got["rows"])[valid],
+                          np.asarray(got["accum"])[valid])
+        return out
+
+    def absorb_staged(self, tables, accum, states):
+        """Commit the previous step's staged outputs into the DiskStore.
+
+        The writes are of absolute row values, so re-absorbing
+        (save-then-continue, resume replay) is idempotent — which is also
+        why the serving lookup may overlay the same triples read-only
+        while they sit un-absorbed."""
+        for n, (uids, rows, acc) in self._staged_updates(
+                tables, accum, states).items():
+            self.store.scatter(n, uids, rows, acc)
+        self._staged_pending = {}
 
     def _disk_pull_stage(self, donate: bool):
         """Host staging wrapped around the jitted pull (DiskStore only).
@@ -395,6 +463,54 @@ class EmbeddingEngine:
 
         self._staged_stages[donate] = staged_pull
         return staged_pull
+
+    def stage_lookup(self, tables, accum, states, ids_np: Dict[str, np.ndarray]):
+        """Read-only staging of a lookup batch's rows from the DiskStore.
+
+        Returns ``(staged_tables, staged_accum)`` — (capacity, dim) device
+        buffers in dedup'd-uid order, shaped exactly like the training
+        staging buffers (same predict executable, no recompile).  Unlike
+        the pull staging this NEVER writes the store: pages are read with
+        ``serve=True`` (serve-metered, no readahead queueing), and any
+        pending staged training outputs are OVERLAID onto the gathered rows
+        host-side — the freshest values are served without absorbing the
+        training side's commit, so a serving read cannot perturb the
+        staging protocol.  The overlay blocks on the device buffers (an
+        in-flight prefetched pull resolves here), which is the same wait
+        the training absorb would pay.
+        """
+        overlay = self._staged_updates(tables, accum, states)
+        staged_t, staged_a = {}, {}
+        for n, ids in ids_np.items():
+            uids, valid = self.host_dedup(ids)
+            rows, acc = self.store.gather(n, uids, serve=True)
+            ov = overlay.get(n)
+            if ov is not None:
+                o_uid, o_rows, o_acc = ov
+                k = int(valid.sum())     # uids[:k] is sorted unique
+                pos = np.searchsorted(uids[:k], o_uid)
+                hit = pos < k
+                hit[hit] = uids[pos[hit]] == o_uid[hit]
+                rows[pos[hit]] = o_rows[hit].astype(rows.dtype, copy=False)
+                acc[pos[hit]] = o_acc[hit]
+            staged_t[n] = jax.device_put(rows)
+            staged_a[n] = jax.device_put(acc)
+        return staged_t, staged_a
+
+    def _disk_lookup_stage(self):
+        """Read-only staging wrapped around the jitted lookup (DiskStore)."""
+        if self._staged_lookup is not None:
+            return self._staged_lookup
+        inner = self._lookup_jit
+
+        def staged_lookup(tables, accum, states, flat_ids):
+            ids_np = jax.device_get(flat_ids)
+            staged_t, staged_a = self.stage_lookup(
+                tables, accum, states, ids_np)
+            return inner(staged_t, staged_a, states, flat_ids)
+
+        self._staged_lookup = staged_lookup
+        return staged_lookup
 
     def sync_store(self, tables, accum, states):
         """DiskStore commit point (checkpoint/export): absorb the pending

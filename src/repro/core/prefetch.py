@@ -36,10 +36,13 @@ Under ``--store disk`` the engine's pull stage is the host-staging wrapper
 ``dispatch`` runs the wrapper, whose read-ahead queues the next batch's
 pages BEFORE its absorb blocks on the train step still holding the previous
 staged outputs — so disk fault-in overlaps device compute exactly like the
-pull itself does.  The absorb-at-dispatch ordering also means that while a
-pull is pending the store is fully current, which ``HybridTrainer.predict``
-relies on (it must NOT absorb the pending pass-through buffers itself; see
-``_predict_disk``).
+pull itself does.  Inference never absorbs at all: ``HybridTrainer``'s
+predict path runs the engine's READ-ONLY lookup contract, and under the
+disk store ``EmbeddingEngine.stage_lookup`` overlays any still-pending
+staged training outputs onto its serve-metered page reads host-side — the
+freshest values are served in every pipeline state without writing to the
+store or disturbing the pending metadata this prefetcher owns (see
+``_disk_lookup_stage``).
 """
 
 from __future__ import annotations

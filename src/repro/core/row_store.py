@@ -74,6 +74,9 @@ class HostStore:
     def stats(self) -> dict:
         return {}
 
+    def serve_stats(self) -> dict:
+        return {}
+
 
 class _TableFile:
     """One table's page set under ``<root>/<name>/`` + its dirty/meta state."""
@@ -151,6 +154,12 @@ class DiskStore:
             "page_hits": 0.0, "page_misses": 0.0, "pages_evicted": 0.0,
             "disk_bytes_read": 0.0, "disk_bytes_written": 0.0,
         }
+        # serving reads (gather(serve=True)) meter here instead, so the
+        # trainer's per-interval page stats stay pure training signal
+        self._serve_stats = {
+            "page_hits": 0.0, "page_misses": 0.0, "pages_evicted": 0.0,
+            "disk_bytes_read": 0.0,
+        }
 
     # ------------------------------------------------------------- lifecycle
     def _check_bg(self):
@@ -209,34 +218,42 @@ class DiskStore:
                 "page_rows": t.page_rows}
 
     # ----------------------------------------------------------- page cache
-    def _load_page(self, t: _TableFile, p: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _load_page(self, t: _TableFile, p: int,
+                   stats: Optional[dict] = None) -> Tuple[np.ndarray, np.ndarray]:
         """Return page p's (rows, accum) arrays, faulting in if needed.
 
         Caller holds the lock.  In-flight write copies win over the file —
-        they are strictly newer and the file may be mid-replace.
+        they are strictly newer and the file may be mid-replace.  ``stats``
+        selects the meter bucket (training by default; ``gather(serve=
+        True)`` passes the serve bucket so inference page traffic never
+        pollutes training-interval stats).
         """
+        if stats is None:
+            stats = self._stats
         key = (t.dir, p)
         got = self._cache.get(key)
         if got is not None:
             self._cache.move_to_end(key)
-            self._stats["page_hits"] += 1
+            stats["page_hits"] += 1
             return got
-        self._stats["page_misses"] += 1
+        stats["page_misses"] += 1
         pending = self._in_flight.get(key)
         if pending is not None:
             vals, acc = pending[0].copy(), pending[1].copy()
         else:
             with np.load(t.page_path(p)) as z:
                 vals, acc = z["rows"], z["accum"]
-            self._stats["disk_bytes_read"] += vals.nbytes + acc.nbytes
+            stats["disk_bytes_read"] += vals.nbytes + acc.nbytes
         self._cache[key] = (vals, acc)
-        self._evict_lru(keep=key)
+        self._evict_lru(keep=key, stats=stats)
         return self._cache[key]
 
-    def _evict_lru(self, keep=None):
+    def _evict_lru(self, keep=None, stats: Optional[dict] = None):
         """Shrink the cache to capacity; dirty victims go to the writer."""
         if self.page_cache_pages is None:
             return
+        if stats is None:
+            stats = self._stats
         while len(self._cache) > self.page_cache_pages:
             for key in self._cache:      # LRU order; skip the pinned page
                 if key != keep:
@@ -244,7 +261,7 @@ class DiskStore:
             else:
                 return
             vals, acc = self._cache.pop(key)
-            self._stats["pages_evicted"] += 1
+            stats["pages_evicted"] += 1
             if key in self._dirty:
                 self._dirty.discard(key)
                 self._in_flight[key] = (vals, acc)
@@ -257,20 +274,26 @@ class DiskStore:
         raise KeyError(key)
 
     # ------------------------------------------------------------ access API
-    def gather(self, name: str, uids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def gather(self, name: str, uids: np.ndarray,
+               serve: bool = False) -> Tuple[np.ndarray, np.ndarray]:
         """(len(uids), dim) value + accumulator rows, in uid order.
 
         The blocking read of the pull path — ``readahead`` should have
         warmed the pages while the device trained the previous batch.
+        ``serve=True`` is the read-only lookup path: identical reads (and
+        identical page-cache warming — serving rides the cache the trainer
+        keeps hot), but metered into ``serve_stats()`` so training-interval
+        page stats never count inference traffic.
         """
         self._check_bg()
         t = self._tables[name]
         uids = np.asarray(uids, np.int64)
         out_v = np.empty((len(uids), t.dim), t.dtype)
         out_a = np.empty((len(uids), t.dim), np.float32)
+        stats = self._serve_stats if serve else self._stats
         with self._lock:
             for p in np.unique(uids // t.page_rows):
-                vals, acc = self._load_page(t, int(p))
+                vals, acc = self._load_page(t, int(p), stats=stats)
                 sel = uids // t.page_rows == p
                 r = uids[sel] - int(p) * t.page_rows
                 out_v[sel] = vals[r]
@@ -370,6 +393,12 @@ class DiskStore:
     def stats(self) -> dict:
         with self._lock:
             return dict(self._stats)
+
+    def serve_stats(self) -> dict:
+        """Cumulative page-tier meters for serving reads only (see
+        ``gather(serve=True)``)."""
+        with self._lock:
+            return dict(self._serve_stats)
 
     # ------------------------------------------------------------ bg threads
     def _writer_loop(self):

@@ -55,6 +55,13 @@ k-step merge's cross-pod average N boundaries late (DCN latency hiding).
 (gather+bag pull, scatter+AdaGrad push, cache-tier indirection variants —
 see docs/kernels.md); bit-identical to the unfused path on every backend.
 
+``--serve`` co-locates a CTR serving tier with recsys training: a
+``CTRServer`` (``runtime.serve_ctr``) scores a second request stream
+through the engine's read-only lookup contract against the trainer's live
+tables, draining at each step's commit boundary — freshly trained rows are
+servable one step later and the training trajectory is bit-identical to a
+run without ``--serve`` (see docs/serving.md).
+
 On a real TPU cluster each process calls ``jax.distributed.initialize()``
 (args: --coordinator/--num-processes/--process-id, or TPU auto-detection)
 and the production mesh spans all pods; in this CPU container it runs the
@@ -118,6 +125,18 @@ def build_argparser() -> argparse.ArgumentParser:
     ap.add_argument("--merge-delay", type=int, default=0,
                     help="apply k-step merges N boundaries late "
                          "(DenseTrainer archs; 0 = synchronous merges)")
+    ap.add_argument("--serve", action="store_true",
+                    help="co-locate a CTR serving tier with training "
+                         "(recsys archs): a CTRServer scores a second "
+                         "request stream through the engine's read-only "
+                         "lookup, draining at each commit boundary — the "
+                         "rows trained at step t are servable at t+1 and "
+                         "the training trajectory is bit-identical to a "
+                         "run without --serve (docs/serving.md)")
+    ap.add_argument("--serve-batch", type=int, default=64,
+                    help="dynamic-batch size of the co-located server "
+                         "(one compiled predict executable; tail batches "
+                         "pad up to this)")
     ap.add_argument("--strict-transfers", action="store_true",
                     help="fail fast on IMPLICIT host<->device transfers in "
                          "the online hot path (jax.transfer_guard; recsys "
@@ -214,6 +233,37 @@ def main():
     if args.ckpt_dir and tr.resume():
         print(f"resumed at step {tr.step_num}")
     gen = S.recsys_batches(cfg, batch=args.batch, seed=1)
+
+    if args.serve:
+        # --- co-located train + serve: one process, one engine.  The
+        # server reads the LIVE tables the trainer writes, through the
+        # read-only lookup contract; its drain sits at the commit boundary
+        # (right after train_step lands), so rows trained at step t are
+        # servable for step t+1's traffic, and because lookup mutates
+        # nothing the loss trajectory is bit-identical to a run without
+        # --serve.
+        from repro.runtime.factory import build_ctr_server
+
+        srv = build_ctr_server(tr, max_batch=args.serve_batch)
+        serve_gen = S.recsys_batches(cfg, batch=args.serve_batch, seed=2)
+        loss = float("nan")
+        for _ in range(args.steps):
+            b = next(gen)
+            if args.prefetch:
+                tr.prefetch(b)
+            srv.submit_batch(next(serve_gen))   # traffic lands mid-step
+            loss = tr.train_step(b)
+            srv.drain()                         # commit boundary
+        s = srv.summary()
+        hit = (f"serve_hit_rate {s['serve_hit_rate']:.3f} "
+               if "serve_hit_rate" in s else "")
+        print(f"final loss {float(loss):.6f} "
+              f"served {int(s['served'])} qps {s['qps']:.1f} "
+              f"p50 {s['p50'] * 1e3:.2f}ms p99 {s['p99'] * 1e3:.2f}ms {hit}"
+              f"placement {args.placement} prefetch {args.prefetch} "
+              f"({args.steps / (time.perf_counter() - t0):.2f} steps/s)")
+        return
+
     hist, online_auc = fit_online(tr, gen, args.steps, window=20, log=print,
                                   strict_transfers=args.strict_transfers)
     loss = hist[-1]["loss"] if hist else float("nan")

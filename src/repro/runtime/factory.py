@@ -219,3 +219,19 @@ def build_trainer(
         )
 
     raise ValueError(f"build_trainer: unknown family {spec.family!r} for {arch!r}")
+
+
+def build_ctr_server(trainer, max_batch: int = 64):
+    """Co-located serving tier over a live ``HybridTrainer`` (the trainer
+    the server reads IS the trainer that keeps training — see
+    ``runtime.serve_ctr``).  Dense families have no sparse state to share
+    and use ``runtime.serve.BatchedServer`` instead."""
+    from repro.runtime.serve_ctr import CTRServer
+
+    if not isinstance(trainer, HybridTrainer):
+        raise TypeError(
+            "build_ctr_server: co-located CTR serving reads a "
+            f"HybridTrainer's live embedding state, got "
+            f"{type(trainer).__name__}"
+        )
+    return CTRServer(trainer, max_batch=max_batch)

@@ -8,9 +8,10 @@ slot occupancy (inactive slots decode padding and are ignored host-side).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +45,10 @@ class BatchedServer:
         )
         self.active: List[Optional[Request]] = [None] * slots
         self.remaining = np.zeros(slots, np.int64)
-        self.pending: List[Request] = []
+        # FIFO admission queue: deque, because slot refill pops from the
+        # head every decode step — list.pop(0) is O(queue depth) and the
+        # queue is exactly what grows under load.
+        self.pending: Deque[Request] = collections.deque()
         self.tokens = np.zeros(slots, np.int32)
         self.stats = {"decoded_tokens": 0, "steps": 0, "wall": 0.0}
 
@@ -55,7 +59,7 @@ class BatchedServer:
     def _fill_slots(self):
         for i in range(self.slots):
             if self.active[i] is None and self.pending:
-                req = self.pending.pop(0)
+                req = self.pending.popleft()
                 self.active[i] = req
                 # Feed prompt tokens one-by-one through decode (prefill-by-
                 # decode keeps one executable; long-prompt serving uses

@@ -453,11 +453,18 @@ class HybridTrainer:
         self._prefetcher = (
             PrefetchingEngine(engine, donate=donate) if cfg.prefetch else None
         )
-        # inference path: pull + embed + score compiled as one stage so the
-        # per-request loop dispatches a single executable (an eager pull
-        # ships scalar operands host->device on every call).  Nothing is
-        # donated — predict must not consume the committed training state.
+        # inference path: READ-ONLY lookup + embed + score compiled as one
+        # stage so the per-request loop dispatches a single executable (an
+        # eager pull ships scalar operands host->device on every call).
+        # Nothing is donated — predict must not consume the committed
+        # training state (the engine's lookup contract guarantees it also
+        # mutates none of it).
         self._predict_jit = jax.jit(self._predict_traced, donate_argnums=())
+        # serving-side meters, accumulated host-side per predict — kept
+        # fully separate from the training-interval cache stats so
+        # interleaved serving never moves sparse_metrics (see
+        # ``serve_metrics``)
+        self._serve_counters: Dict[str, float] = {}
         self.history: list = []
 
     def _make_train(self, merge: bool):
@@ -625,64 +632,91 @@ class HybridTrainer:
         return int(jax.device_get(self._overflow))
 
     def predict(self, batch) -> np.ndarray:
-        """Inference with pod-0's dense replica (online predict-then-train).
+        """Inference with pod-0's dense replica (online predict-then-train,
+        and the executable the co-located CTR server drives).
 
-        Reads through the sparse path without committing its side effects:
-        cache admissions/spills from the inference pull are discarded, so
-        predict never perturbs training state (misses are still served —
-        the pull fetches from the authoritative host rows).  Valid while a
-        prefetched pull is in flight: the pass-through trees it reads are
-        logically identical to the committed state."""
+        Runs on the engine's READ-ONLY lookup contract: the sparse rows are
+        served exactly as a pull would serve them (cache-fresh values
+        included — a row trained at step t is servable immediately) but
+        NOTHING mutates — no cache admission/eviction, no counter writes,
+        no disk absorb — so any interleaving of predicts leaves the
+        training trajectory and the training-interval stats bit-identical.
+        Valid while a prefetched pull is in flight: the pass-through trees
+        it reads are logically identical to the committed state."""
         if self.engine.store.kind == "disk":
             return self._predict_disk(batch)
         batch = self._stage(batch)
-        scores = self._predict_jit(
+        scores, aux = self._predict_jit(
             self.dense, self.tables, self.sparse_state.accum,
             self.backend_state, batch,
         )
-        # scores are consumed host-side (streaming AUC): explicit d2h
-        return np.asarray(jax.device_get(scores))
+        return self._finish_predict(scores, aux)
 
     def _predict_disk(self, batch) -> np.ndarray:
-        """Disk-store inference: stage THIS batch's rows from the store.
+        """Disk-store inference: stage THIS batch's rows, read-only.
 
         The training staging buffers hold another batch's rows, so predict
-        builds its own: host-dedup the batch's ids, ``store.gather`` the
-        rows/accum, and run the same ``_predict_jit`` over them (the staged
-        shapes match the training buffers, so no recompile).  Exactness:
-        under prefetch the dispatch already absorbed every push output into
-        the store; under sync pull there may be un-absorbed push outputs,
-        absorbed here first.  The absorb is SKIPPED while a prefetched pull
-        is pending — for the gather backend the pending pass-through tables
-        are the PRE-train staged rows, and absorbing them would clear the
-        pending metadata so the real push outputs were never committed."""
-        if self._prefetcher is None or self._prefetcher.pending is None:
-            self.engine.absorb_staged(
-                self.tables, self.sparse_state.accum, self.backend_state
-            )
+        builds its own through ``engine.stage_lookup``: host-dedup the
+        batch's ids, serve-metered ``store.gather``, then OVERLAY any
+        pending staged training outputs onto the gathered rows host-side —
+        the freshest values are served without absorbing (writing) anything
+        into the store, and the same ``_predict_jit`` runs over them (the
+        staged shapes match the training buffers, so no recompile).  The
+        overlay replaces the old absorb-before-predict: it is exact in
+        every pipeline state (un-absorbed push outputs are patched to their
+        post-absorb values; a pending prefetched pull's pass-through rows
+        patch idempotently; in-flight cache spills patch to the values the
+        next absorb will commit)."""
         batch = self._stage(batch)
         ids_np = {
             n: np.asarray(jax.device_get(ids))
             for n, ids in self.engine.ids_from_batch(batch).items()
         }
-        staged_t, staged_a = {}, {}
-        for n, ids in ids_np.items():
-            uids, _valid = self.engine.host_dedup(ids)
-            rows, acc = self.engine.store.gather(n, uids)
-            staged_t[n] = jax.device_put(rows)
-            staged_a[n] = jax.device_put(acc)
-        scores = self._predict_jit(
+        staged_t, staged_a = self.engine.stage_lookup(
+            self.tables, self.sparse_state.accum, self.backend_state, ids_np
+        )
+        scores, aux = self._predict_jit(
             self.dense, staged_t, staged_a, self.backend_state, batch,
         )
-        return np.asarray(jax.device_get(scores))
+        return self._finish_predict(scores, aux)
+
+    def _finish_predict(self, scores, aux) -> np.ndarray:
+        # scores are consumed host-side (streaming AUC / response writing):
+        # ONE explicit d2h materializes them together with the lookup's
+        # serve meters, which accumulate into the serve-side counters
+        got = jax.device_get({"scores": scores, "aux": aux})
+        c = self._serve_counters
+        c["serve_requests"] = c.get("serve_requests", 0.0) + float(
+            np.asarray(got["scores"]).shape[0])
+        for k, v in got["aux"].items():
+            c[k] = c.get(k, 0.0) + float(v)
+        return np.asarray(got["scores"])
 
     def _predict_traced(self, dense, tables, accum, bstate, batch):
         dense0 = pod_slice(dense, 0)
-        wss, _, _, _ = self.engine.pull_batch(tables, accum, bstate, batch)
+        wss, aux = self.engine.lookup_batch(tables, accum, bstate, batch)
         workings = {n: ws.rows for n, ws in wss.items()}
         invs = {n: ws.inverse for n, ws in wss.items()}
         emb = self._embed(workings, invs, batch)
-        return self._loss(dense0, emb, batch, predict=True)
+        return self._loss(dense0, emb, batch, predict=True), aux
+
+    def serve_metrics(self) -> Dict[str, float]:
+        """Cumulative SERVING-side counters — the monitoring surface of the
+        co-located inference tier, fully separate from ``sparse_metrics``
+        (whose training-interval stats never count inference traffic):
+        ``serve_requests`` (instances scored), ``serve_lookups`` (id slots
+        served), and under the cache tier ``serve_misses`` +
+        ``serve_hit_rate`` (same ``1 - misses/lookups`` convention as
+        training).  DiskStore page meters for serving reads ride along
+        under ``serve_page_*``/``serve_disk_*`` keys."""
+        m = dict(self._serve_counters)
+        if "serve_misses" in m:
+            lk = m.get("serve_lookups", 0.0)
+            m["serve_hit_rate"] = (
+                0.0 if lk <= 0.0 else 1.0 - m["serve_misses"] / lk)
+        for k, v in self.engine.store.serve_stats().items():
+            m[f"serve_{k}"] = float(v)
+        return m
 
     def sparse_metrics(self, advance: bool = False) -> Dict[str, float]:
         """Sparse-path health for trainer history/monitoring, PER INTERVAL

@@ -9,6 +9,7 @@ import pytest
 from repro.analysis.trace_audit import (
     audit_recsys,
     audit_serve_decode,
+    audit_serve_lookup,
     callback_primitives,
     donation_marked,
     f64_leaks,
@@ -111,6 +112,18 @@ def test_audit_serve_decode_clean():
     results = audit_serve_decode()
     failed = [(r.check, r.detail) for r in results if not r.ok]
     assert failed == []
+
+
+def test_audit_serve_lookup_clean():
+    """The co-located CTR serving tier passes its audit: clean jaxpr, NO
+    donation of the live training buffers it shares with the trainer, one
+    compiled executable across drains, and a transfer-guard-clean
+    interleaved train+serve loop."""
+    results = audit_serve_lookup()
+    failed = [(r.check, r.detail) for r in results if not r.ok]
+    assert failed == []
+    assert {r.check for r in results} == {
+        "callback", "f64", "no-donation", "retrace", "transfer-sync"}
 
 
 # --------------------------------------------------- fit_online strict gate

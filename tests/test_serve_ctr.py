@@ -1,0 +1,254 @@
+"""Co-located CTR serving tier (``runtime/serve_ctr.py``) + the read-only
+lookup contract under it.
+
+Acceptance properties (ISSUE: split pull into training vs serving lookups):
+  - ``lookup`` NEVER mutates: device state (tables, accum, backend state)
+    and host store stats are bit-identical across any number of predicts,
+    for every placement and store,
+  - the training loss trajectory is BIT-identical with and without a
+    co-located server draining between steps, across placement x prefetch
+    x store,
+  - training-interval stats (``sparse_metrics``) never move on serving
+    traffic; the serve-side meters (``serve_metrics``) do,
+  - the server's dynamic batching (FIFO order, tail padding to the static
+    batch) returns exactly ``trainer.predict``'s scores per instance,
+  - rows trained at step t are servable immediately after the commit
+    boundary (freshness), and the disk-store lookup overlay serves values
+    bit-identical to the host store even while a prefetched pull is
+    pending.
+"""
+
+import collections
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.kstep import KStepConfig
+from repro.core.sparse_optim import SparseAdagradConfig
+from repro.data import synthetic as S
+from repro.runtime.factory import build_ctr_server, build_trainer
+from repro.runtime.serve_ctr import CTRServer, requests_from_batch
+from repro.runtime.trainer import TrainerConfig
+
+SMOKE = configs.get("baidu-ctr").smoke_cfg
+
+
+def _tcfg(placement, prefetch=False, store="host", spill_dir=None):
+    return TrainerConfig(
+        n_pod=1, kstep=KStepConfig(lr=1e-3, k=3, b1=0.0),
+        sparse=SparseAdagradConfig(lr=0.5, initial_accumulator=0.01),
+        placement=placement, prefetch=prefetch, log_every=1000,
+        store=store, spill_dir=spill_dir,
+        page_rows=64 if store == "disk" else None,
+    )
+
+
+def _batches(n, seed=3, batch=32):
+    gen = S.recsys_batches(SMOKE, batch=batch, seed=seed)
+    return [next(gen) for _ in range(n)]
+
+
+def _snapshot(tr):
+    leaves = jax.tree.leaves(
+        (tr.tables, tr.sparse_state.accum, tr.backend_state))
+    return ([np.asarray(jax.device_get(x)).copy() for x in leaves],
+            dict(tr.engine.store.stats()))
+
+
+# --------------------------------------------------------- never mutates
+@pytest.mark.parametrize("placement", ["gather", "routed", "cached"])
+def test_lookup_never_mutates(placement):
+    """Serving reads leave every byte of sparse training state — and the
+    store's training-side meters — untouched."""
+    tr = build_trainer("baidu-ctr", _tcfg(placement), smoke=True)
+    batches = _batches(6)
+    for b in batches[:2]:
+        tr.train_step(b)
+    before, stats_before = _snapshot(tr)
+    for b in batches[2:]:
+        tr.predict(b)
+    after, stats_after = _snapshot(tr)
+    for a, b_ in zip(before, after):
+        np.testing.assert_array_equal(a, b_)
+    assert stats_before == stats_after
+
+
+def test_lookup_never_mutates_disk(tmp_path):
+    """Disk store: predict's page reads are serve-metered; the training
+    stats bucket and the pending staged state stay untouched."""
+    tr = build_trainer(
+        "baidu-ctr", _tcfg("cached", store="disk", spill_dir=str(tmp_path)),
+        smoke=True)
+    batches = _batches(6)
+    for b in batches[:2]:
+        tr.train_step(b)
+    before, stats_before = _snapshot(tr)
+    for b in batches[2:]:
+        tr.predict(b)
+    after, stats_after = _snapshot(tr)
+    for a, b_ in zip(before, after):
+        np.testing.assert_array_equal(a, b_)
+    assert stats_before == stats_after
+    assert tr.engine.store.serve_stats()["page_hits"] + \
+        tr.engine.store.serve_stats()["page_misses"] > 0
+
+
+# ------------------------------------------------- trajectory invariance
+def _run(serve, placement, prefetch, store, spill_dir, n=6):
+    tr = build_trainer(
+        "baidu-ctr",
+        _tcfg(placement, prefetch=prefetch, store=store,
+              spill_dir=spill_dir),
+        smoke=True)
+    batches = _batches(n)
+    serve_batches = _batches(n, seed=77)
+    srv = build_ctr_server(tr, max_batch=16) if serve else None
+    losses = []
+    for b, sb in zip(batches, serve_batches):
+        if prefetch:
+            tr.prefetch(b)
+        if serve:
+            srv.submit_batch(sb)   # drains MID-FLIGHT under prefetch
+            srv.drain()
+        losses.append(float(tr.train_step(b)))
+    if serve:
+        assert srv.stats["served"] == sum(
+            len(next(iter(sb.values()))) for sb in serve_batches)
+    return losses, tr
+
+
+@pytest.mark.parametrize("placement", ["gather", "cached"])
+@pytest.mark.parametrize("prefetch", [False, True])
+@pytest.mark.parametrize("store", ["host", "disk"])
+def test_fit_trajectory_invariant_under_serving(
+        placement, prefetch, store, tmp_path):
+    """The tentpole acceptance: interleaving a co-located server changes
+    NOTHING about training — loss trajectory and final sparse state are
+    bit-identical, in every placement x prefetch x store cell."""
+    d_a = str(tmp_path / "a") if store == "disk" else None
+    d_b = str(tmp_path / "b") if store == "disk" else None
+    if store == "disk":
+        (tmp_path / "a").mkdir()
+        (tmp_path / "b").mkdir()
+    base, tr_a = _run(False, placement, prefetch, store, d_a)
+    served, tr_b = _run(True, placement, prefetch, store, d_b)
+    assert base == served
+    a_leaves, _ = _snapshot(tr_a)
+    b_leaves, _ = _snapshot(tr_b)
+    for a, b_ in zip(a_leaves, b_leaves):
+        np.testing.assert_array_equal(a, b_)
+
+
+def test_training_stats_invariant_serve_meters_advance():
+    """Satellite regression: serving traffic must not move the
+    training-interval cache stats; it lands in ``serve_metrics``."""
+    tr = build_trainer("baidu-ctr", _tcfg("cached"), smoke=True)
+    batches = _batches(8)
+    for b in batches[:4]:
+        tr.train_step(b)
+    ref = tr.sparse_metrics()          # non-advancing window read
+    assert tr.serve_metrics() == {}    # no serving traffic yet
+    for b in batches[4:]:
+        tr.predict(b)
+    assert tr.sparse_metrics() == ref  # invariant under serving
+    m = tr.serve_metrics()
+    assert m["serve_requests"] == 4 * len(batches[0]["label"])
+    assert m["serve_lookups"] > 0 and 0.0 <= m["serve_hit_rate"] <= 1.0
+
+
+# ------------------------------------------------------- server mechanics
+def test_server_fifo_batching_and_padding():
+    """Dynamic batches preserve FIFO order; a short tail batch pads up to
+    ``max_batch`` and still returns each request its own
+    ``trainer.predict`` score."""
+    tr = build_trainer("baidu-ctr", _tcfg("gather"), smoke=True)
+    tr.train_step(_batches(1)[0])
+    b = _batches(1, seed=21, batch=24)[0]    # 24 = 16 + tail of 8
+    srv = build_ctr_server(tr, max_batch=16)
+    reqs = requests_from_batch(b)
+    for r in reqs:
+        srv.submit(r)
+    assert isinstance(srv.pending, collections.deque)
+    srv.drain()
+    assert srv.stats["served"] == 24 and srv.stats["steps"] == 2
+    ref = tr.predict({k: v for k, v in b.items() if k != "label"})
+    got = np.asarray([r.score for r in reqs])
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+    assert len(srv.latencies) == 24
+    p = srv.latency_percentiles()
+    assert p["p99"] >= p["p50"] > 0.0
+
+
+def test_batched_server_queue_is_deque():
+    """Satellite: the LM server's admission queue shares the deque shape
+    (list.pop(0) was O(depth) per refilled slot)."""
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    from repro.runtime.serve import BatchedServer
+
+    cfg = tfm.TransformerConfig(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=1, d_ff=32,
+        vocab=32, dtype=jnp.float32, moe_group_size=16)
+    srv = BatchedServer(tfm.init_params(jax.random.key(0), cfg),
+                        cfg, slots=2, max_len=8)
+    assert isinstance(srv.pending, collections.deque)
+
+
+def test_build_ctr_server_rejects_dense():
+    with pytest.raises(TypeError, match="HybridTrainer"):
+        build_ctr_server(object())
+
+
+# ------------------------------------------------------------- freshness
+def test_freshly_trained_rows_servable():
+    """A row updated by the step-t push is served at the next boundary:
+    scoring the SAME instances straddling a train step on their ids must
+    change (the server reads live tables, not a stale snapshot)."""
+    tr = build_trainer("baidu-ctr", _tcfg("cached"), smoke=True)
+    b = _batches(1)[0]
+    feats = {k: v for k, v in b.items() if k != "label"}
+    srv = build_ctr_server(tr, max_batch=32)
+
+    reqs = requests_from_batch(b)
+    for r in reqs:
+        srv.submit(r)
+    srv.drain()
+    before = np.asarray([r.score for r in reqs])
+
+    tr.train_step(b)                         # trains exactly these ids
+
+    reqs2 = requests_from_batch(b)
+    for r in reqs2:
+        srv.submit(r)
+    srv.drain()
+    after = np.asarray([r.score for r in reqs2])
+    assert not np.array_equal(before, after)
+    # and the served scores agree with the live predict
+    np.testing.assert_allclose(after, tr.predict(feats), rtol=1e-6)
+
+
+def test_disk_lookup_matches_host_mid_flight(tmp_path):
+    """The disk lookup's pending-output overlay is exact: predictions under
+    ``store=disk`` equal the host-store reference bit-for-bit even while a
+    prefetched pull (with un-absorbed staged outputs) is in flight."""
+    host = build_trainer("baidu-ctr", _tcfg("cached", prefetch=True),
+                         smoke=True)
+    disk = build_trainer(
+        "baidu-ctr",
+        _tcfg("cached", prefetch=True, store="disk",
+              spill_dir=str(tmp_path)),
+        smoke=True)
+    batches = _batches(5)
+    probe = {k: v for k, v in _batches(1, seed=55)[0].items()
+             if k != "label"}
+    for i, b in enumerate(batches):
+        host.prefetch(b)
+        disk.prefetch(b)
+        # mid-flight: the speculative pull for b is pending in both
+        np.testing.assert_array_equal(host.predict(probe),
+                                      disk.predict(probe))
+        host.train_step(b)
+        disk.train_step(b)
+    np.testing.assert_array_equal(host.predict(probe), disk.predict(probe))
