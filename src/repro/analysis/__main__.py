@@ -1,16 +1,20 @@
 """CLI: ``python -m repro.analysis`` — the hot-path correctness gate.
 
-    python -m repro.analysis --lint                # layer 1 only (fast)
+    python -m repro.analysis --lint                # layer 1 + 3 lint (fast)
     python -m repro.analysis --trace-audit         # layer 2 only
-    python -m repro.analysis --all                 # both (the CI gate)
+    python -m repro.analysis --sched-audit         # layer 3 dynamic only
+    python -m repro.analysis --all                 # everything (the CI gate)
     python -m repro.analysis --all --report analysis-report.json
     python -m repro.analysis --lint --update-baseline
+    python -m repro.analysis --all --format github --strict-baseline
 
 Exit code 0 iff every finding is covered by the checked-in baseline
 (``analysis-baseline.json`` at the repo root).  New findings print with
 file:line and fail the gate; stale baseline entries are reported but don't
-fail (run ``--update-baseline`` to drop them — it preserves the
-justifications of surviving entries and marks new ones to fill in).
+fail unless ``--strict-baseline`` (run ``--update-baseline`` to drop them —
+it preserves the justifications of surviving entries and marks new ones to
+fill in).  ``--format github`` emits workflow commands so CI annotates the
+offending lines in the diff view.
 """
 
 from __future__ import annotations
@@ -29,16 +33,29 @@ def _default_paths():
     return pkg, repo
 
 
+def _gh_annotation(f) -> str:
+    """One GitHub Actions workflow command per finding: annotates
+    ``path:line`` in the PR diff view."""
+    msg = f.message.replace("%", "%25").replace("\r", "%0D").replace(
+        "\n", "%0A")
+    return (f"::error file={f.path},line={max(f.line, 1)},"
+            f"title={f.rule}::{msg}")
+
+
 def main(argv=None) -> int:
     pkg_root, repo_root = _default_paths()
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="hot-path static analysis + trace audit gate",
+        description="hot-path static analysis + trace/schedule audit gate",
     )
     ap.add_argument("--lint", action="store_true", help="run the AST lint")
     ap.add_argument("--trace-audit", action="store_true",
                     help="run the trace audit (builds smoke trainers)")
-    ap.add_argument("--all", action="store_true", help="lint + trace audit")
+    ap.add_argument("--sched-audit", action="store_true",
+                    help="run the deterministic schedule audit over the "
+                         "storage/serving threads")
+    ap.add_argument("--all", action="store_true",
+                    help="lint + trace audit + schedule audit")
     ap.add_argument("--src", type=Path, default=pkg_root,
                     help="source root to lint (default: the repro package)")
     ap.add_argument("--baseline", type=Path,
@@ -46,6 +63,13 @@ def main(argv=None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline to the current findings "
                          "(keeps existing justifications)")
+    ap.add_argument("--strict-baseline", action="store_true",
+                    help="fail (exit 1) on stale baseline entries too — "
+                         "the baseline must match reality exactly")
+    ap.add_argument("--format", choices=["text", "github"], default="text",
+                    help="new-finding output format: plain text, or GitHub "
+                         "workflow commands (::error file=...) for CI "
+                         "annotations")
     ap.add_argument("--report", type=Path, default=None,
                     help="write a JSON findings/check report here")
     ap.add_argument("--archs", nargs="*", default=None,
@@ -54,17 +78,20 @@ def main(argv=None) -> int:
                     default=["gather", "routed", "cached"])
     ap.add_argument("--no-transfer-check", action="store_true",
                     help="skip the runtime transfer_guard step check")
+    ap.add_argument("--sched-cells", nargs="*", default=None,
+                    help="schedule-audit cell filter (default: all cells)")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    if args.all or not (args.lint or args.trace_audit):
-        args.lint = args.trace_audit = True
+    if args.all or not (args.lint or args.trace_audit or args.sched_audit):
+        args.lint = args.trace_audit = args.sched_audit = True
 
     log = (lambda *a: None) if args.quiet else (
         lambda *a: print(*a, file=sys.stderr))
 
     findings = []
     trace_report = []
+    sched_report = []
     if args.lint:
         from repro.analysis.lint import Project, run_lint, summarize
 
@@ -83,6 +110,15 @@ def main(argv=None) -> int:
         log(f"trace-audit: {n_checks} check(s), "
             f"{len(audit_findings)} failure(s)")
         findings.extend(audit_findings)
+    if args.sched_audit:
+        from repro.analysis.sched_audit import run_sched_audit
+
+        sched_findings, sched_report = run_sched_audit(
+            cells=args.sched_cells, log=log,
+        )
+        log(f"sched-audit: {len(sched_report)} check(s), "
+            f"{len(sched_findings)} failure(s)")
+        findings.extend(sched_findings)
 
     from repro.analysis.baseline import Baseline
 
@@ -102,6 +138,7 @@ def main(argv=None) -> int:
             "baselined": [f.__dict__ for f in old],
             "stale_baseline": [list(k) for k in stale],
             "trace_checks": trace_report,
+            "sched_checks": sched_report,
         }, indent=2) + "\n")
         log(f"report: {args.report}")
 
@@ -111,12 +148,20 @@ def main(argv=None) -> int:
         print(f"stale baseline entry (matched nothing): {k}",
               file=sys.stderr)
     for f in new:
-        print(f"FAIL {f}")
+        if args.format == "github":
+            print(_gh_annotation(f))
+        else:
+            print(f"FAIL {f}")
+    fail = bool(new) or (args.strict_baseline and bool(stale))
     if new:
         print(f"\n{len(new)} new finding(s) not covered by "
               f"{args.baseline.name} — fix them, or baseline WITH a "
               "justification (--update-baseline, then edit the "
               "justification fields).")
+    if args.strict_baseline and stale:
+        print(f"{len(stale)} stale baseline entr(ies) under "
+              "--strict-baseline — run --update-baseline to drop them.")
+    if fail:
         return 1
     print(f"analysis clean: {len(findings)} finding(s), all baselined"
           if findings else "analysis clean: no findings")

@@ -4,18 +4,34 @@ Each rule exposes ``name``, ``description``, and ``run(project) ->
 Iterable[Finding]``.  Rules only *report* — gating against the checked-in
 baseline happens in the CLI, so a rule never needs to know which findings
 are accepted.
+
+Rules R1–R4 police the jitted single-thread hot path (layer 1, PR 5);
+R5–R9 are the concurrency layer over the threaded storage/serving
+subsystems (layer 3 — see docs/analysis.md).
 """
 
 from repro.analysis.rules.host_sync import HostSyncInJitRule
 from repro.analysis.rules.dead_knob import DeadConfigKnobRule
 from repro.analysis.rules.nondeterminism import NondeterminismInTraceRule
 from repro.analysis.rules.donation import UndonatedHotJitRule
+from repro.analysis.rules.shared_state import UnguardedSharedStateRule
+from repro.analysis.rules.blocking_io import BlockingIOUnderLockRule
+from repro.analysis.rules.lock_order import LockOrderInversionRule
+from repro.analysis.rules.worker_lifecycle import (
+    SilentDaemonDeathRule,
+    UnjoinedWorkerRule,
+)
 
 ALL_RULES = [
     HostSyncInJitRule(),
     DeadConfigKnobRule(),
     NondeterminismInTraceRule(),
     UndonatedHotJitRule(),
+    UnguardedSharedStateRule(),
+    BlockingIOUnderLockRule(),
+    LockOrderInversionRule(),
+    UnjoinedWorkerRule(),
+    SilentDaemonDeathRule(),
 ]
 
 __all__ = [
@@ -24,4 +40,9 @@ __all__ = [
     "DeadConfigKnobRule",
     "NondeterminismInTraceRule",
     "UndonatedHotJitRule",
+    "UnguardedSharedStateRule",
+    "BlockingIOUnderLockRule",
+    "LockOrderInversionRule",
+    "UnjoinedWorkerRule",
+    "SilentDaemonDeathRule",
 ]

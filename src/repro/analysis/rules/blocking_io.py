@@ -1,0 +1,78 @@
+"""R6 ``blocking-io-under-lock`` — filesystem IO inside a lock's critical
+section.
+
+The DiskStore lock serializes the training thread against the read-ahead /
+write-behind workers.  A ``np.load`` / ``open`` / ``os.replace`` executed
+while that lock is held turns every cache hit on the other threads into an
+SSD-latency stall — the exact overlap the paper's design exists to avoid.
+The rule flags every call that (directly, or through a module-local helper)
+blocks on the filesystem while any lock is provably held, using the same
+call-site lock fixpoint as the shared-state rule: a helper only ever called
+under ``with self._lock:`` is itself "under lock".
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis import lint
+from repro.analysis.astutil import dotted_name
+from repro.analysis.threadutil import (
+    _is_blocking_call,
+    blocking_functions,
+    lock_held_map,
+    locks_at,
+    resolve_calls,
+)
+
+
+class BlockingIOUnderLockRule:
+    name = "blocking-io-under-lock"
+    description = (
+        "blocking filesystem call while a lock is held — stalls every "
+        "thread contending for the lock behind SSD latency"
+    )
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            if not any(
+                isinstance(n, ast.With) for n in ast.walk(mod.tree)
+            ):
+                continue
+            held = lock_held_map(mod)
+            blocking = blocking_functions(mod)
+            resolved = resolve_calls(mod)
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if _is_blocking_call(mod, node):
+                    detail = (
+                        mod.canonical_call(node)
+                        or f"{dotted_name(node.func)}"
+                    )
+                else:
+                    targets = [
+                        t for t in resolved.get(id(node), [])
+                        if id(t.node) in blocking
+                    ]
+                    if not targets:
+                        continue
+                    detail = f"{targets[0].name}()"
+                locks = locks_at(mod, held, node)
+                if not locks:
+                    continue
+                encl = mod.enclosing_function(node)
+                findings.append(lint.Finding(
+                    rule=self.name, path=mod.rel, line=node.lineno,
+                    symbol=encl.qualname if encl else "",
+                    detail=detail,
+                    message=(
+                        f"{detail} blocks on the filesystem while holding "
+                        f"{{{', '.join(sorted(locks))}}} — move the IO "
+                        f"outside the critical section (copy under the "
+                        f"lock, write unlocked, reacquire to publish)"
+                    ),
+                ))
+        return findings

@@ -1,0 +1,141 @@
+"""R7 ``lock-order-inversion`` — two locks acquired in both orders.
+
+Classic deadlock precondition: thread 1 holds A and wants B while thread 2
+holds B and wants A.  The rule collects every nested acquisition ordering
+in the project — lexically nested ``with`` blocks, plus one level of
+call-graph transitivity (``with A: helper()`` where ``helper`` acquires B)
+— and reports every site that participates in an inverted pair.
+
+Lock identity is ``Class.attr`` for ``self.<attr>`` locks and
+``<module-stem>.<name>`` for module-level locks, so two classes' private
+``_lock`` attributes are distinct.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis import lint
+from repro.analysis.astutil import (
+    FUNC_TYPES,
+    ModuleInfo,
+    dotted_name,
+    enclosing,
+)
+from repro.analysis.threadutil import (
+    LOCK_NAME_RE,
+    resolve_calls,
+    walk_scope,
+)
+
+Witness = Tuple[str, int, str]   # (path, line, symbol)
+
+
+def _lock_ids(mod: ModuleInfo, node: ast.With) -> List[str]:
+    """Qualified ids of lock-ish context managers acquired by ``node``, in
+    acquisition order."""
+    out: List[str] = []
+    for item in node.items:
+        name = dotted_name(item.context_expr)
+        if name is None:
+            continue
+        leaf = name.split(".")[-1]
+        if not LOCK_NAME_RE.search(leaf):
+            continue
+        if name.startswith("self."):
+            cls = enclosing(node, ast.ClassDef)
+            owner = cls.name if cls is not None else Path(mod.rel).stem
+        else:
+            owner = Path(mod.rel).stem
+        out.append(f"{owner}.{leaf}")
+    return out
+
+
+class LockOrderInversionRule:
+    name = "lock-order-inversion"
+    description = "two locks are acquired in both orders across the project"
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        # ordered pair (outer, inner) -> witness sites
+        pairs: Dict[Tuple[str, str], List[Witness]] = {}
+
+        def witness(outer: str, inner: str, mod: ModuleInfo,
+                    node: ast.AST) -> None:
+            if outer == inner:
+                return
+            encl = mod.enclosing_function(node)
+            sym = encl.qualname if encl is not None else ""
+            pairs.setdefault((outer, inner), []).append(
+                (mod.rel, node.lineno, sym)
+            )
+
+        for mod in project:
+            withs = [
+                n for n in ast.walk(mod.tree) if isinstance(n, ast.With)
+            ]
+            if not withs:
+                continue
+            resolved = resolve_calls(mod)
+            # per-function transitive acquire sets (direct + callees)
+            acquires: Dict[int, Set[str]] = {}
+            for f in mod.functions:
+                direct: Set[str] = set()
+                for n in walk_scope(f.node):
+                    if isinstance(n, ast.With):
+                        direct |= set(_lock_ids(mod, n))
+                acquires[id(f.node)] = direct
+            changed = True
+            while changed:
+                changed = False
+                for f in mod.functions:
+                    acc = acquires[id(f.node)]
+                    for n in walk_scope(f.node):
+                        if not isinstance(n, ast.Call):
+                            continue
+                        for t in resolved.get(id(n), []):
+                            extra = acquires.get(id(t.node), set()) - acc
+                            if extra:
+                                acc |= extra
+                                changed = True
+
+            for w in withs:
+                ids = _lock_ids(mod, w)
+                if not ids:
+                    continue
+                # multi-item `with a, b:` orders a before b
+                for i, outer in enumerate(ids):
+                    for inner in ids[i + 1:]:
+                        witness(outer, inner, mod, w)
+                outer = ids[-1]
+                for n in walk_scope(w):
+                    if n is w:
+                        continue
+                    if isinstance(n, ast.With):
+                        for inner in _lock_ids(mod, n):
+                            witness(outer, inner, mod, n)
+                    elif isinstance(n, ast.Call):
+                        for t in resolved.get(id(n), []):
+                            for inner in acquires.get(id(t.node), ()):
+                                witness(outer, inner, mod, n)
+
+        findings: List[lint.Finding] = []
+        for (a, b), sites in sorted(pairs.items()):
+            if (b, a) not in pairs or a > b:
+                continue   # report each inverted {A, B} set once per order…
+            for order, osites in (((a, b), pairs[(b, a)]),
+                                  ((b, a), pairs[(a, b)])):
+                for path, line, sym in pairs[order]:
+                    opath, oline, _ = osites[0]
+                    findings.append(lint.Finding(
+                        rule=self.name, path=path, line=line, symbol=sym,
+                        detail=f"{order[0]} -> {order[1]}",
+                        message=(
+                            f"acquires {order[1]} while holding "
+                            f"{order[0]}, but the opposite order is taken "
+                            f"at {opath}:{oline} — pick one global order "
+                            f"(or collapse to a single lock)"
+                        ),
+                    ))
+        return findings

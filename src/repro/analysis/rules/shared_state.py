@@ -1,0 +1,85 @@
+"""R5 ``unguarded-shared-state`` — instance state shared across the
+worker/main thread boundary with no common lock.
+
+Scope: classes that start a ``threading.Thread`` (the DiskStore
+reader/writer pair, the checkpoint async writer, the pipeline producer).
+For every instance attribute touched by both the worker domain (methods
+reachable from a thread target) and the main domain, the rule demands that
+every (worker access, main access) pair with at least one write share a
+lock.  Exemptions: ``__init__`` (runs before ``start()``, so it
+happens-before the worker) and attributes bound to internally-synchronized
+constructors (queues, events, locks themselves).
+
+One finding per (class, attribute), anchored at the earliest unguarded
+write when there is one.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+from repro.analysis import lint
+from repro.analysis.threadutil import (
+    AttrAccess,
+    lock_held_map,
+    thread_classes,
+)
+
+
+class UnguardedSharedStateRule:
+    name = "unguarded-shared-state"
+    description = (
+        "instance attribute crosses the worker/main thread boundary with "
+        "a write and no common lock"
+    )
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            classes = thread_classes(mod)
+            if not classes:
+                continue
+            held = lock_held_map(mod)
+            for tc in classes:
+                by_attr: Dict[str, List[AttrAccess]] = {}
+                for a in tc.attr_accesses(held):
+                    by_attr.setdefault(a.attr, []).append(a)
+                for attr, accs in sorted(by_attr.items()):
+                    if attr in tc.safe_attrs:
+                        continue
+                    workers = [a for a in accs if a.worker and not a.init]
+                    mains = [
+                        a for a in accs if not a.worker and not a.init
+                    ]
+                    hazards = [
+                        (w, m) for w in workers for m in mains
+                        if (w.write or m.write) and not (w.locks & m.locks)
+                    ]
+                    if not hazards:
+                        continue
+                    participants = {
+                        id(a.node): a for wm in hazards for a in wm
+                    }
+                    anchor = min(
+                        participants.values(),
+                        key=lambda a: (not a.write, a.node.lineno),
+                    )
+                    other = next(
+                        a for w, m in hazards for a in (w, m)
+                        if (w is anchor or m is anchor) and a is not anchor
+                    )
+                    findings.append(lint.Finding(
+                        rule=self.name, path=mod.rel,
+                        line=anchor.node.lineno,
+                        symbol=anchor.func.qualname,
+                        detail=f"{tc.name}.{attr}",
+                        message=(
+                            f"self.{attr} is shared between the worker and "
+                            f"main thread domains with a write and no "
+                            f"common lock (other side: "
+                            f"{other.func.qualname}:{other.node.lineno}) — "
+                            f"guard both sides with the same lock, or make "
+                            f"the hand-off go through a queue/Event"
+                        ),
+                    ))
+        return findings

@@ -1,0 +1,174 @@
+"""R8 ``unjoined-worker`` + R9 ``silent-daemon-death`` — worker thread
+lifecycle hygiene.
+
+``unjoined-worker``: a started thread that no code ever joins.  Daemon
+workers that outlive ``close()``/commit boundaries keep file handles and
+queues alive past checkpoint publication — the DiskStore contract is that
+``close()``/``flush()`` drain and join before ``snapshot_to`` publishes
+pages.
+
+``silent-daemon-death``: a worker target whose closure never captures an
+exception into instance state (or ships it through a queue/callback).  A
+daemon thread that dies silently turns "write-behind stopped" into data
+loss discovered at restore time; the repo-wide idiom is
+``except BaseException as e: self._err = e`` re-raised on the main thread
+at the next checkpoint boundary (``CheckpointManager.wait``,
+``DiskStore._check_bg``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis import lint
+from repro.analysis.astutil import dotted_name, parent
+from repro.analysis.threadutil import ThreadClass, thread_classes
+
+
+def _method_calls_on(tc: ThreadClass, method: str) -> Set[str]:
+    """Attributes X such that ``self.X.<method>(...)`` appears anywhere in
+    the class body."""
+    out: Set[str] = set()
+    for node in ast.walk(tc.node):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == method):
+            continue
+        recv = dotted_name(node.func.value)
+        if recv is not None and recv.startswith("self."):
+            out.add(recv.split(".", 1)[1])
+    return out
+
+
+class UnjoinedWorkerRule:
+    name = "unjoined-worker"
+    description = "thread is started but never joined at any boundary"
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            for tc in thread_classes(mod):
+                started = _method_calls_on(tc, "start")
+                joined = _method_calls_on(tc, "join")
+                for s in tc.starts:
+                    label = s.target_method or "<thread>"
+                    if s.bound_attr is not None:
+                        if s.bound_attr not in started:
+                            continue   # constructed but never started
+                        if s.bound_attr in joined:
+                            continue
+                        where = f"self.{s.bound_attr}"
+                    elif s.bound_local is not None:
+                        def locals_calling(method: str) -> Set[str]:
+                            if s.func is None:
+                                return set()
+                            return {
+                                n.func.value.id
+                                for n in ast.walk(s.func.node)
+                                if isinstance(n, ast.Call)
+                                and isinstance(n.func, ast.Attribute)
+                                and n.func.attr == method
+                                and isinstance(n.func.value, ast.Name)
+                            }
+                        starts = locals_calling("start")
+                        joins = locals_calling("join")
+                        if s.bound_local not in starts:
+                            continue
+                        if s.bound_local in joins:
+                            continue
+                        where = s.bound_local
+                    else:
+                        # anonymous: only a chained .start() makes it run,
+                        # and then nothing can ever join it
+                        p = parent(s.call)
+                        chained = (
+                            isinstance(p, ast.Attribute)
+                            and p.attr == "start"
+                            and isinstance(parent(p), ast.Call)
+                        )
+                        if not chained:
+                            continue
+                        where = "<anonymous>"
+                    findings.append(lint.Finding(
+                        rule=self.name, path=mod.rel, line=s.call.lineno,
+                        symbol=(s.func.qualname if s.func else tc.name),
+                        detail=f"{tc.name}.{label}",
+                        message=(
+                            f"worker thread ({where}, target "
+                            f"{label}) is started but never joined — "
+                            f"join it at the close()/commit boundary so "
+                            f"shutdown and checkpoint publication are "
+                            f"ordered after the worker's last write"
+                        ),
+                    ))
+        return findings
+
+
+def _handler_captures_to_self(handler: ast.ExceptHandler) -> bool:
+    """Does this ``except X as e`` body publish ``e`` to instance state
+    (``self.attr = e``) or ship it through a self call
+    (``self._q.put(wrap(e))``)?"""
+    if handler.name is None:
+        return False
+
+    def refs_exc(node: ast.AST) -> bool:
+        return any(
+            isinstance(n, ast.Name) and n.id == handler.name
+            for n in ast.walk(node)
+        )
+
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Assign) and refs_exc(node.value):
+            for t in node.targets:
+                d = dotted_name(t)
+                if d is not None and d.startswith("self."):
+                    return True
+        elif isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if (d is not None and d.startswith("self.")
+                    and any(refs_exc(a) for a in node.args)):
+                return True
+    return False
+
+
+class SilentDaemonDeathRule:
+    name = "silent-daemon-death"
+    description = (
+        "worker body never captures exceptions for the main thread — the "
+        "daemon dies silently"
+    )
+
+    def run(self, project) -> Iterable["lint.Finding"]:
+        findings: List[lint.Finding] = []
+        for mod in project:
+            for tc in thread_classes(mod):
+                targets = sorted({
+                    s.target_method for s in tc.starts
+                    if s.target_method is not None
+                    and s.target_method in tc.methods
+                })
+                for m in targets:
+                    captured = False
+                    for name in tc.closure_of(m):
+                        for f in tc.methods.get(name, []):
+                            for n in ast.walk(f.node):
+                                if (isinstance(n, ast.ExceptHandler)
+                                        and _handler_captures_to_self(n)):
+                                    captured = True
+                    if captured:
+                        continue
+                    fdef = tc.methods[m][0]
+                    findings.append(lint.Finding(
+                        rule=self.name, path=mod.rel,
+                        line=fdef.node.lineno, symbol=fdef.qualname,
+                        detail=f"{tc.name}.{m}",
+                        message=(
+                            f"thread target {tc.name}.{m} never captures "
+                            f"exceptions into instance state — wrap the "
+                            f"body in try/except BaseException and "
+                            f"publish the error for the main thread to "
+                            f"re-raise at the next boundary"
+                        ),
+                    ))
+        return findings

@@ -1,0 +1,631 @@
+"""Layer 3 (dynamic) — deterministic schedule audit over the threaded
+subsystems.
+
+The thread-safety lint (layer 3 static, ``rules/``) proves the locking
+discipline; this audit proves the *protocol*: no matter when the
+read-ahead, write-behind, checkpoint-write, and serve-drain work actually
+runs relative to the training loop, the fit/predict trajectories are
+bit-identical and the store invariants hold.
+
+The trick is that no real concurrency is used.  Each DiskStore worker
+thread is retired and its queue replaced by a ``_PumpQueue`` that parks
+the queued work items; a ``SteppedStore`` wrapper then replays the parked
+items inline — on the driving thread — at *yield points* chosen by a
+deterministic bit ``Schedule``:
+
+- ``readahead``: bit=1 -> the read-ahead faults its pages NOW (before the
+  training gather); bit=0 -> the gather races it and faults the pages
+  itself, the parked read-ahead running later (finding them resident).
+- ``gather``: bit=1 -> any parked read-ahead completes first.
+- ``scatter``: bit=1 -> one parked write-behind page write lands right
+  after the mutation (eviction vs in-flight read-ahead boundary).
+- ``flush``: bit=1 -> one parked write lands before the flush enqueues the
+  rest (write-behind flush vs ``save()`` boundary).
+
+``SteppedCkpt`` gives the checkpoint async writer the same treatment: the
+write body runs at a schedule-chosen point (immediately, or deferred to
+the next ``wait()``/``save()`` boundary) instead of on a thread.  The
+serve cell moves the ``CTRServer.drain`` of a co-located request stream
+before/after each train step.  Because every replayed interleaving runs
+on one thread, a failure reproduces exactly from ``(cell, schedule)`` —
+see docs/analysis.md for the local repro recipe.
+
+Checks per cell (each failure becomes a ``sched-<check>`` Finding, same
+baseline gating as the lint):
+
+- ``trajectory``: per-step losses and predict scores bit-identical across
+  every schedule.
+- ``store-state``: after ``flush()``: ``_dirty`` and ``_in_flight`` empty,
+  no stray ``*.tmp`` page files, meters finite and non-negative.
+- ``pages``: final on-disk page bytes identical across schedules.
+- ``ckpt``: checkpoint content (manifest sans timestamps, array leaves,
+  snapshot pages) identical across schedules, and a resumed trainer
+  continues with the reference trajectory.
+- ``serve``: every submitted request scored; serving leaves the training
+  trajectory untouched (compared against a no-serve reference run).
+- ``pipeline``: PrefetchPipeline-fed training matches direct-fed training
+  bit-for-bit; a raising producer surfaces on the consumer.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import glob
+import json
+import os
+import random
+import shutil
+import tempfile
+import traceback
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.lint import Finding
+from repro.analysis.trace_audit import CheckResult
+
+_ROW_STORE_PATH = "src/repro/core/row_store.py"
+_TRAINER_PATH = "src/repro/runtime/trainer.py"
+_SERVE_CTR_PATH = "src/repro/runtime/serve_ctr.py"
+_PIPELINE_PATH = "src/repro/data/pipeline.py"
+
+
+# ------------------------------------------------------------- schedules
+class Schedule:
+    """A deterministic stream of yield-point decisions: ``take()`` returns
+    the next bit of ``pattern``, cycling forever.  The consumption order is
+    fixed by the (single-threaded) replay loop, so ``(name, pattern)``
+    fully reproduces an interleaving."""
+
+    def __init__(self, name: str, pattern: Sequence[int]):
+        if not pattern:
+            raise ValueError("schedule pattern must be non-empty")
+        self.name = name
+        self.pattern = [int(b) for b in pattern]
+        self._i = 0
+
+    def take(self) -> bool:
+        b = self.pattern[self._i % len(self.pattern)]
+        self._i += 1
+        return bool(b)
+
+    def fresh(self) -> "Schedule":
+        return Schedule(self.name, self.pattern)
+
+
+def default_schedules() -> List[Schedule]:
+    """The enumerated interleavings: both extremes, both phases of strict
+    alternation, and a seeded pseudo-random stream."""
+    rnd = random.Random(0xD15C)
+    return [
+        Schedule("eager", [1]),          # background work always wins
+        Schedule("lazy", [0]),           # background work always loses
+        Schedule("alternate", [1, 0]),
+        Schedule("alternate-off", [0, 1]),
+        Schedule("random-d15c", [rnd.randint(0, 1) for _ in range(64)]),
+    ]
+
+
+# ---------------------------------------------------- worker replacement
+class _PumpQueue:
+    """``queue.Queue`` lookalike that parks items and replays them inline.
+
+    Installed in place of a DiskStore worker queue after the worker thread
+    is retired: ``put`` parks, ``join`` (the store's own drain points)
+    replays everything on the calling thread, ``pump(n)`` replays up to
+    ``n`` items at a schedule-chosen yield point.  ``None`` shutdown
+    sentinels are ignored — there is no thread to stop."""
+
+    def __init__(self, process):
+        self._process = process
+        self._items: collections.deque = collections.deque()
+
+    def put(self, item, *args, **kwargs):
+        if item is not None:
+            self._items.append(item)
+
+    def task_done(self):
+        pass
+
+    def join(self):
+        while self._items:
+            self._process(self._items.popleft())
+
+    def pump(self, n: int = 1) -> int:
+        done = 0
+        while self._items and done < n:
+            self._process(self._items.popleft())
+            done += 1
+        return done
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+
+def _retire_workers(store) -> None:
+    """Stop the DiskStore worker threads cleanly (sentinel + join, without
+    setting ``_stop`` — processing must keep working inline)."""
+    store._write_q.join()
+    store._read_q.join()
+    store._write_q.put(None)
+    store._read_q.put(None)
+    store._writer.join(timeout=30)
+    store._reader.join(timeout=30)
+
+
+class SteppedStore:
+    """DiskStore wrapper replaying worker-queue items at schedule-chosen
+    yield points (single-threaded — see module docstring)."""
+
+    kind = "disk"
+
+    def __init__(self, store, schedule: Schedule):
+        self.inner = store
+        self.schedule = schedule
+        _retire_workers(store)
+        store._write_q = _PumpQueue(store._process_write_item)
+        store._read_q = _PumpQueue(store._process_read_item)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    # ------------------------------------------------------- yield points
+    def readahead(self, name, uids):
+        self.inner.readahead(name, uids)
+        if self.schedule.take():
+            self.inner._read_q.join()   # read-ahead wins: pages land now
+
+    def gather(self, name, uids, serve=False):
+        if self.schedule.take():
+            self.inner._read_q.join()   # parked read-ahead completes first
+        return self.inner.gather(name, uids, serve=serve)
+
+    def scatter(self, name, uids, rows, accum):
+        out = self.inner.scatter(name, uids, rows, accum)
+        if self.schedule.take():
+            self.inner._write_q.pump(1)  # one write-behind page lands now
+        return out
+
+    def flush(self):
+        if self.schedule.take():
+            self.inner._write_q.pump(1)  # a write races the flush enqueue
+        self.inner.flush()
+
+
+class SteppedCkpt:
+    """CheckpointManager facade whose async write body runs at a
+    schedule-chosen point on the calling thread (immediately when the bit
+    is 1, else deferred to the next ``wait()``/``save()`` boundary) —
+    exactly the two extremes a real writer thread can land in relative to
+    the training loop."""
+
+    def __init__(self, ckpt, schedule: Schedule):
+        self.inner = ckpt
+        self.schedule = schedule
+        self._pending: Optional[tuple] = None
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def save(self, step, tree, meta=None, block=False, extras_dir=None):
+        import jax
+
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self.wait()
+        self._pending = (step, host_tree, meta, extras_dir)
+        if block or not self.inner.async_save or self.schedule.take():
+            self.wait()   # the write lands before training resumes
+
+    def wait(self):
+        if self._pending is not None:
+            step, host_tree, meta, extras_dir = self._pending
+            self._pending = None
+            self.inner._write_async(step, host_tree, meta,
+                                    extras_dir=extras_dir)
+        self.inner.wait()
+
+
+# ------------------------------------------------------------- trainers
+def _build_disk_trainer(prefetch: bool, spill_dir: str,
+                        ckpt_dir: Optional[str] = None,
+                        ckpt_every: int = 200):
+    from repro.core.kstep import KStepConfig
+    from repro.runtime.factory import build_trainer
+    from repro.runtime.trainer import TrainerConfig
+
+    tcfg = TrainerConfig(
+        n_pod=2, kstep=KStepConfig(k=2), placement="cached",
+        prefetch=prefetch, log_every=10_000,
+        store="disk", spill_dir=spill_dir,
+        # small pages + a tight cache: evictions and faults on every step
+        page_rows=256, page_cache_pages=8,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, ckpt_async=True,
+    )
+    return build_trainer("baidu-ctr", tcfg, smoke=True)
+
+
+def _batches(n: int, batch: int = 64, seed: int = 0) -> List[dict]:
+    from repro import configs
+    from repro.data import synthetic as S
+
+    mcfg = configs.get("baidu-ctr").smoke_cfg
+    gen = S.recsys_batches(mcfg, batch=batch, seed=seed)
+    return [next(gen) for _ in range(n)]
+
+
+@dataclasses.dataclass
+class _Run:
+    losses: List[float]
+    predicts: List[np.ndarray]
+
+
+def _run_steps(tr, batches: List[dict]) -> _Run:
+    """The driving loop every disk cell shares: predict-then-train with the
+    prefetch hand-off when configured."""
+    losses: List[float] = []
+    predicts: List[np.ndarray] = []
+    for i, b in enumerate(batches):
+        predicts.append(np.asarray(tr.predict(b)))
+        nxt = batches[i + 1] if i + 1 < len(batches) else None
+        if tr._prefetcher is not None:
+            loss = tr.train_step_prefetched(b, nxt)
+        else:
+            loss = tr.train_step(b)
+        losses.append(float(loss))
+    return _Run(losses, predicts)
+
+
+# ------------------------------------------------------------ comparators
+def _store_state_checks(target: str, store, spill_dir: str) -> List[CheckResult]:
+    out: List[CheckResult] = []
+    store.flush()
+    with store._lock:
+        dirty = set(store._dirty)
+        in_flight = dict(store._in_flight)
+    ok = not dirty and not in_flight
+    out.append(CheckResult(
+        target, "store-state", ok,
+        "" if ok else (
+            f"after flush(): dirty={sorted(dirty)} "
+            f"in_flight={sorted(in_flight)}")))
+    stray = glob.glob(os.path.join(spill_dir, "**", "*.tmp"),
+                      recursive=True)
+    out.append(CheckResult(
+        target, "store-state", not stray,
+        f"stray tmp files after flush: {stray}" if stray else ""))
+    meters = {**store.stats(), **store.serve_stats()}
+    bad = {k: v for k, v in meters.items()
+           if not np.isfinite(v) or v < 0}
+    out.append(CheckResult(
+        target, "store-state", not bad,
+        f"non-finite/negative meters: {bad}" if bad else ""))
+    return out
+
+
+def _page_bytes(spill_dir: str) -> Dict[str, bytes]:
+    out = {}
+    for path in sorted(glob.glob(
+            os.path.join(spill_dir, "**", "page_*.npz"), recursive=True)):
+        with open(path, "rb") as f:
+            out[os.path.relpath(path, spill_dir)] = f.read()
+    return out
+
+
+def _runs_identical(target: str, check: str, name: str, ref: _Run,
+                    got: _Run) -> CheckResult:
+    if ref.losses != got.losses:
+        i = next(i for i, (a, b) in
+                 enumerate(zip(ref.losses, got.losses)) if a != b)
+        return CheckResult(
+            target, check, False,
+            f"schedule {name}: loss diverges at step {i}: "
+            f"{ref.losses[i]!r} vs {got.losses[i]!r}")
+    for i, (a, b) in enumerate(zip(ref.predicts, got.predicts)):
+        if not np.array_equal(a, b):
+            return CheckResult(
+                target, check, False,
+                f"schedule {name}: predict diverges at probe {i} "
+                f"(max |d|={np.max(np.abs(a - b))})")
+    return CheckResult(target, check, True, "")
+
+
+def _ckpt_content(ckpt_dir: str) -> Dict[str, object]:
+    """Semantic checkpoint content: manifests (sans wall-clock), array
+    leaves, snapshot page arrays — keyed by relative path."""
+    out: Dict[str, object] = {}
+    for path in sorted(glob.glob(
+            os.path.join(ckpt_dir, "step_*", "**"), recursive=True)):
+        if os.path.isdir(path):
+            continue
+        rel = os.path.relpath(path, ckpt_dir)
+        if path.endswith("manifest.json"):
+            with open(path) as f:
+                man = json.load(f)
+            man.pop("time", None)
+            out[rel] = json.dumps(man, sort_keys=True)
+        elif path.endswith(".npz"):
+            with np.load(path) as z:
+                out[rel] = {k: z[k].tobytes() for k in z.files}
+    return out
+
+
+# ------------------------------------------------------------------ cells
+def cell_evict_vs_readahead(schedules: Sequence[Schedule],
+                            steps: int = 8) -> List[CheckResult]:
+    """Page eviction vs in-flight read-ahead: the tight page cache evicts
+    dirty pages into the write queue while read-aheads for the same tables
+    sit parked — every replay order must serve identical rows."""
+    target = "sched/evict-vs-readahead"
+    results: List[CheckResult] = []
+    batches = _batches(steps)
+    ref: Optional[_Run] = None
+    for sch in schedules:
+        spill = tempfile.mkdtemp(prefix="sched_audit_evict_")
+        try:
+            tr = _build_disk_trainer(prefetch=True, spill_dir=spill)
+            tr.engine.store = SteppedStore(tr.engine.store, sch.fresh())
+            run = _run_steps(tr, batches)
+            results.extend(_store_state_checks(
+                f"{target}/{sch.name}", tr.engine.store.inner, spill))
+            pages = _page_bytes(spill)
+            if ref is None:
+                ref, ref_pages = run, pages
+            else:
+                results.append(_runs_identical(
+                    target, "trajectory", sch.name, ref, run))
+                results.append(CheckResult(
+                    target, "pages", pages == ref_pages,
+                    "" if pages == ref_pages else (
+                        f"schedule {sch.name}: final page files differ "
+                        f"from {schedules[0].name}")))
+            tr.engine.store.close()
+        finally:
+            shutil.rmtree(spill, ignore_errors=True)
+    return results
+
+
+def cell_flush_vs_save(schedules: Sequence[Schedule],
+                       steps: int = 9) -> List[CheckResult]:
+    """Write-behind flush vs ``save()``: checkpoints land at schedule-
+    chosen times relative to further training; every schedule must publish
+    identical checkpoints, and resuming from one must continue exactly on
+    the reference trajectory."""
+    target = "sched/flush-vs-save"
+    results: List[CheckResult] = []
+    extra = 3
+    batches = _batches(steps + extra)
+    ref: Optional[_Run] = None
+    ref_tail: Optional[List[float]] = None
+    ref_ckpt: Optional[Dict[str, object]] = None
+    for sch in schedules:
+        spill = tempfile.mkdtemp(prefix="sched_audit_save_")
+        ckdir = tempfile.mkdtemp(prefix="sched_audit_ckpt_")
+        try:
+            tr = _build_disk_trainer(prefetch=True, spill_dir=spill,
+                                     ckpt_dir=ckdir, ckpt_every=3)
+            tr.engine.store = SteppedStore(tr.engine.store, sch.fresh())
+            tr.ckpt = SteppedCkpt(tr.ckpt, sch.fresh())
+            run = _run_steps(tr, batches[:steps])
+            tr.ckpt.wait()   # land the final deferred write
+            content = _ckpt_content(ckdir)
+            if ref is None:
+                ref, ref_ckpt = run, content
+                # reference continuation: 3 more steps past the last save
+                ref_tail = [float(tr.train_step_prefetched(
+                    batches[steps + i],
+                    batches[steps + i + 1] if i + 1 < extra else None))
+                    for i in range(extra)]
+                tr.engine.store.close()
+            else:
+                results.append(_runs_identical(
+                    target, "trajectory", sch.name, ref, run))
+                same = content == ref_ckpt
+                results.append(CheckResult(
+                    target, "ckpt", same,
+                    "" if same else (
+                        f"schedule {sch.name}: checkpoint content differs "
+                        f"from {schedules[0].name}: "
+                        f"{sorted(set(content) ^ set(ref_ckpt))[:4] or 'payload bytes'}")))
+                # resume-continuation: a fresh trainer resumed from THIS
+                # schedule's checkpoint walks the reference tail
+                tr.engine.store.close()
+                tr2 = _build_disk_trainer(prefetch=True, spill_dir=spill,
+                                          ckpt_dir=ckdir, ckpt_every=10**9)
+                resumed = tr2.resume()
+                tail: List[float] = []
+                if resumed:
+                    tail = [float(tr2.train_step_prefetched(
+                        batches[steps + i],
+                        batches[steps + i + 1] if i + 1 < extra else None))
+                        for i in range(extra)]
+                ok = resumed and tail == ref_tail
+                results.append(CheckResult(
+                    target, "ckpt", ok,
+                    "" if ok else (
+                        f"schedule {sch.name}: resumed continuation "
+                        f"diverges: {tail} vs {ref_tail}"
+                        if resumed else
+                        f"schedule {sch.name}: resume() found no "
+                        f"checkpoint")))
+                tr2.engine.store.close()
+        finally:
+            shutil.rmtree(spill, ignore_errors=True)
+            shutil.rmtree(ckdir, ignore_errors=True)
+    return results
+
+
+def cell_prefetch_vs_serve(schedules: Sequence[Schedule],
+                           steps: int = 6) -> List[CheckResult]:
+    """Prefetch commit vs serve drain: a co-located ``CTRServer`` drains a
+    second request stream before or after each train step (schedule bit),
+    with a prefetched pull in flight either way — training must stay
+    bit-identical to a run that never serves, and every request must be
+    scored."""
+    from repro.runtime.factory import build_ctr_server
+
+    target = "sched/prefetch-vs-serve"
+    results: List[CheckResult] = []
+    batches = _batches(steps)
+    serve_batches = _batches(steps, batch=32, seed=1)
+
+    # no-serve reference
+    spill = tempfile.mkdtemp(prefix="sched_audit_serve_ref_")
+    try:
+        tr = _build_disk_trainer(prefetch=True, spill_dir=spill)
+        tr.engine.store = SteppedStore(
+            tr.engine.store, Schedule("eager", [1]))
+        ref = _run_steps(tr, batches)
+        tr.engine.store.close()
+    finally:
+        shutil.rmtree(spill, ignore_errors=True)
+
+    for sch in schedules:
+        spill = tempfile.mkdtemp(prefix="sched_audit_serve_")
+        try:
+            tr = _build_disk_trainer(prefetch=True, spill_dir=spill)
+            tr.engine.store = SteppedStore(tr.engine.store, sch.fresh())
+            srv = build_ctr_server(tr, max_batch=32)
+            drain_sch = sch.fresh()
+            submitted = [0]
+
+            def drain(i):
+                srv.submit_batch(serve_batches[i])
+                submitted[0] += len(serve_batches[i]["label"])
+                srv.drain()
+
+            run = _Run([], [])
+            for i, b in enumerate(batches):
+                run.predicts.append(np.asarray(tr.predict(b)))
+                if drain_sch.take():
+                    drain(i)   # drain BEFORE the step, pull in flight
+                    post = False
+                else:
+                    post = True
+                nxt = batches[i + 1] if i + 1 < len(batches) else None
+                run.losses.append(
+                    float(tr.train_step_prefetched(b, nxt)))
+                if post:
+                    drain(i)
+            results.append(_runs_identical(
+                target, "trajectory", sch.name, ref, run))
+            served = srv.stats["served"]
+            ok = served == submitted[0] and not srv.pending
+            results.append(CheckResult(
+                target, "serve", ok,
+                "" if ok else (
+                    f"schedule {sch.name}: served {served} of "
+                    f"{submitted[0]} submitted "
+                    f"({len(srv.pending)} still queued)")))
+            results.extend(_store_state_checks(
+                f"{target}/{sch.name}", tr.engine.store.inner, spill))
+            tr.engine.store.close()
+        finally:
+            shutil.rmtree(spill, ignore_errors=True)
+    return results
+
+
+def cell_pipeline_producer(schedules: Sequence[Schedule],
+                           steps: int = 6) -> List[CheckResult]:
+    """The data-pipeline producer thread: pipeline-fed training must match
+    direct-fed training bit-for-bit, and a raising producer must surface
+    on the consumer thread (never a silent end-of-stream)."""
+    from repro.data.pipeline import PrefetchPipeline
+
+    target = "sched/pipeline-producer"
+    results: List[CheckResult] = []
+    batches = _batches(steps)
+
+    def train(feed) -> List[float]:
+        spill = tempfile.mkdtemp(prefix="sched_audit_pipe_")
+        try:
+            tr = _build_disk_trainer(prefetch=False, spill_dir=spill)
+            tr.engine.store = SteppedStore(
+                tr.engine.store, Schedule("eager", [1]))
+            losses = [float(tr.train_step(b)) for b in feed]
+            tr.engine.store.close()
+            return losses
+        finally:
+            shutil.rmtree(spill, ignore_errors=True)
+
+    direct = train(iter(batches))
+    pipe = PrefetchPipeline(iter(batches), depth=2)
+    piped = train(pipe)
+    pipe.close()
+    ok = direct == piped
+    results.append(CheckResult(
+        target, "pipeline", ok,
+        "" if ok else "pipeline-fed losses differ from direct-fed"))
+
+    def failing_source():
+        yield batches[0]
+        raise RuntimeError("boom at batch 1")
+
+    pipe = PrefetchPipeline(failing_source(), depth=2)
+    got: Optional[str] = None
+    try:
+        for _ in pipe:
+            pass
+    except RuntimeError as e:
+        got = str(e.__cause__)
+    finally:
+        pipe.close()
+    ok = got == "boom at batch 1"
+    results.append(CheckResult(
+        target, "pipeline", ok,
+        "" if ok else (
+            f"producer exception not re-raised on the consumer "
+            f"(saw {got!r})")))
+    return results
+
+
+# ------------------------------------------------------------------ gate
+_CELLS = {
+    "evict-vs-readahead": (cell_evict_vs_readahead, _ROW_STORE_PATH),
+    "flush-vs-save": (cell_flush_vs_save, _TRAINER_PATH),
+    "prefetch-vs-serve": (cell_prefetch_vs_serve, _SERVE_CTR_PATH),
+    "pipeline-producer": (cell_pipeline_producer, _PIPELINE_PATH),
+}
+
+
+def _finding(path: str, res: CheckResult) -> Finding:
+    return Finding(
+        rule=f"sched-{res.check}", path=path, line=0,
+        symbol=res.target, detail=res.check,
+        message=f"schedule audit [{res.target}] {res.check}: {res.detail}",
+    )
+
+
+def run_sched_audit(
+    cells: Optional[Sequence[str]] = None,
+    schedules: Optional[Sequence[Schedule]] = None,
+    log=None,
+) -> Tuple[List[Finding], List[Dict]]:
+    """Replay every cell under every schedule; returns ``(findings,
+    report)`` — findings are the FAILED checks (baseline-gated by the
+    CLI), the report records every check for the CI artifact."""
+    if schedules is None:
+        schedules = default_schedules()
+    names = list(cells) if cells is not None else list(_CELLS)
+    unknown = [n for n in names if n not in _CELLS]
+    if unknown:
+        raise ValueError(
+            f"unknown sched-audit cell(s) {unknown}; "
+            f"available: {sorted(_CELLS)}")
+    findings: List[Finding] = []
+    report: List[Dict] = []
+    for name in names:
+        fn, path = _CELLS[name]
+        if log:
+            log(f"sched-audit: {name} x {len(schedules)} schedules")
+        try:
+            results = fn(schedules)
+        except Exception:
+            results = [CheckResult(
+                f"sched/{name}", "audit-error", False,
+                traceback.format_exc(limit=3).strip())]
+        for r in results:
+            report.append(dataclasses.asdict(r))
+            if not r.ok:
+                findings.append(_finding(path, r))
+    return findings, report

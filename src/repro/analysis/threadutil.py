@@ -1,0 +1,448 @@
+"""Static thread model shared by the layer-3 concurrency rules.
+
+Like :mod:`repro.analysis.astutil`, everything here is pure ``ast`` — the
+threaded modules are parsed, never imported.  The model is deliberately
+module-local and name-based (the same conservatism as ``traced_functions``):
+
+- A **thread class** is any class that constructs ``threading.Thread``.
+  Its *worker domain* is the set of methods reachable from the thread
+  targets through ``self.method()`` calls; everything else (except
+  ``__init__``, which runs before any ``start()`` and therefore
+  happens-before the worker) is the *main domain*.
+- A **lock** is any ``with``-acquired attribute or name whose final path
+  segment matches ``lock``/``mutex`` (case-insensitive).  Locks held at a
+  node are the lexically enclosing ``with`` locks up to the nearest
+  function boundary, plus the locks *provably held at every call site* of
+  that function (a fixpoint over the module-local call graph — a helper
+  only called from inside ``with self._lock:`` blocks counts as guarded).
+- Attributes bound to internally-synchronized constructors
+  (``queue.Queue``, ``threading.Event``, ``collections.deque``, the lock
+  types themselves, ...) never need a lock of their own.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set
+
+from repro.analysis.astutil import (
+    FUNC_TYPES,
+    FuncInfo,
+    ModuleInfo,
+    dotted_name,
+    enclosing,
+    parent,
+)
+
+LOCK_NAME_RE = re.compile(r"lock|mutex", re.IGNORECASE)
+
+# Constructors whose instances are internally synchronized (or ARE the
+# synchronization primitive): attributes bound to one of these are exempt
+# from the shared-state rule.
+THREADSAFE_CONSTRUCTORS = {
+    "queue.Queue", "queue.SimpleQueue", "queue.LifoQueue",
+    "queue.PriorityQueue",
+    "collections.deque",
+    "threading.Event", "threading.Lock", "threading.RLock",
+    "threading.Condition", "threading.Semaphore",
+    "threading.BoundedSemaphore", "threading.Barrier", "threading.Thread",
+    "threading.local",
+}
+
+# Canonical callables that block on the filesystem (or sleep).  Calling one
+# of these while a lock is held stalls every thread contending for it —
+# on this repo's hot path that means the training thread waits out SSD
+# latency inside the page-cache critical section.
+BLOCKING_CALLS = {
+    "open",
+    "numpy.load", "numpy.save", "numpy.savez", "numpy.savez_compressed",
+    "os.replace", "os.rename", "os.fsync", "os.remove", "os.unlink",
+    "os.makedirs", "os.walk",
+    "shutil.copy", "shutil.copy2", "shutil.copyfile", "shutil.copytree",
+    "shutil.move", "shutil.rmtree",
+    "json.dump", "json.load",
+    "time.sleep",
+}
+
+# dict/set/list/deque mutators: `self.x.append(...)` is a write to `x`.
+MUTATING_METHODS = {
+    "append", "appendleft", "add", "discard", "remove", "pop", "popleft",
+    "popitem", "clear", "update", "extend", "insert", "setdefault",
+    "move_to_end", "sort", "reverse",
+}
+
+
+# --------------------------------------------------------------------------
+# lock scopes
+# --------------------------------------------------------------------------
+
+def _with_lock_names(node: ast.With) -> Set[str]:
+    """Leaf names of lock-ish context managers acquired by this ``with``."""
+    out: Set[str] = set()
+    for item in node.items:
+        name = dotted_name(item.context_expr)
+        if name is None and isinstance(item.context_expr, ast.Call):
+            # with self._lock: vs with self._lock.acquire_timeout(...):
+            name = dotted_name(item.context_expr.func)
+        if name is not None:
+            leaf = name.split(".")[-1]
+            if LOCK_NAME_RE.search(leaf):
+                out.add(leaf)
+    return out
+
+
+def lexical_locks(node: ast.AST) -> FrozenSet[str]:
+    """Lock names acquired by ``with`` statements between ``node`` and its
+    nearest enclosing function boundary.  Stops at the boundary: a closure
+    defined inside a locked block may run on another thread later, so the
+    outer ``with`` proves nothing for its body."""
+    out: Set[str] = set()
+    p = parent(node)
+    while p is not None and not isinstance(p, FUNC_TYPES):
+        if isinstance(p, ast.With):
+            out |= _with_lock_names(p)
+        p = parent(p)
+    return frozenset(out)
+
+
+def walk_scope(root: ast.AST) -> Iterable[ast.AST]:
+    """``ast.walk`` that does NOT descend into nested function definitions —
+    a closure's body executes when the closure is *called*, not where it is
+    defined, so lexical lock/ordering facts must stop at its boundary."""
+    yield root
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, FUNC_TYPES):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def resolve_calls(mod: ModuleInfo) -> Dict[int, List[FuncInfo]]:
+    """id(call node) -> module-local functions it (by name) resolves to.
+    ``foo(...)`` and ``self.m(...)`` resolve; ``obj.m(...)`` on an unknown
+    receiver does not.  ``ClassName(...)`` resolves to
+    ``ClassName.__init__``."""
+    by_name: Dict[str, List[FuncInfo]] = {}
+    init_by_cls: Dict[str, FuncInfo] = {}
+    for f in mod.functions:
+        by_name.setdefault(f.name, []).append(f)
+        if f.name == "__init__" and f.cls is not None:
+            init_by_cls[f.cls] = f
+    out: Dict[int, List[FuncInfo]] = {}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        targets: List[FuncInfo] = []
+        if isinstance(fn, ast.Name):
+            targets = by_name.get(fn.id, [])
+            if not targets and fn.id in init_by_cls:
+                targets = [init_by_cls[fn.id]]
+        elif isinstance(fn, ast.Attribute):
+            if isinstance(fn.value, ast.Name) and fn.value.id == "self":
+                targets = by_name.get(fn.attr, [])
+        if targets:
+            out[id(node)] = targets
+    return out
+
+
+def _call_resolution(mod: ModuleInfo) -> Dict[int, List[ast.Call]]:
+    """id(func node) -> call sites in this module that resolve to it."""
+    resolved = resolve_calls(mod)
+    sites: Dict[int, List[ast.Call]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            for t in resolved.get(id(node), []):
+                sites.setdefault(id(t.node), []).append(node)
+    return sites
+
+
+def lock_held_map(mod: ModuleInfo) -> Dict[int, FrozenSet[str]]:
+    """id(func node) -> lock names provably held at EVERY call site of that
+    function.  Functions with no resolvable call sites hold nothing (their
+    callers are unknown).  Fixpoint from the optimistic all-locks start."""
+    sites = _call_resolution(mod)
+    all_locks: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.With):
+            all_locks |= _with_lock_names(node)
+    held: Dict[int, FrozenSet[str]] = {}
+    for f in mod.functions:
+        held[id(f.node)] = (
+            frozenset(all_locks) if sites.get(id(f.node)) else frozenset()
+        )
+    changed = True
+    while changed:
+        changed = False
+        for f in mod.functions:
+            calls = sites.get(id(f.node))
+            if not calls:
+                continue
+            acc: Optional[FrozenSet[str]] = None
+            for c in calls:
+                encl = mod.enclosing_function(c)
+                inherited = (
+                    held.get(id(encl.node), frozenset())
+                    if encl is not None else frozenset()
+                )
+                at_site = lexical_locks(c) | inherited
+                acc = at_site if acc is None else (acc & at_site)
+            acc = acc or frozenset()
+            if acc != held[id(f.node)]:
+                held[id(f.node)] = acc
+                changed = True
+    return held
+
+
+def locks_at(
+    mod: ModuleInfo, held: Dict[int, FrozenSet[str]], node: ast.AST,
+) -> FrozenSet[str]:
+    """Locks held when ``node`` executes: lexical withs plus the enclosing
+    function's call-site guarantee."""
+    f = mod.enclosing_function(node)
+    base = held.get(id(f.node), frozenset()) if f is not None else frozenset()
+    return lexical_locks(node) | base
+
+
+# --------------------------------------------------------------------------
+# blocking-call closure
+# --------------------------------------------------------------------------
+
+def _is_blocking_call(mod: ModuleInfo, call: ast.Call) -> bool:
+    name = mod.canonical_call(call)
+    if name in BLOCKING_CALLS:
+        return True
+    # self.<queue-or-thread attr>.join() — zero positional args keeps
+    # str.join(parts) out.
+    fn = call.func
+    if (isinstance(fn, ast.Attribute) and fn.attr == "join"
+            and not call.args):
+        recv = dotted_name(fn.value)
+        if recv is not None and recv.split(".")[0] == "self":
+            return True
+    return False
+
+
+def blocking_functions(mod: ModuleInfo) -> Set[int]:
+    """id(func node) for functions that (transitively) perform a blocking
+    call from :data:`BLOCKING_CALLS`."""
+    sites = _call_resolution(mod)
+    callers_of: Dict[int, Set[int]] = {}
+    for fid, calls in sites.items():
+        for c in calls:
+            encl = mod.enclosing_function(c)
+            if encl is not None:
+                callers_of.setdefault(fid, set())
+                callers_of[fid].add(id(encl.node))
+    blocking: Set[int] = set()
+    for f in mod.functions:
+        for node in ast.walk(f.node):
+            if (isinstance(node, ast.Call)
+                    and mod.enclosing_function(node) is f
+                    and _is_blocking_call(mod, node)):
+                blocking.add(id(f.node))
+                break
+    # propagate through callers: f calls blocking g => f blocks too
+    changed = True
+    while changed:
+        changed = False
+        for fid in list(blocking):
+            for caller in callers_of.get(fid, ()):  # callers of fid
+                if caller not in blocking:
+                    blocking.add(caller)
+                    changed = True
+    return blocking
+
+
+# --------------------------------------------------------------------------
+# thread classes: worker domains + accesses
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ThreadStart:
+    call: ast.Call                 # the threading.Thread(...) constructor
+    target_method: Optional[str]   # self.<m> target, if resolvable
+    bound_attr: Optional[str]      # self.<X> = Thread(...)
+    bound_local: Optional[str]     # x = Thread(...)
+    func: Optional[FuncInfo]       # function containing the constructor
+
+
+@dataclasses.dataclass
+class AttrAccess:
+    attr: str
+    node: ast.Attribute
+    func: FuncInfo
+    write: bool
+    locks: FrozenSet[str]
+    worker: bool                   # reachable from a thread target
+    init: bool                     # inside __init__ (happens-before start)
+
+
+def _is_thread_ctor(mod: ModuleInfo, call: ast.Call) -> bool:
+    return mod.canonical_call(call) == "threading.Thread"
+
+
+def _is_write(node: ast.Attribute) -> bool:
+    if isinstance(node.ctx, (ast.Store, ast.Del)):
+        return True
+    p = parent(node)
+    # self.x[...] = v   /   del self.x[...]   /   self.x[...] += v
+    if (isinstance(p, ast.Subscript) and p.value is node
+            and isinstance(p.ctx, (ast.Store, ast.Del))):
+        return True
+    # self.x.append(v) etc.
+    if (isinstance(p, ast.Attribute) and p.value is node
+            and p.attr in MUTATING_METHODS):
+        pp = parent(p)
+        if isinstance(pp, ast.Call) and pp.func is p:
+            return True
+    return False
+
+
+class ThreadClass:
+    """The static thread model of one class that starts worker threads."""
+
+    def __init__(self, mod: ModuleInfo, node: ast.ClassDef):
+        self.mod = mod
+        self.node = node
+        self.name = node.name
+        # direct methods only — closures nested inside a method belong to
+        # that method's domain, not to the class namespace
+        self.methods: Dict[str, List[FuncInfo]] = {}
+        for f in mod.functions:
+            if parent(f.node) is node:
+                self.methods.setdefault(f.name, []).append(f)
+        self.starts: List[ThreadStart] = self._find_starts()
+        self.worker_methods: Set[str] = self._worker_closure()
+        self.safe_attrs: Set[str] = self._safe_attrs()
+
+    # -------------------------------------------------------------- starts
+    def _find_starts(self) -> List[ThreadStart]:
+        out: List[ThreadStart] = []
+        for node in ast.walk(self.node):
+            if not (isinstance(node, ast.Call)
+                    and _is_thread_ctor(self.mod, node)):
+                continue
+            target = None
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    tn = dotted_name(kw.value)
+                    if tn is not None and tn.startswith("self."):
+                        target = tn.split(".", 1)[1]
+            bound_attr = bound_local = None
+            p = parent(node)
+            if isinstance(p, ast.Assign) and len(p.targets) == 1:
+                t = p.targets[0]
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    bound_attr = t.attr
+                elif isinstance(t, ast.Name):
+                    bound_local = t.id
+            out.append(ThreadStart(
+                call=node, target_method=target, bound_attr=bound_attr,
+                bound_local=bound_local,
+                func=self.mod.enclosing_function(node),
+            ))
+        return out
+
+    # ------------------------------------------------------- worker domain
+    def closure_of(self, method: str) -> Set[str]:
+        """Method names reachable from ``method`` through ``self.m()``
+        calls — the code that runs on the thread targeting ``method``."""
+        work: List[str] = [method]
+        seen: Set[str] = set()
+        while work:
+            name = work.pop()
+            if name in seen or name not in self.methods:
+                continue
+            seen.add(name)
+            for f in self.methods[name]:
+                for n in ast.walk(f.node):
+                    if (isinstance(n, ast.Call)
+                            and isinstance(n.func, ast.Attribute)
+                            and isinstance(n.func.value, ast.Name)
+                            and n.func.value.id == "self"):
+                        work.append(n.func.attr)
+        return seen
+
+    def _worker_closure(self) -> Set[str]:
+        seen: Set[str] = set()
+        for s in self.starts:
+            if s.target_method is not None:
+                seen |= self.closure_of(s.target_method)
+        return seen
+
+    # ---------------------------------------------------------- safe attrs
+    def _safe_attrs(self) -> Set[str]:
+        safe: Set[str] = set()
+        for node in ast.walk(self.node):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            t = node.targets[0]
+            if not (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                continue
+            if (isinstance(node.value, ast.Call)
+                    and self.mod.canonical_call(node.value)
+                    in THREADSAFE_CONSTRUCTORS):
+                safe.add(t.attr)
+        return safe
+
+    def _owning_method(self, g: FuncInfo) -> Optional[FuncInfo]:
+        """The direct method whose body (transitively) contains ``g``."""
+        p = parent(g.node)
+        while p is not None and p is not self.node:
+            if isinstance(p, FUNC_TYPES) and parent(p) is self.node:
+                return self.mod.info_for(p)
+            p = parent(p)
+        return None
+
+    # ------------------------------------------------------------ accesses
+    def attr_accesses(
+        self, held: Dict[int, FrozenSet[str]],
+    ) -> List[AttrAccess]:
+        out: List[AttrAccess] = []
+        for name, infos in self.methods.items():
+            for f in infos:
+                # closures (transitively) nested inside a method run in its
+                # domain
+                members = [f] + [
+                    g for g in self.mod.functions
+                    if g.node is not f.node
+                    and enclosing(g.node, ast.ClassDef) is self.node
+                    and self._owning_method(g) is f
+                ]
+                for g in members:
+                    for n in ast.walk(g.node):
+                        if not (isinstance(n, ast.Attribute)
+                                and isinstance(n.value, ast.Name)
+                                and n.value.id == "self"):
+                            continue
+                        if self.mod.enclosing_function(n) is not g:
+                            continue
+                        out.append(AttrAccess(
+                            attr=n.attr, node=n, func=g,
+                            write=_is_write(n),
+                            locks=locks_at(self.mod, held, n),
+                            worker=name in self.worker_methods,
+                            init=(name == "__init__"),
+                        ))
+        return out
+
+
+def thread_classes(mod: ModuleInfo) -> List[ThreadClass]:
+    """Every class in ``mod`` that constructs a ``threading.Thread`` — the
+    scope of the unguarded-shared-state / lifecycle rules."""
+    out: List[ThreadClass] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if any(isinstance(n, ast.Call) and _is_thread_ctor(mod, n)
+               for n in ast.walk(node)):
+            out.append(ThreadClass(mod, node))
+    return out

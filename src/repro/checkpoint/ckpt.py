@@ -174,8 +174,22 @@ class CheckpointManager:
         # (*.tmp page files) alongside checkpoint GC — see _gc
         self.spill_dir = spill_dir
         self._thread: Optional[threading.Thread] = None
+        # _exc crosses the writer-thread/main boundary; _lock guards it
+        # (join() alone gives the happens-before, but the lock keeps the
+        # hand-off explicit and auditable)
+        self._lock = threading.Lock()
         self._exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
+        # crash recovery for page-snapshot staging dirs, HERE and not in
+        # _gc: at construction no writer is running, so any staging dir is
+        # wreckage of a dead process.  _gc runs on the async writer thread,
+        # and the trainer stages the NEXT snapshot before save() joins the
+        # previous write — sweeping there deletes a live staging dir (the
+        # schedule audit's flush-vs-save cell caught exactly this).
+        for name in os.listdir(directory):
+            if re.fullmatch(r"pages_staging_\d+", name):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.save_every == 0
@@ -190,7 +204,8 @@ class CheckpointManager:
         try:
             self._write(step, host_tree, meta, extras_dir=extras_dir)
         except BaseException as e:   # noqa: BLE001 — re-raised from wait()
-            self._exc = e
+            with self._lock:
+                self._exc = e
 
     def save(self, step: int, tree: Pytree, meta: Optional[Dict] = None,
              block: bool = False, extras_dir: Optional[str] = None):
@@ -218,8 +233,9 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        if self._exc is not None:
+        with self._lock:
             exc, self._exc = self._exc, None
+        if exc is not None:
             raise exc
 
     def _gc(self):
@@ -238,11 +254,10 @@ class CheckpointManager:
         for name in names:
             if re.fullmatch(r"step_\d+\.(tmp|old)", name):
                 shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
-            # a page-snapshot staging dir is consumed (renamed away) by
-            # save_tree; one still present belongs to a save that crashed
-            # before the rename
-            if re.fullmatch(r"pages_staging_\d+", name):
-                shutil.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+            # pages_staging_* dirs are deliberately NOT swept here: _gc runs
+            # on the async writer thread, and the trainer may already have
+            # staged the NEXT save's snapshot — that dir is live, not
+            # wreckage.  Dead staging dirs are swept at manager construction.
         if self.spill_dir and os.path.isdir(self.spill_dir):
             # DiskStore write-behind wreckage: a kill mid page write leaves
             # <page>.tmp next to the (still complete) old page — orphaned

@@ -140,16 +140,6 @@ class DiskStore:
         self._in_flight: Dict[Tuple[str, int], Tuple[np.ndarray, np.ndarray]] = {}
         self._bg_error: Optional[BaseException] = None
 
-        self._write_q: "queue.Queue" = queue.Queue()
-        self._read_q: "queue.Queue" = queue.Queue()
-        self._stop = threading.Event()
-        self._writer = threading.Thread(
-            target=self._writer_loop, name="diskstore-writer", daemon=True)
-        self._reader = threading.Thread(
-            target=self._reader_loop, name="diskstore-readahead", daemon=True)
-        self._writer.start()
-        self._reader.start()
-
         self._stats = {
             "page_hits": 0.0, "page_misses": 0.0, "pages_evicted": 0.0,
             "disk_bytes_read": 0.0, "disk_bytes_written": 0.0,
@@ -161,10 +151,23 @@ class DiskStore:
             "disk_bytes_read": 0.0,
         }
 
+        # workers start LAST: every attribute they touch is published
+        # before the first start() (start() is the happens-before edge)
+        self._write_q: "queue.Queue" = queue.Queue()
+        self._read_q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._writer = threading.Thread(
+            target=self._writer_loop, name="diskstore-writer", daemon=True)
+        self._reader = threading.Thread(
+            target=self._reader_loop, name="diskstore-readahead", daemon=True)
+        self._writer.start()
+        self._reader.start()
+
     # ------------------------------------------------------------- lifecycle
     def _check_bg(self):
-        if self._bg_error is not None:
+        with self._lock:
             err, self._bg_error = self._bg_error, None
+        if err is not None:
             raise RuntimeError("DiskStore background IO failed") from err
 
     def close(self):
@@ -207,7 +210,8 @@ class DiskStore:
                 vals = np.zeros((stop - start, t.dim), t.dtype)
             acc = np.full((stop - start, t.dim), accum_init, np.float32)
             _write_page_atomic(path, vals, acc)
-            self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
+            with self._lock:
+                self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
 
     def has_table(self, name: str) -> bool:
         return name in self._tables
@@ -218,35 +222,57 @@ class DiskStore:
                 "page_rows": t.page_rows}
 
     # ----------------------------------------------------------- page cache
-    def _load_page(self, t: _TableFile, p: int,
-                   stats: Optional[dict] = None) -> Tuple[np.ndarray, np.ndarray]:
-        """Return page p's (rows, accum) arrays, faulting in if needed.
+    def _page_apply(self, t: _TableFile, p: int, serve: bool = False,
+                    fn=None, dirty: bool = False) -> Tuple[np.ndarray, np.ndarray]:
+        """Run ``fn(vals, acc)`` on page ``p``'s cached arrays under the
+        lock, faulting the page in first if needed.
 
-        Caller holds the lock.  In-flight write copies win over the file —
-        they are strictly newer and the file may be mid-replace.  ``stats``
-        selects the meter bucket (training by default; ``gather(serve=
-        True)`` passes the serve bucket so inference page traffic never
-        pollutes training-interval stats).
+        The critical section never touches the filesystem: a page fault
+        releases the lock, reads the file, reacquires, and re-checks — an
+        in-flight write-behind copy observed on reacquire wins over the
+        file bytes (it is strictly newer, and the file may be
+        mid-replace).  ``dirty=True`` marks the page dirty in the *same*
+        lock hold as the mutation, so an eviction can never classify a
+        just-mutated page as clean.  ``serve`` selects the meter bucket
+        (training by default; the read-only lookup path passes
+        ``serve=True`` so inference page traffic never pollutes
+        training-interval stats).
         """
-        if stats is None:
-            stats = self._stats
         key = (t.dir, p)
-        got = self._cache.get(key)
-        if got is not None:
-            self._cache.move_to_end(key)
-            stats["page_hits"] += 1
-            return got
-        stats["page_misses"] += 1
-        pending = self._in_flight.get(key)
-        if pending is not None:
-            vals, acc = pending[0].copy(), pending[1].copy()
-        else:
+        from_file = None
+        first = True
+        while True:
+            with self._lock:
+                stats = self._serve_stats if serve else self._stats
+                got = self._cache.get(key)
+                if got is not None:
+                    self._cache.move_to_end(key)
+                    if first:
+                        stats["page_hits"] += 1
+                else:
+                    if first:
+                        stats["page_misses"] += 1
+                    pending = self._in_flight.get(key)
+                    if pending is not None:
+                        got = (pending[0].copy(), pending[1].copy())
+                    elif from_file is not None:
+                        got = from_file
+                        stats["disk_bytes_read"] += (
+                            got[0].nbytes + got[1].nbytes)
+                    if got is not None:
+                        self._cache[key] = got
+                        self._evict_lru(keep=key, stats=stats)
+                if got is not None:
+                    if dirty:
+                        self._dirty.add(key)
+                    if fn is not None:
+                        fn(*got)
+                    return got
+                first = False
+            # page fault: read the file with the lock RELEASED — a miss
+            # must not stall the other threads behind SSD latency
             with np.load(t.page_path(p)) as z:
-                vals, acc = z["rows"], z["accum"]
-            stats["disk_bytes_read"] += vals.nbytes + acc.nbytes
-        self._cache[key] = (vals, acc)
-        self._evict_lru(keep=key, stats=stats)
-        return self._cache[key]
+                from_file = (z["rows"], z["accum"])
 
     def _evict_lru(self, keep=None, stats: Optional[dict] = None):
         """Shrink the cache to capacity; dirty victims go to the writer."""
@@ -260,15 +286,20 @@ class DiskStore:
                     break
             else:
                 return
-            vals, acc = self._cache.pop(key)
+            entry = self._cache.pop(key)
             stats["pages_evicted"] += 1
             if key in self._dirty:
                 self._dirty.discard(key)
-                self._in_flight[key] = (vals, acc)
-                self._write_q.put((key, vals, acc))
+                # the queued tuple IS the lookaside entry: the writer
+                # retires the lookaside only if it still holds this exact
+                # object (a newer flush may have replaced it)
+                self._in_flight[key] = entry
+                self._write_q.put((key, entry))
 
     def _table_of(self, key) -> _TableFile:
-        for t in self._tables.values():
+        with self._lock:
+            tables = list(self._tables.values())
+        for t in tables:
             if t.dir == key[0]:
                 return t
         raise KeyError(key)
@@ -290,14 +321,15 @@ class DiskStore:
         uids = np.asarray(uids, np.int64)
         out_v = np.empty((len(uids), t.dim), t.dtype)
         out_a = np.empty((len(uids), t.dim), np.float32)
-        stats = self._serve_stats if serve else self._stats
-        with self._lock:
-            for p in np.unique(uids // t.page_rows):
-                vals, acc = self._load_page(t, int(p), stats=stats)
-                sel = uids // t.page_rows == p
-                r = uids[sel] - int(p) * t.page_rows
+        for p in np.unique(uids // t.page_rows):
+            sel = uids // t.page_rows == p
+            r = uids[sel] - int(p) * t.page_rows
+
+            def copy_out(vals, acc, sel=sel, r=r):
                 out_v[sel] = vals[r]
                 out_a[sel] = acc[r]
+
+            self._page_apply(t, int(p), serve=serve, fn=copy_out)
         return out_v, out_a
 
     def scatter(self, name: str, uids: np.ndarray, rows: np.ndarray,
@@ -309,14 +341,15 @@ class DiskStore:
         uids = np.asarray(uids, np.int64)
         rows = np.asarray(rows)
         accum = np.asarray(accum)
-        with self._lock:
-            for p in np.unique(uids // t.page_rows):
-                vals, acc = self._load_page(t, int(p))
-                sel = uids // t.page_rows == p
-                r = uids[sel] - int(p) * t.page_rows
+        for p in np.unique(uids // t.page_rows):
+            sel = uids // t.page_rows == p
+            r = uids[sel] - int(p) * t.page_rows
+
+            def write_in(vals, acc, sel=sel, r=r):
                 vals[r] = rows[sel].astype(t.dtype, copy=False)
                 acc[r] = accum[sel]
-                self._dirty.add((t.dir, int(p)))
+
+            self._page_apply(t, int(p), fn=write_in, dirty=True)
 
     def readahead(self, name: str, uids: np.ndarray):
         """Queue the pages holding ``uids`` for background fault-in.
@@ -345,9 +378,9 @@ class DiskStore:
             dirty = list(self._dirty)
             self._dirty.clear()
             for key in dirty:
-                vals, acc = self._cache[key]
-                self._in_flight[key] = (vals, acc)
-                self._write_q.put((key, vals, acc))
+                entry = self._cache[key]
+                self._in_flight[key] = entry
+                self._write_q.put((key, entry))
         self._write_q.join()
         self._check_bg()
 
@@ -374,21 +407,28 @@ class DiskStore:
         self._check_bg()
         with self._lock:
             self._dirty.clear()
-        # drain in-flight write-behind: a stale page write landing AFTER the
-        # restore copy would silently corrupt the resumed state
+        # drain write-behind AND read-ahead: a stale page write landing
+        # AFTER the restore copy — or a read-ahead faulting pre-restore
+        # file bytes back into the cache mid-copy — would silently corrupt
+        # the resumed state
         self._write_q.join()
+        self._read_q.join()
         self._check_bg()
         with self._lock:
             self._cache.clear()
-            for name, t in self._tables.items():
-                d = os.path.join(src_dir, name)
-                for p in range(t.n_pages):
-                    src = os.path.join(d, _PAGE_FMT % p)
-                    if not os.path.exists(src):
-                        raise FileNotFoundError(
-                            f"checkpoint missing page {src} for table "
-                            f"{name!r} — layout mismatch?")
-                    _copy_file_atomic(src, t.page_path(p))
+            self._in_flight.clear()
+            tables = list(self._tables.items())
+        # copy with the lock released: both queues are drained, the
+        # workers are idle, and only this (main) thread faults pages in
+        for name, t in tables:
+            d = os.path.join(src_dir, name)
+            for p in range(t.n_pages):
+                src = os.path.join(d, _PAGE_FMT % p)
+                if not os.path.exists(src):
+                    raise FileNotFoundError(
+                        f"checkpoint missing page {src} for table "
+                        f"{name!r} — layout mismatch?")
+                _copy_file_atomic(src, t.page_path(p))
 
     def stats(self) -> dict:
         with self._lock:
@@ -401,40 +441,59 @@ class DiskStore:
             return dict(self._serve_stats)
 
     # ------------------------------------------------------------ bg threads
+    #
+    # Each loop is get -> process -> task_done; the processing bodies are
+    # separate methods so the schedule audit (repro.analysis.sched_audit)
+    # can replay queued work inline at chosen yield points.  Worker
+    # exceptions are published under the lock and re-raised on the main
+    # thread by _check_bg at the next API call.
+    def _process_write_item(self, item):
+        key, entry = item
+        try:
+            vals, acc = entry
+            t = self._table_of(key)
+            _write_page_atomic(t.page_path(key[1]), vals, acc)
+            with self._lock:
+                self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
+                # only retire the lookaside if it still holds OUR entry (a
+                # newer flush may have queued a fresher write)
+                if self._in_flight.get(key) is entry:
+                    del self._in_flight[key]
+        except BaseException as e:  # surfaced via _check_bg
+            with self._lock:
+                self._bg_error = e
+
+    def _process_read_item(self, item):
+        name, p = item
+        try:
+            with self._lock:
+                t = self._tables.get(name)
+                stopping = self._stop.is_set()
+            if t is not None and not stopping:
+                self._page_apply(t, p)
+        except BaseException as e:  # surfaced via _check_bg
+            with self._lock:
+                self._bg_error = e
+
     def _writer_loop(self):
         while True:
             item = self._write_q.get()
-            if item is None:
-                self._write_q.task_done()
-                return
-            key, vals, acc = item
             try:
-                t = self._table_of(key)
-                _write_page_atomic(t.page_path(key[1]), vals, acc)
-                with self._lock:
-                    self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
-                    # only retire the lookaside if it's still OUR copy (a
-                    # newer flush may have queued a fresher write)
-                    if self._in_flight.get(key) is (vals, acc):
-                        del self._in_flight[key]
-            except BaseException as e:  # surfaced via _check_bg
-                self._bg_error = e
+                if item is None:
+                    return
+                self._process_write_item(item)
             finally:
                 self._write_q.task_done()
 
     def _reader_loop(self):
         while True:
             item = self._read_q.get()
-            if item is None:
-                return
-            name, p = item
             try:
-                with self._lock:
-                    t = self._tables.get(name)
-                    if t is not None and not self._stop.is_set():
-                        self._load_page(t, p)
-            except BaseException as e:
-                self._bg_error = e
+                if item is None:
+                    return
+                self._process_read_item(item)
+            finally:
+                self._read_q.task_done()
 
 
 # ------------------------------------------------------------------ helpers

@@ -15,8 +15,23 @@ import time
 from typing import Any, Callable, Iterator, Optional
 
 
+class _ProducerFailure:
+    """In-band envelope shipping a producer-thread exception to the
+    consumer — the daemon must never die silently (same contract as
+    ``CheckpointManager.wait`` re-raising ``_exc``)."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class PrefetchPipeline:
-    """Wrap a batch iterator with a depth-bounded background prefetcher."""
+    """Wrap a batch iterator with a depth-bounded background prefetcher.
+
+    Producer-thread failures (a raising ``source`` or ``stage_fn``) are
+    captured and re-raised by ``__next__`` on the consumer thread — a dead
+    producer surfaces as an exception at the next batch, not as a silent
+    end-of-stream.
+    """
 
     def __init__(
         self,
@@ -35,6 +50,16 @@ class PrefetchPipeline:
         self._thread = threading.Thread(target=self._produce, daemon=True)
         self._thread.start()
 
+    def _put(self, item) -> bool:
+        """Bounded put that keeps honoring ``close()``; False = shut down."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _produce(self):
         try:
             for item in self.source:
@@ -43,14 +68,11 @@ class PrefetchPipeline:
                 t0 = time.perf_counter()
                 staged = self.stage_fn(item)
                 self.read_seconds += time.perf_counter() - t0
-                while not self._stop.is_set():
-                    try:
-                        self._q.put(staged, timeout=0.1)
-                        break
-                    except queue.Full:
-                        continue
-        finally:
-            self._q.put(None)
+                if not self._put(staged):
+                    return
+            self._put(None)   # clean end-of-stream sentinel
+        except BaseException as e:   # re-raised by __next__ on the consumer
+            self._put(_ProducerFailure(e))
 
     def __iter__(self):
         return self
@@ -62,6 +84,12 @@ class PrefetchPipeline:
         self.batches += 1
         if item is None:
             raise StopIteration
+        if isinstance(item, _ProducerFailure):
+            # keep the failure in-band so every subsequent next() re-raises
+            # instead of blocking on a queue the dead producer never feeds
+            self._q.put(item)
+            raise RuntimeError(
+                "PrefetchPipeline producer failed") from item.exc
         return item
 
     def close(self):
@@ -71,6 +99,9 @@ class PrefetchPipeline:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        # joined, not abandoned: shutdown is ordered after the producer's
+        # last queue operation (its put loop observes _stop within 100ms)
+        self._thread.join(timeout=30)
 
 
 def serialized_baseline(source: Iterator[Any], stage_fn, n: int):

@@ -1,0 +1,37 @@
+"""Seeded violations for ``blocking-io-under-lock`` (R6).
+
+``flush_bad`` does filesystem IO inside the critical section directly;
+``_persist`` does the same transitively (every call site holds the lock,
+so the lock-held fixpoint marks it locked); ``flush_helper``'s call to it
+is the third witness class.  ``flush_good`` shows the copy-then-write
+idiom that must stay silent.
+"""
+import json
+import threading
+
+
+class Spiller:
+    def __init__(self, path):
+        self.path = path
+        self._lock = threading.Lock()
+        self._pages = {}
+
+    def flush_bad(self):
+        with self._lock:
+            with open(self.path, "w") as f:   # LINT: blocking-io-under-lock
+                json.dump(self._pages, f)     # LINT: blocking-io-under-lock
+
+    def _persist(self):
+        # only ever called with the lock held -> lock-held by fixpoint
+        with open(self.path, "w") as f:       # LINT: blocking-io-under-lock
+            json.dump(self._pages, f)         # LINT: blocking-io-under-lock
+
+    def flush_helper(self):
+        with self._lock:
+            self._persist()                   # LINT: blocking-io-under-lock
+
+    def flush_good(self):
+        with self._lock:
+            snapshot = dict(self._pages)
+        with open(self.path, "w") as f:
+            json.dump(snapshot, f)

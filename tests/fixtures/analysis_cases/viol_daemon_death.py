@@ -1,0 +1,58 @@
+"""Seeded violation for ``silent-daemon-death`` (R9).
+
+``SilentWorker._run`` can die without anyone noticing; ``LoudWorker``
+publishes the exception into guarded instance state for the main thread
+to re-raise at the next boundary (the repo-wide idiom).
+"""
+import queue
+import threading
+
+
+class SilentWorker:
+    def __init__(self):
+        self._q = queue.Queue()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):               # LINT: silent-daemon-death
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            item()
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()
+
+
+class LoudWorker:
+    """Negative control: failures cross back to the main thread."""
+
+    def __init__(self):
+        self._q = queue.Queue()
+        self._lock = threading.Lock()
+        self._exc = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        try:
+            while True:
+                item = self._q.get()
+                if item is None:
+                    return
+                item()
+        except BaseException as e:
+            with self._lock:
+                self._exc = e
+
+    def check(self):
+        with self._lock:
+            exc, self._exc = self._exc, None
+        if exc is not None:
+            raise exc
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()

@@ -1,0 +1,40 @@
+"""Seeded violations for ``lock-order-inversion`` (R7).
+
+``transfer_ab`` and ``transfer_call`` take A then B (the latter through a
+helper, exercising call-graph transitivity); ``transfer_ba`` takes B then
+A — every witness of the inverted pair is reported.  ``double_a`` shows
+that re-entering the same lock (RLock style) is not an inversion.
+"""
+import threading
+
+_lock_a = threading.Lock()
+_lock_b = threading.Lock()
+_rlock = threading.RLock()
+
+
+def transfer_ab(src, dst):
+    with _lock_a:
+        with _lock_b:              # LINT: lock-order-inversion
+            dst.update(src)
+
+
+def transfer_ba(src, dst):
+    with _lock_b:
+        with _lock_a:              # LINT: lock-order-inversion
+            src.update(dst)
+
+
+def _grab_b(dst):
+    with _lock_b:
+        dst.clear()
+
+
+def transfer_call(dst):
+    with _lock_a:
+        _grab_b(dst)               # LINT: lock-order-inversion
+
+
+def double_a(fn):
+    with _rlock:
+        with _rlock:               # reentrant: same id, not an inversion
+            return fn()

@@ -1,0 +1,75 @@
+"""Seeded violation for ``unguarded-shared-state`` (R5).
+
+``Meter.count`` is written by the worker thread and read by the main
+thread with no common lock; ``_exc`` (guarded on both sides) and
+``GuardedMeter`` (fully guarded) are negative controls.
+"""
+import queue
+import threading
+
+
+class Meter:
+    def __init__(self):
+        self.count = 0
+        self._exc = None
+        self._lock = threading.Lock()
+        self._q = queue.Queue()
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        try:
+            while not self._stop.is_set():
+                item = self._q.get()
+                if item is None:
+                    return
+                self.count += 1    # LINT: unguarded-shared-state
+        except BaseException as e:
+            with self._lock:
+                self._exc = e
+
+    def check(self):
+        with self._lock:
+            exc, self._exc = self._exc, None
+        if exc is not None:
+            raise exc
+
+    def value(self):
+        return self.count          # racy read: the main-domain side
+
+    def close(self):
+        self._stop.set()
+        self._q.put(None)
+        self._t.join()
+
+
+class GuardedMeter:
+    """Negative control: both domains take the same lock."""
+
+    def __init__(self):
+        self.count = 0
+        self._lock = threading.Lock()
+        self._q = queue.Queue()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        try:
+            while True:
+                item = self._q.get()
+                if item is None:
+                    return
+                with self._lock:
+                    self.count += 1
+        except BaseException as e:
+            with self._lock:
+                self._exc = e
+
+    def value(self):
+        with self._lock:
+            return self.count
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()

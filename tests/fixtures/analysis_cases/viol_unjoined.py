@@ -1,0 +1,67 @@
+"""Seeded violations for ``unjoined-worker`` (R8).
+
+``FireAndForget`` starts a bound worker no code ever joins; ``AnonStart``
+chains ``.start()`` on an anonymous Thread nothing can ever join.
+``Joined`` is the negative control (sentinel + join at close).
+"""
+import queue
+import threading
+
+
+class FireAndForget:
+    def __init__(self):
+        self._q = queue.Queue()
+        self._exc = None
+        self._t = threading.Thread(target=self._run, daemon=True)  # LINT: unjoined-worker
+        self._t.start()
+
+    def _run(self):
+        try:
+            while True:
+                item = self._q.get()
+                if item is None:
+                    return
+        except BaseException as e:
+            self._exc = e
+
+    def close(self):
+        self._q.put(None)   # asks the worker to exit, but never joins it
+
+
+class AnonStart:
+    def __init__(self):
+        self._q = queue.Queue()
+        self._exc = None
+        threading.Thread(target=self._run, daemon=True).start()  # LINT: unjoined-worker
+
+    def _run(self):
+        try:
+            while True:
+                item = self._q.get()
+                if item is None:
+                    return
+        except BaseException as e:
+            self._exc = e
+
+
+class Joined:
+    """Negative control: shutdown is ordered after the worker's last op."""
+
+    def __init__(self):
+        self._q = queue.Queue()
+        self._exc = None
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self):
+        try:
+            while True:
+                item = self._q.get()
+                if item is None:
+                    return
+        except BaseException as e:
+            self._exc = e
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()

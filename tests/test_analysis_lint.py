@@ -36,6 +36,11 @@ def lines_for(findings, rel: str, rule: str):
     ("viol_dead_knob.py", "dead-config-knob"),
     ("viol_nondet.py", "nondeterminism-in-trace"),
     ("hot/runtime/trainer.py", "undonated-hot-jit"),
+    ("viol_unguarded_state.py", "unguarded-shared-state"),
+    ("viol_blocking_io_lock.py", "blocking-io-under-lock"),
+    ("viol_lock_order.py", "lock-order-inversion"),
+    ("viol_unjoined.py", "unjoined-worker"),
+    ("viol_daemon_death.py", "silent-daemon-death"),
 ])
 def test_rule_catches_exact_lines(findings, rel, rule):
     expected = marked_lines(rel, rule)
@@ -94,12 +99,63 @@ def test_clean_fixture_no_false_positives(findings):
     assert not [f for f in findings if f.path == "clean.py"]
 
 
+# -------------------------------------------------- concurrency rules (R5-R9)
+def test_unguarded_state_names_both_domains(findings):
+    (f,) = [f for f in findings if f.rule == "unguarded-shared-state"]
+    assert f.detail == "Meter.count"
+    assert f.symbol == "Meter._run"          # anchored at the worker write
+    assert "Meter.value" in f.message        # ...citing the main-thread side
+    # GuardedMeter (same shape, locked both sides) stays silent — asserted
+    # by the exact-line parametrize above
+
+
+def test_blocking_io_details(findings):
+    by_line = {
+        f.line: f.detail for f in findings
+        if f.rule == "blocking-io-under-lock"
+    }
+    # direct IO under a lexical lock, IO inside a helper that is lock-held
+    # by call-site fixpoint, and the lock-held call to that helper
+    assert sorted(by_line.values()) == [
+        "_persist()", "json.dump", "json.dump", "open", "open",
+    ]
+
+
+def test_lock_order_reports_both_orders(findings):
+    inv = [f for f in findings if f.rule == "lock-order-inversion"]
+    details = sorted(f.detail for f in inv)
+    a, b = "viol_lock_order._lock_a", "viol_lock_order._lock_b"
+    # a->b witnessed twice (nested with + call transitivity), b->a once
+    assert details == [f"{a} -> {b}", f"{a} -> {b}", f"{b} -> {a}"]
+    # every message points at a witness of the opposite order
+    assert all("opposite order is taken at viol_lock_order.py:" in f.message
+               for f in inv)
+
+
+def test_unjoined_worker_labels(findings):
+    uj = {f.detail for f in findings if f.rule == "unjoined-worker"}
+    assert uj == {"FireAndForget._run", "AnonStart._run"}
+    # Joined (sentinel + join at close) stays silent
+
+
+def test_silent_daemon_death_target(findings):
+    (f,) = [f for f in findings if f.rule == "silent-daemon-death"]
+    assert f.detail == "SilentWorker._run"
+    assert f.symbol == "SilentWorker._run"
+    # LoudWorker's guarded except-capture + check() re-raise stays silent
+
+
 def test_summarize_counts(findings):
     s = summarize(findings)
     assert s["host-sync-in-jit"] == 5
     assert s["dead-config-knob"] == 1
     assert s["nondeterminism-in-trace"] == 3
     assert s["undonated-hot-jit"] == 2
+    assert s["unguarded-shared-state"] == 1
+    assert s["blocking-io-under-lock"] == 5
+    assert s["lock-order-inversion"] == 3
+    assert s["unjoined-worker"] == 2
+    assert s["silent-daemon-death"] == 1
 
 
 # ------------------------------------------------------------------ baseline
@@ -165,8 +221,45 @@ def test_cli_report_artifact(tmp_path):
     assert data["new"] and not data["baselined"]
     assert {f["rule"] for f in data["new"]} == {
         "host-sync-in-jit", "dead-config-knob", "nondeterminism-in-trace",
-        "undonated-hot-jit",
+        "undonated-hot-jit", "unguarded-shared-state",
+        "blocking-io-under-lock", "lock-order-inversion", "unjoined-worker",
+        "silent-daemon-death",
     }
+    assert data["sched_checks"] == []        # lint-only run: key still there
+
+
+def test_cli_github_format(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    bl = tmp_path / "baseline.json"
+    assert main(["--lint", "--src", str(FIXTURES), "--baseline", str(bl),
+                 "--format", "github", "-q"]) == 1
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln.startswith("::error ")]
+    assert lines, "github format must emit ::error workflow commands"
+    # one annotation per finding, anchored at the marked violation line
+    (anno,) = [ln for ln in lines if "title=silent-daemon-death" in ln]
+    (exp_line,) = marked_lines("viol_daemon_death.py", "silent-daemon-death")
+    assert f"file=viol_daemon_death.py,line={exp_line}," in anno
+    assert "FAIL" not in out                 # text format is replaced
+
+
+def test_cli_strict_baseline_fails_on_stale(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+
+    bl = tmp_path / "baseline.json"
+    argv = ["--lint", "--src", str(FIXTURES), "--baseline", str(bl), "-q"]
+    assert main(argv + ["--update-baseline"]) == 0
+    # plant a stale entry: it matches nothing in the fixtures
+    data = json.loads(bl.read_text())
+    data["entries"].append({"rule": "host-sync-in-jit", "file": "gone.py",
+                            "symbol": "s", "detail": "float()",
+                            "justification": "stale"})
+    bl.write_text(json.dumps(data))
+    capsys.readouterr()
+    assert main(argv) == 0                   # default: stale only warns
+    assert main(argv + ["--strict-baseline"]) == 1
+    assert "stale baseline" in capsys.readouterr().out
 
 
 def test_repo_src_is_lint_clean():

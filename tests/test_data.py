@@ -87,6 +87,48 @@ def test_serialized_baseline():
     assert secs >= 0.0
 
 
+def test_prefetch_pipeline_producer_exception_reraised():
+    def failing_source():
+        yield 1
+        yield 2
+        raise ValueError("disk gone")
+
+    pipe = PrefetchPipeline(failing_source(), depth=2)
+    assert next(pipe) == 1
+    assert next(pipe) == 2
+    with pytest.raises(RuntimeError, match="producer failed") as ei:
+        next(pipe)
+    assert isinstance(ei.value.__cause__, ValueError)
+    assert str(ei.value.__cause__) == "disk gone"
+    # sticky: every subsequent next() re-raises instead of blocking on a
+    # queue the dead producer will never feed
+    with pytest.raises(RuntimeError, match="producer failed"):
+        next(pipe)
+    pipe.close()
+
+
+def test_prefetch_pipeline_stage_fn_exception_reraised():
+    def bad_stage(x):
+        if x == 3:
+            raise KeyError("bad batch")
+        return x
+
+    pipe = PrefetchPipeline(iter(range(6)), depth=2, stage_fn=bad_stage)
+    assert [next(pipe) for _ in range(3)] == [0, 1, 2]
+    with pytest.raises(RuntimeError, match="producer failed") as ei:
+        next(pipe)
+    assert isinstance(ei.value.__cause__, KeyError)
+    pipe.close()
+    assert not pipe._thread.is_alive()
+
+
+def test_prefetch_pipeline_close_joins_producer():
+    pipe = PrefetchPipeline(iter(range(10_000)), depth=2)
+    assert next(pipe) == 0
+    pipe.close()
+    assert not pipe._thread.is_alive()
+
+
 # --------------------------------------------------------------- sampler
 def test_neighbor_sampler_edges_valid():
     rng = np.random.default_rng(0)

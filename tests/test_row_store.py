@@ -157,12 +157,18 @@ def test_stray_tmp_swept_on_init_and_by_ckpt_gc(tmp_path):
     wreck.write_bytes(b"torn half-written page")
     # (a) CheckpointManager GC sweeps spill wreckage alongside ckpt wreckage
     ck = tmp_path / "ck"
+    os.makedirs(ck / "pages_staging_00005")   # crashed pre-rename staging
     mgr = CheckpointManager(str(ck), keep_last=2, save_every=1,
                             spill_dir=str(spill))
-    os.makedirs(ck / "pages_staging_00005")   # crashed pre-rename staging
+    # dead staging dirs are swept at CONSTRUCTION (no writer can be live)
+    assert not (ck / "pages_staging_00005").exists()
+    # ...but never by _gc: it runs on the async writer thread, and a
+    # staging dir present then may belong to the NEXT in-flight save
+    # (the schedule audit's flush-vs-save cell caught _gc deleting one)
+    os.makedirs(ck / "pages_staging_00007")
     mgr.save(1, {"a": np.zeros(3)})
     assert not wreck.exists()
-    assert not (ck / "pages_staging_00005").exists()
+    assert (ck / "pages_staging_00007").exists()
     # (b) a fresh boot over the same dir also sweeps (no manager needed)
     wreck.write_bytes(b"torn again")
     st2 = DiskStore(str(spill), page_rows=8)
