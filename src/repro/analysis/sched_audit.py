@@ -21,6 +21,13 @@ deterministic bit ``Schedule``:
   after the mutation (eviction vs in-flight read-ahead boundary).
 - ``flush``: bit=1 -> one parked write lands before the flush enqueues the
   rest (write-behind flush vs ``save()`` boundary).
+- *fault window* (``DiskStore._fault_hook``): the store calls the hook
+  with the lock released, between a page fault's file read and its
+  reacquire — the one schedule the queue-level yield points above cannot
+  reach, because a fault replayed atomically never observes another
+  thread's scatter + write-behind completing mid-read.  The
+  ``fault-vs-writeback`` cell injects exactly that interference and
+  checks the generation guard discards the stale file bytes.
 
 ``SteppedCkpt`` gives the checkpoint async writer the same treatment: the
 write body runs at a schedule-chosen point (immediately, or deferred to
@@ -525,6 +532,82 @@ def cell_prefetch_vs_serve(schedules: Sequence[Schedule],
     return results
 
 
+def cell_fault_vs_writeback(schedules: Sequence[Schedule]) -> List[CheckResult]:
+    """Page-fault file read vs write-behind completion: while a fault holds
+    the store lock RELEASED for its ``np.load``, a racing thread (replayed
+    inline through ``DiskStore._fault_hook``) faults the same page,
+    scatters it, eviction queues the dirty page — and, on schedule bit 1,
+    the write-behind lands and the lookaside retires before the fault
+    reacquires.  Both orders must surface the scattered values (the
+    generation guard forces the fault to discard its pre-scatter file
+    bytes and re-read) and converge to identical on-disk pages."""
+    from repro.core.row_store import DiskStore
+
+    target = "sched/fault-vs-writeback"
+    results: List[CheckResult] = []
+    new_rows = np.full((2, 2), 5.0, np.float32)
+    new_acc = np.full((2, 2), 1.0, np.float32)
+    ref_pages: Optional[Dict[str, bytes]] = None
+    ref_name = schedules[0].name if schedules else ""
+    for sch in schedules:
+        spill = tempfile.mkdtemp(prefix="sched_audit_fault_")
+        try:
+            st = DiskStore(spill, page_rows=4, page_cache_pages=1)
+            st.create_table("t", rows=8, dim=2, dtype=np.float32)
+            _retire_workers(st)
+            st._write_q = _PumpQueue(st._process_write_item)
+            st._read_q = _PumpQueue(st._process_read_item)
+            s = sch.fresh()
+            fired: List[tuple] = []
+
+            def interfere(key, st=st, s=s, fired=fired):
+                # one-shot, page 0 only — the inner scatters re-enter the
+                # fault path (pages 0 and 1) and must not recurse
+                if fired or key[1] != 0:
+                    return
+                fired.append(key)
+                st.scatter("t", np.array([0, 1], np.int64),
+                           new_rows, new_acc)
+                # faulting page 1 into the 1-page cache evicts dirty
+                # page 0 into the (parked) write-behind queue
+                st.scatter("t", np.array([4], np.int64),
+                           np.full((1, 2), 9.0, np.float32),
+                           np.full((1, 2), 2.0, np.float32))
+                if s.take():
+                    # the hazardous order: the write lands and the
+                    # lookaside retires INSIDE the fault window
+                    st._write_q.join()
+
+            st._fault_hook = interfere
+            v, a = st.gather("t", np.arange(4, dtype=np.int64))
+            st._fault_hook = None
+            ok = (bool(fired)
+                  and np.array_equal(v[:2], new_rows)
+                  and np.array_equal(a[:2], new_acc)
+                  and np.array_equal(v[2:], np.zeros((2, 2), np.float32)))
+            results.append(CheckResult(
+                target, "trajectory", ok,
+                "" if ok else (
+                    f"schedule {sch.name}: fault window lost the racing "
+                    f"scatter (hook fired={bool(fired)}, "
+                    f"rows={v[:2].tolist()})")))
+            results.extend(_store_state_checks(
+                f"{target}/{sch.name}", st, spill))
+            pages = _page_bytes(spill)
+            if ref_pages is None:
+                ref_pages = pages
+            else:
+                results.append(CheckResult(
+                    target, "pages", pages == ref_pages,
+                    "" if pages == ref_pages else (
+                        f"schedule {sch.name}: final page files differ "
+                        f"from {ref_name}")))
+            st.close()
+        finally:
+            shutil.rmtree(spill, ignore_errors=True)
+    return results
+
+
 def cell_pipeline_producer(schedules: Sequence[Schedule],
                            steps: int = 6) -> List[CheckResult]:
     """The data-pipeline producer thread: pipeline-fed training must match
@@ -582,6 +665,7 @@ def cell_pipeline_producer(schedules: Sequence[Schedule],
 # ------------------------------------------------------------------ gate
 _CELLS = {
     "evict-vs-readahead": (cell_evict_vs_readahead, _ROW_STORE_PATH),
+    "fault-vs-writeback": (cell_fault_vs_writeback, _ROW_STORE_PATH),
     "flush-vs-save": (cell_flush_vs_save, _TRAINER_PATH),
     "prefetch-vs-serve": (cell_prefetch_vs_serve, _SERVE_CTR_PATH),
     "pipeline-producer": (cell_pipeline_producer, _PIPELINE_PATH),

@@ -34,6 +34,11 @@ Pytree = Any
 
 _SEP = "/"
 
+# a pages_staging_* dir older than this is dead-process wreckage; younger
+# ones may belong to a live trainer sharing the checkpoint directory
+# (staging is written synchronously and renamed away within one save)
+_STAGING_STALE_S = 3600.0
+
 
 def _flatten_with_names(tree: Pytree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -181,15 +186,27 @@ class CheckpointManager:
         self._exc: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
         # crash recovery for page-snapshot staging dirs, HERE and not in
-        # _gc: at construction no writer is running, so any staging dir is
-        # wreckage of a dead process.  _gc runs on the async writer thread,
-        # and the trainer stages the NEXT snapshot before save() joins the
-        # previous write — sweeping there deletes a live staging dir (the
-        # schedule audit's flush-vs-save cell caught exactly this).
+        # _gc: THIS manager has no writer running at construction, so a
+        # staging dir it sees is not its own.  _gc runs on the async
+        # writer thread, and the trainer stages the NEXT snapshot before
+        # save() joins the previous write — sweeping there deletes a live
+        # staging dir (the schedule audit's flush-vs-save cell caught
+        # exactly this).  The sweep is age-gated because the directory
+        # may be shared with ANOTHER live process (an eval/inspection job
+        # constructing its own manager against a running trainer's
+        # directory): a trainer's staging dir lives seconds, so only dirs
+        # older than _STAGING_STALE_S can be dead-process wreckage.
+        now = time.time()
         for name in os.listdir(directory):
-            if re.fullmatch(r"pages_staging_\d+", name):
-                shutil.rmtree(os.path.join(directory, name),
-                              ignore_errors=True)
+            if not re.fullmatch(r"pages_staging_\d+", name):
+                continue
+            path = os.path.join(directory, name)
+            try:
+                age = now - os.path.getmtime(path)
+            except OSError:
+                continue   # vanished under us: someone else is live here
+            if age > _STAGING_STALE_S:
+                shutil.rmtree(path, ignore_errors=True)
 
     def should_save(self, step: int) -> bool:
         return step > 0 and step % self.save_every == 0

@@ -138,6 +138,17 @@ class DiskStore:
         # pages handed to the writer thread but not yet on disk: reads hit
         # this lookaside before ever touching the (possibly mid-write) file
         self._in_flight: Dict[Tuple[str, int], Tuple[np.ndarray, np.ndarray]] = {}
+        # per-page mutation generation, bumped under the lock on every
+        # dirty-mark and every lookaside retirement: a page fault records
+        # the generation before dropping the lock for the file read, and
+        # discards the bytes (re-faulting) if it changed on reacquire —
+        # the file may have been rewritten mid-read by a racing
+        # scatter -> evict -> write-behind, and installing the pre-scatter
+        # bytes as a clean page would silently lose that update
+        self._page_gen: Dict[Tuple[str, int], int] = {}
+        # test/audit seam: called (with the page key) in the fault window,
+        # lock released, between the file read and the reacquire
+        self._fault_hook = None
         self._bg_error: Optional[BaseException] = None
 
         self._stats = {
@@ -171,7 +182,12 @@ class DiskStore:
             raise RuntimeError("DiskStore background IO failed") from err
 
     def close(self):
-        """Flush everything and stop the background threads."""
+        """Flush everything and stop the background threads.
+
+        Raises if a worker is still alive after the join timeout — a
+        wedged IO thread must be loud (it may be mid page write, leaving
+        a ``.tmp`` behind), never silently leaked.
+        """
         try:
             self.flush()
         finally:
@@ -180,6 +196,13 @@ class DiskStore:
             self._read_q.put(None)
             self._writer.join(timeout=30)
             self._reader.join(timeout=30)
+        wedged = [th.name for th in (self._writer, self._reader)
+                  if th.is_alive()]
+        if wedged:
+            raise RuntimeError(
+                f"DiskStore.close: worker thread(s) {wedged} still alive "
+                f"after 30s join — IO is wedged and the spill dir may "
+                f"hold an in-flight .tmp page")
 
     # ------------------------------------------------------- table creation
     def create_table(self, name: str, rows: int, dim: int, dtype,
@@ -214,12 +237,20 @@ class DiskStore:
                 self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
 
     def has_table(self, name: str) -> bool:
-        return name in self._tables
+        with self._lock:
+            return name in self._tables
 
     def table_meta(self, name: str) -> dict:
-        t = self._tables[name]
+        t = self._get_table(name)
         return {"rows": t.rows, "dim": t.dim, "dtype": str(t.dtype),
                 "page_rows": t.page_rows}
+
+    def _get_table(self, name: str) -> _TableFile:
+        # _tables is registered on the main thread but read by the
+        # read-ahead worker; every lookup goes through the lock (the
+        # _TableFile itself is immutable after construction)
+        with self._lock:
+            return self._tables[name]
 
     # ----------------------------------------------------------- page cache
     def _page_apply(self, t: _TableFile, p: int, serve: bool = False,
@@ -231,19 +262,35 @@ class DiskStore:
         releases the lock, reads the file, reacquires, and re-checks — an
         in-flight write-behind copy observed on reacquire wins over the
         file bytes (it is strictly newer, and the file may be
-        mid-replace).  ``dirty=True`` marks the page dirty in the *same*
-        lock hold as the mutation, so an eviction can never classify a
-        just-mutated page as clean.  ``serve`` selects the meter bucket
-        (training by default; the read-only lookup path passes
-        ``serve=True`` so inference page traffic never pollutes
-        training-interval stats).
+        mid-replace), and file bytes are only installed if the page's
+        mutation generation is unchanged from before the read.  The
+        generation guard closes the lost-update window the lookaside
+        alone cannot: if, during the unlocked read, another thread
+        faults + scatters the same page, eviction queues it, AND the
+        write-behind completes and retires the lookaside, both the cache
+        and the lookaside are empty on reacquire — yet the bytes this
+        thread read may predate the scatter.  Dirty-marks and lookaside
+        retirements each bump the generation, so that schedule is
+        detected and the fault retries against the (now rewritten) file.
+        ``dirty=True`` marks the page dirty in the *same* lock hold as
+        the mutation, so an eviction can never classify a just-mutated
+        page as clean.  ``serve`` selects the meter bucket (training by
+        default; the read-only lookup path passes ``serve=True`` so
+        inference page traffic never pollutes training-interval stats).
         """
         key = (t.dir, p)
         from_file = None
         first = True
+        gen = None
         while True:
             with self._lock:
                 stats = self._serve_stats if serve else self._stats
+                if (from_file is not None
+                        and self._page_gen.get(key, 0) != gen):
+                    # the page mutated (or its write-behind landed) while
+                    # we read the file: those bytes may be stale — drop
+                    # them and re-fault
+                    from_file = None
                 got = self._cache.get(key)
                 if got is not None:
                     self._cache.move_to_end(key)
@@ -265,14 +312,19 @@ class DiskStore:
                 if got is not None:
                     if dirty:
                         self._dirty.add(key)
+                        self._page_gen[key] = self._page_gen.get(key, 0) + 1
                     if fn is not None:
                         fn(*got)
                     return got
                 first = False
+                gen = self._page_gen.get(key, 0)
             # page fault: read the file with the lock RELEASED — a miss
             # must not stall the other threads behind SSD latency
             with np.load(t.page_path(p)) as z:
                 from_file = (z["rows"], z["accum"])
+            hook = self._fault_hook
+            if hook is not None:
+                hook(key)
 
     def _evict_lru(self, keep=None, stats: Optional[dict] = None):
         """Shrink the cache to capacity; dirty victims go to the writer."""
@@ -317,7 +369,7 @@ class DiskStore:
         page stats never count inference traffic.
         """
         self._check_bg()
-        t = self._tables[name]
+        t = self._get_table(name)
         uids = np.asarray(uids, np.int64)
         out_v = np.empty((len(uids), t.dim), t.dtype)
         out_a = np.empty((len(uids), t.dim), np.float32)
@@ -337,7 +389,7 @@ class DiskStore:
         """Write value + accumulator rows back (write-behind: RAM pages are
         updated and marked dirty; disk catches up on eviction/flush)."""
         self._check_bg()
-        t = self._tables[name]
+        t = self._get_table(name)
         uids = np.asarray(uids, np.int64)
         rows = np.asarray(rows)
         accum = np.asarray(accum)
@@ -358,7 +410,7 @@ class DiskStore:
         the device trains, hiding disk latency under the train stage.
         """
         self._check_bg()
-        t = self._tables[name]
+        t = self._get_table(name)
         pages = np.unique(np.asarray(uids, np.int64) // t.page_rows)
         with self._lock:
             todo = [int(p) for p in pages if (t.dir, int(p)) not in self._cache]
@@ -415,6 +467,10 @@ class DiskStore:
         self._read_q.join()
         self._check_bg()
         with self._lock:
+            # bump every known page generation: any fault mid-read when
+            # the restore starts must discard its pre-restore file bytes
+            for key in set(self._cache) | set(self._in_flight):
+                self._page_gen[key] = self._page_gen.get(key, 0) + 1
             self._cache.clear()
             self._in_flight.clear()
             tables = list(self._tables.items())
@@ -456,9 +512,12 @@ class DiskStore:
             with self._lock:
                 self._stats["disk_bytes_written"] += vals.nbytes + acc.nbytes
                 # only retire the lookaside if it still holds OUR entry (a
-                # newer flush may have queued a fresher write)
+                # newer flush may have queued a fresher write); the bump
+                # invalidates any page fault whose file read raced this
+                # write (see _page_apply's generation guard)
                 if self._in_flight.get(key) is entry:
                     del self._in_flight[key]
+                    self._page_gen[key] = self._page_gen.get(key, 0) + 1
         except BaseException as e:  # surfaced via _check_bg
             with self._lock:
                 self._bg_error = e

@@ -10,6 +10,7 @@ from repro.analysis.sched_audit import (
     _Run,
     _runs_identical,
     cell_evict_vs_readahead,
+    cell_fault_vs_writeback,
     default_schedules,
     run_sched_audit,
 )
@@ -79,6 +80,18 @@ def test_pipeline_cell_clean():
     assert findings == []
     assert [r["check"] for r in report] == ["pipeline", "pipeline"]
     assert all(r["ok"] for r in report)
+
+
+def test_fault_cell_covers_both_retirement_orders():
+    """The fault-window cell: whether the racing write-behind retires the
+    lookaside inside the fault window (eager) or stays parked (lazy), the
+    gather must observe the scattered rows and the page files converge."""
+    results = cell_fault_vs_writeback(
+        [Schedule("eager", [1]), Schedule("lazy", [0])])
+    failed = [(r.check, r.detail) for r in results if not r.ok]
+    assert failed == []
+    checks = {r.check for r in results}
+    assert checks == {"trajectory", "pages", "store-state"}
 
 
 def test_evict_cell_bit_identical_across_two_schedules():
